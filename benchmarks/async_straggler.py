@@ -1,0 +1,64 @@
+"""Async WASGD+ (Alg. 4) vs synchronous (Alg. 1) under stragglers — the
+paper's Sec. 3.5 decision rule, quantified: with high step-time variance the
+async variant reaches the same loss in less simulated wall-clock; with
+uniform step times the synchronous variant wins (no dropped work)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import dataset, emit, model
+from repro.core.async_sim import StepTimeModel, run_parallel_sgd
+
+
+def _setup(seed=0):
+    X, y = dataset(seed)
+    params, axes, loss_fn, apply_fn = model(seed)
+
+    def grad_fn(params_stacked, batch):
+        def one(p, b):
+            return loss_fn(p, b)[0]
+        losses = jax.vmap(one)(params_stacked, batch)
+        grads = jax.grad(lambda ps: jax.vmap(one)(ps, batch).sum())(
+            params_stacked)
+        return losses, grads
+
+    def batches(w, per_round):
+        rng = np.random.default_rng(seed + 1)
+        while True:
+            idx = rng.integers(0, len(X), size=(w, per_round))
+            yield {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return params, axes, loss_fn, jax.jit(grad_fn), batches
+
+
+def run(fast: bool = False):
+    rounds = 10 if fast else 20
+    p, b, tau = 4, 2, 8
+    params, axes, loss_fn, grad_fn, batches = _setup()
+
+    for regime, tm_kw in [
+        ("uniform", dict(sigma=0.05, straggle_p=0.0)),
+        ("stragglers", dict(sigma=0.2, straggle_p=0.05, straggle_mult=20.0)),
+    ]:
+        res = {}
+        for mode, sync in [("sync", True), ("async", False)]:
+            t0 = time.time()
+            tm = StepTimeModel(p + b, seed=3, **tm_kw)
+            out = run_parallel_sgd(
+                loss_fn, grad_fn, params, axes,
+                batches(p + b, tau * 8), n_workers=p, backups=b, tau=tau,
+                rounds=rounds, lr=0.05, time_model=tm, synchronous=sync)
+            res[mode] = out
+            emit(f"alg4_{regime}_{mode}",
+                 (time.time() - t0) / rounds * 1e6,
+                 f"sim_wall={out.wall:.1f};final_loss={out.losses[-1]:.4f};"
+                 f"dropped={out.dropped_rounds}")
+        speedup = res["sync"].wall / res["async"].wall
+        emit(f"alg4_{regime}_async_speedup", 0.0, f"x{speedup:.2f}")
+    emit("alg4_claim_async_wins_under_stragglers", 0.0,
+         "holds=see speedup rows (sync~1x uniform, async>1x stragglers)")

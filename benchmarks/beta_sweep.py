@@ -1,0 +1,39 @@
+"""Paper Fig. 5 — acceptance parameter beta sweep vs the beta=1 baseline
+(Eq. 47 difference metric). The paper finds the optimum strictly inside
+(0, 1): full acceptance is not always optimal, beta=0 is worst."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, train_run
+from benchmarks.temperature import eq47_metric
+
+
+def run(fast: bool = False):
+    rounds = 10 if fast else 20
+    reps = 2 if fast else 3
+    betas = [0.0, 0.3, 0.5, 0.7, 0.8, 0.9, 1.0]
+
+    base_curves = [train_run("wasgd", beta=1.0, rounds=rounds,
+                             order_seed=300 + r)["losses"]
+                   for r in range(reps)]
+
+    results = {}
+    for beta in betas:
+        t0 = time.time()
+        diffs = []
+        for r in range(reps):
+            res = train_run("wasgd", beta=beta, rounds=rounds,
+                            order_seed=400 + r)
+            diffs.append(eq47_metric(base_curves, res["losses"]))
+        results[beta] = float(np.mean(diffs))
+        emit(f"fig5_beta{beta}", (time.time() - t0) / reps / rounds * 1e6,
+             f"eq47_vs_beta1={results[beta]:+.4f};err={np.std(diffs):.4f}")
+
+    worst = min(results, key=results.get)
+    emit("fig5_claim_beta0_is_worst", 0.0, f"holds={worst == 0.0}")
+    best = max(results, key=results.get)
+    emit("fig5_best_beta", 0.0, f"beta={best}")
+    return results

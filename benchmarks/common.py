@@ -1,0 +1,141 @@
+"""Shared benchmark harness: the paper's experimental setup at CPU scale.
+
+Synthetic classification (standing in for MNIST/Fashion-MNIST — no network
+access in this container) + the paper's MLP/CNN models, trained with any of
+the seven methods of Sec. 5.2.2. Every benchmark module emits CSV rows via
+``emit`` so ``python -m benchmarks.run`` produces one machine-readable
+artifact per paper figure.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, WASGDConfig
+from repro.data import OrderedDataset, make_classification, make_images
+from repro.models import cnn
+from repro.models.param import build
+from repro.train import Trainer
+
+N_TRAIN = 8192
+D_FEAT = 64
+N_CLASSES = 10
+
+
+@functools.lru_cache(maxsize=4)
+def dataset(seed: int = 0, images: bool = False):
+    if images:
+        X, y = make_images(seed, N_TRAIN, N_CLASSES)
+    else:
+        X, y = make_classification(seed, N_TRAIN, d=D_FEAT,
+                                   n_classes=N_CLASSES, noise=0.25)
+    return X, y
+
+
+def model(seed: int = 0, images: bool = False):
+    if images:
+        params = cnn.init_cnn6(jax.random.key(seed), N_CLASSES)
+        axes = jax.tree.map(lambda x: tuple(None for _ in x.shape), params)
+        apply_fn = cnn.cnn6_apply
+    else:
+        params, axes = build(functools.partial(
+            cnn.mlp_init, d_in=D_FEAT, d_hidden=128, n_classes=N_CLASSES),
+            jax.random.key(seed))
+        apply_fn = cnn.mlp_apply
+
+    def loss_fn(p, batch):
+        return cnn.classification_loss(apply_fn(p, batch["x"]),
+                                       batch["y"]), {}
+
+    return params, axes, loss_fn, apply_fn
+
+
+def sequential_batches(X, y, p: int, tau: int, b_local: int):
+    """Worker-major batches that PRESERVE the dataset's sample order (for the
+    Fig. 3 order-effect experiment): worker w walks its contiguous shard of
+    the given order cyclically, no reshuffling."""
+    n = len(X)
+    per_round = tau * b_local
+    starts = [w * (n // p) for w in range(p)]
+    r = 0
+    while True:
+        idx = np.empty((p, per_round), np.int64)
+        for w in range(p):
+            base = (starts[w] + r * per_round) % n
+            idx[w] = (base + np.arange(per_round)) % n
+        flat = idx.reshape(-1)
+        yield {"x": X[flat], "y": y[flat]}
+        r += 1
+
+
+def train_custom(rule: str, batches, rounds: int, *, p: int = 4, tau: int = 8,
+                 beta: float = 0.9, a_tilde: float = 1.0,
+                 strategy: str = "boltzmann", lr: float = 0.05, seed: int = 0,
+                 order_state=None, segment_fn=None, images: bool = False,
+                 eval_data=None,
+                 easgd_alpha: Optional[float] = None) -> Dict:
+    params, axes, loss_fn, apply_fn = model(seed, images)
+    tcfg = TrainConfig(
+        learning_rate=lr, optimizer="sgd",
+        wasgd=WASGDConfig(tau=tau, beta=beta, a_tilde=a_tilde,
+                          strategy=strategy))
+    tr = Trainer(loss_fn, params, axes, tcfg, p, rule=rule,
+                 easgd_alpha=easgd_alpha)
+    t0 = time.time()
+    tr.run(batches, rounds, order_state=order_state, segment_fn=segment_fn)
+    wall = time.time() - t0
+
+    from repro.core import take_worker
+    final_params = take_worker(tr.state.params, tr.axes, 0)
+    Xe, ye = eval_data if eval_data is not None else dataset(seed, images)
+    logits = apply_fn(final_params, jnp.asarray(Xe[:2048]))
+    acc = float((jnp.argmax(logits, -1) == jnp.asarray(ye[:2048])).mean())
+    full_loss = float(cnn.classification_loss(logits, jnp.asarray(ye[:2048])))
+    return {
+        "losses": tr.losses(),
+        "final_loss": float(np.mean(tr.losses()[-3:])),
+        "train_loss_full": full_loss,
+        "acc": acc,
+        "wall": wall,
+        "history": tr.history,
+    }
+
+
+def train_run(rule: str, *, p: int = 4, tau: int = 8, b_local: int = 8,
+              rounds: int = 20, beta: float = 0.9, a_tilde: float = 1.0,
+              strategy: str = "boltzmann", lr: float = 0.05, seed: int = 0,
+              order_search: bool = True, order_seed: int = 7,
+              images: bool = False, dataset_override=None,
+              easgd_alpha: Optional[float] = None) -> Dict:
+    """One training run over the order-managed pipeline."""
+    if dataset_override is not None:
+        X, y = dataset_override
+    else:
+        X, y = dataset(seed, images)
+    ds = OrderedDataset({"x": X, "y": y}, p, tau, b_local, n_segments=2,
+                        seed=order_seed)
+    return train_custom(
+        rule, ds.batches(), rounds, p=p, tau=tau, beta=beta,
+        a_tilde=a_tilde, strategy=strategy, lr=lr, seed=seed,
+        order_state=ds.order if order_search else None,
+        segment_fn=ds.segment_of_round if order_search else None,
+        images=images, eval_data=(X, y), easgd_alpha=easgd_alpha)
+
+
+_ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The ``name,us_per_call,derived`` CSV contract of benchmarks.run."""
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def all_rows() -> List[str]:
+    return list(_ROWS)

@@ -1,0 +1,98 @@
+"""Kernel microbenchmarks: wagg / decode_attn / rmsnorm vs their pure-jnp
+references (interpret mode on CPU — relative numbers are indicative only;
+the BlockSpec tiling is the TPU deployment artifact)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels.decode_attn import decode_attn, decode_attn_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm
+from repro.kernels.wagg import wagg, wagg_ref
+
+
+def _time(fn, *args, n=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def run(fast: bool = False):
+    key = jax.random.key(0)
+
+    # wagg: a 16-worker 4M-element parameter block
+    p, n = 16, 1 << 20 if fast else 1 << 22
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    theta = jax.nn.softmax(jnp.arange(p, dtype=jnp.float32))
+    f_kernel = jax.jit(lambda x, t: wagg(x, t, 0.9))
+    f_ref = jax.jit(lambda x, t: wagg_ref(x, t, 0.9))
+    emit("kernel_wagg_interp", _time(f_kernel, x, theta, n=5),
+         f"shape={p}x{n}")
+    emit("kernel_wagg_ref_xla", _time(f_ref, x, theta, n=5),
+         f"shape={p}x{n}")
+
+    # decode_attn: gemma-style kv=1 over a 8k cache
+    b, kv, g, hd, S = 2, 1, 4, 128, 4096 if fast else 8192
+    q = jax.random.normal(key, (b, kv, g, hd), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (b, S, kv, hd))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (b, S, kv, hd))
+    cl = jnp.int32(S)
+    f_kernel = jax.jit(lambda q, k, v: decode_attn(q, k, v, cl))
+    f_ref = jax.jit(lambda q, k, v: decode_attn_ref(q, k, v, cl))
+    emit("kernel_decode_attn_interp", _time(f_kernel, q, kc, vc, n=5),
+         f"cache={S}")
+    emit("kernel_decode_attn_ref_xla", _time(f_ref, q, kc, vc, n=5),
+         f"cache={S}")
+
+    # rmsnorm over a (4096, 2048) activation
+    rows = 1024 if fast else 4096
+    x = jax.random.normal(key, (rows, 2048), jnp.bfloat16)
+    s = jnp.ones((2048,), jnp.float32)
+    f_kernel = jax.jit(lambda x, s: rmsnorm(x, s))
+    f_ref = jax.jit(lambda x, s: rmsnorm_ref(x, s))
+    emit("kernel_rmsnorm_interp", _time(f_kernel, x, s, n=5), f"rows={rows}")
+    emit("kernel_rmsnorm_ref_xla", _time(f_ref, x, s, n=5), f"rows={rows}")
+
+    run_extra(fast=fast)
+
+
+def run_extra(fast: bool = False):
+    """fused_ce + ssd_chunk microbenchmarks (appended kernels)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.fused_ce import fused_ce, fused_ce_ref
+    from repro.kernels.ssd_chunk import ssd_chunk, ssd_chunk_ref
+
+    key = jax.random.key(1)
+    t, v = (1024, 32768) if fast else (2048, 65536)
+    logits = jax.random.normal(key, (t, v), jnp.bfloat16)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (t,), 0, v)
+    f_k = jax.jit(lambda l, y: fused_ce(l, y))
+    f_r = jax.jit(lambda l, y: fused_ce_ref(l, y))
+    emit("kernel_fused_ce_interp", _time(f_k, logits, labels, n=3),
+         f"shape={t}x{v}")
+    emit("kernel_fused_ce_ref_xla", _time(f_r, logits, labels, n=3),
+         f"shape={t}x{v}")
+
+    b, nc, L, nh, hd, ds = (1, 8, 64, 8, 64, 128) if fast else \
+        (2, 16, 64, 16, 64, 128)
+    xs = jax.random.normal(key, (b, nc, L, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 2),
+                                           (b, nc, L, nh)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 3), (nh,)))
+    B = jax.random.normal(jax.random.fold_in(key, 4), (b, nc, L, ds))
+    C = jax.random.normal(jax.random.fold_in(key, 5), (b, nc, L, ds))
+    f_k = jax.jit(lambda *t: ssd_chunk(*t)[0])
+    f_r = jax.jit(lambda *t: ssd_chunk_ref(*t)[0])
+    emit("kernel_ssd_chunk_interp", _time(f_k, xs, dt, a, B, C, n=3),
+         f"b{b}xnc{nc}xL{L}xnh{nh}")
+    emit("kernel_ssd_chunk_ref_xla", _time(f_r, xs, dt, a, B, C, n=3),
+         f"b{b}xnc{nc}xL{L}xnh{nh}")

@@ -1,0 +1,45 @@
+"""§Roofline table generator: reads the dry-run JSONL artifacts and prints
+the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck — the machine-readable version of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS_GLOB = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun_*.jsonl")
+
+
+def load_records():
+    recs = {}
+    for path in sorted(glob.glob(RESULTS_GLOB)):
+        for line in open(path):
+            r = json.loads(line)
+            if r.get("variant", "baseline") != "baseline":
+                continue                 # §Perf variants have their own table
+            recs[(r["arch"], r["shape"], r["mesh"])] = r   # last write wins
+    return recs
+
+
+def run(fast: bool = False):
+    recs = load_records()
+    if not recs:
+        emit("roofline_table", 0.0, "no dryrun artifacts yet — run "
+             "python -m repro.launch.dryrun --all --out results/dryrun.jsonl")
+        return
+    ok = sum(r["ok"] for r in recs.values())
+    emit("roofline_combinations", 0.0, f"ok={ok}/{len(recs)}")
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if not r["ok"]:
+            emit(f"roofline_{arch}_{shape}_{mesh}", 0.0,
+                 f"FAILED:{r['error'][:60]}")
+            continue
+        rf = r["roofline"]
+        emit(f"roofline_{arch}_{shape}_{mesh}",
+             rf["compute_s"] * 1e6,
+             f"mem_s={rf['memory_s']:.4f};coll_s={rf['collective_s']:.5f};"
+             f"dom={rf['dominant'].replace('_s','')};"
+             f"useful={r['useful_flops_frac']:.2f}")

@@ -1,0 +1,64 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark entry point:
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig8,...]
+
+Modules (one per paper figure + the roofline deliverable):
+  fig3  order_effect     — sample-order delta sweep
+  fig4  temperature      — T = 1/a_tilde weighting-strategy sweep
+  fig5  beta_sweep       — acceptance beta sweep
+  fig6  estimation_m     — weight-estimation error vs m (Eq. 27)
+  fig7  tau_sweep        — communication-period sweep, EASGD vs WASGD(+)
+  fig8  convergence      — WASGD+ vs all six baselines (Figs. 8-11)
+  kern  kernel_bench     — Pallas kernel microbenchmarks
+  roof  roofline_table   — dry-run roofline table (§Roofline)
+  bynd  beyond_paper     — beyond-paper extensions (anneal, order ablation,
+                           bf16 comm payload)
+  alg4  async_straggler  — Alg. 4 async-vs-sync straggler simulation
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig3,fig4,fig5,fig6,fig7,"
+                         "fig8,kern,roof")
+    args = ap.parse_args()
+
+    from benchmarks import (async_straggler, beta_sweep, beyond_paper,
+                            convergence, estimation_m, kernel_bench,
+                            order_effect, roofline_table, tau_sweep,
+                            temperature)
+    modules = {
+        "fig3": order_effect, "fig4": temperature, "fig5": beta_sweep,
+        "fig6": estimation_m, "fig7": tau_sweep, "fig8": convergence,
+        "kern": kernel_bench, "roof": roofline_table, "bynd": beyond_paper,
+        "alg4": async_straggler,
+    }
+    selected = (args.only.split(",") if args.only else list(modules))
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for key in selected:
+        try:
+            modules[key].run(fast=args.fast)
+        except Exception as e:                     # noqa: BLE001
+            failures.append((key, e))
+            print(f"{key}_FAILED,0.0,{type(e).__name__}:{e}", flush=True)
+    print(f"total_wall,{(time.time() - t0) * 1e6:.0f},"
+          f"failures={len(failures)}")
+    if failures:
+        for key, e in failures:
+            print(f"  {key}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

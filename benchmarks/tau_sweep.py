@@ -1,0 +1,44 @@
+"""Paper Fig. 7 — performance after a fixed sample budget under different
+communication periods tau, for EASGD / WASGD / WASGD+. The paper's claim:
+WASGD+ at tau=1000 matches EASGD at tau=50 (i.e. it tolerates 20x less
+communication)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, train_run
+
+SAMPLES_PER_WORKER = 1280      # fixed two-epoch-style budget
+
+
+def run(fast: bool = False):
+    taus = [8, 16, 64] if fast else [8, 16, 64, 160]
+    b_local = 8
+    results = {}
+    for p in ([4] if fast else [4, 8]):
+        for tau in taus:
+            rounds = max(2, SAMPLES_PER_WORKER // (tau * b_local))
+            for method, kw in [
+                ("easgd", dict(rule="easgd", easgd_alpha=0.9 / 16)),
+                ("wasgd", dict(rule="wasgd", strategy="inverse", beta=1.0,
+                               order_search=False)),
+                ("wasgd+", dict(rule="wasgd", strategy="boltzmann",
+                                beta=0.9, a_tilde=1.0, order_search=True)),
+            ]:
+                t0 = time.time()
+                res = train_run(p=p, tau=tau, b_local=b_local, rounds=rounds,
+                                **kw)
+                results[(method, tau, p)] = res["final_loss"]
+                emit(f"fig7_{method}_tau{tau}_p{p}",
+                     (time.time() - t0) / rounds * 1e6,
+                     f"final_loss={res['final_loss']:.4f};acc={res['acc']:.3f}")
+
+    for p in ([4] if fast else [4, 8]):
+        for tau in taus:
+            better = results[("wasgd+", tau, p)] <= \
+                results[("easgd", tau, p)] + 1e-9
+            emit(f"fig7_claim_wasgdplus_beats_easgd_tau{tau}_p{p}", 0.0,
+                 f"holds={better}")
+    return results

@@ -1,0 +1,45 @@
+"""Paper Fig. 4 — weighting-strategy temperature sweep T = 1/a_tilde,
+scored against the equally weighted baseline with the paper's Eq. 47
+difference metric (positive = better than baseline)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, train_run
+
+
+def eq47_metric(base_curves, cur_curve):
+    """mean over records of (mean baseline value - current value)."""
+    base = np.mean([c for c in base_curves], axis=0)
+    n = min(len(base), len(cur_curve))
+    return float(np.mean(base[:n] - cur_curve[:n]))
+
+
+def run(fast: bool = False):
+    rounds = 10 if fast else 20
+    reps = 2 if fast else 3
+    Ts = [0.01, 0.1, 1.0, 10.0, 100.0]
+
+    base_curves = [train_run("wasgd", strategy="equal", rounds=rounds,
+                             seed=0, order_seed=100 + r)["losses"]
+                   for r in range(reps)]
+
+    results = {}
+    for T in Ts:
+        diffs = []
+        t0 = time.time()
+        for r in range(reps):
+            res = train_run("wasgd", strategy="boltzmann", a_tilde=1.0 / T,
+                            rounds=rounds, seed=0, order_seed=200 + r)
+            diffs.append(eq47_metric(base_curves, res["losses"]))
+        m, s = float(np.mean(diffs)), float(np.std(diffs))
+        results[T] = m
+        emit(f"fig4_T{T}", (time.time() - t0) / reps / rounds * 1e6,
+             f"eq47_vs_equal={m:+.4f};err={s:.4f}")
+
+    # Property 2: T->0 (a->inf) must underperform the equal baseline
+    emit("fig4_claim_T0_worse_than_equal", 0.0,
+         f"holds={results[0.01] <= max(results.values()) + 1e-9 and results[0.01] < 0.005}")
+    return results

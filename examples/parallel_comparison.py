@@ -1,0 +1,61 @@
+"""Benchmark-style comparison of all seven parallel SGD methods from the
+paper (Sec. 5.2.2) on synthetic classification — a CPU-scale rendition of
+Figure 8.
+
+    PYTHONPATH=src python examples/parallel_comparison.py
+"""
+import functools
+
+import jax
+import numpy as np
+
+from repro.configs import TrainConfig, WASGDConfig
+from repro.data import OrderedDataset, make_classification
+from repro.models import cnn
+from repro.models.param import build
+from repro.train import Trainer
+
+METHODS = [
+    ("SGD (sequential)", "seq", {}),
+    ("SPSGD", "spsgd", {}),
+    ("EASGD", "easgd", {}),
+    ("OMWU", "omwu", {}),
+    ("MMWU", "mmwu", {}),
+    ("WASGD (1/h)", "wasgd", dict(strategy="inverse", beta=1.0)),
+    ("WASGD+ (Boltzmann)", "wasgd", dict(strategy="boltzmann", beta=0.9,
+                                         a_tilde=1.0)),
+]
+
+
+def main():
+    X, y = make_classification(0, 8192, d=64, n_classes=10, noise=0.25)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=64, d_hidden=128, n_classes=10), jax.random.key(0))
+
+    def loss_fn(p, batch):
+        return cnn.classification_loss(cnn.mlp_apply(p, batch["x"]),
+                                       batch["y"]), {}
+
+    p_workers, tau, rounds = 4, 8, 25
+    print(f"{'method':24s} {'first':>8s} {'final':>8s}")
+    results = {}
+    for label, rule, kw in METHODS:
+        tcfg = TrainConfig(learning_rate=0.05,
+                           wasgd=WASGDConfig(tau=tau, **kw))
+        ds = OrderedDataset({"x": X, "y": y}, p_workers, tau, 8,
+                            n_segments=2, seed=7)
+        tr = Trainer(loss_fn, params, axes, tcfg, p_workers, rule=rule)
+        use_order = label.endswith("+ (Boltzmann)")
+        tr.run(ds.batches(), rounds,
+               order_state=ds.order if use_order else None,
+               segment_fn=ds.segment_of_round if use_order else None)
+        losses = tr.losses()
+        results[label] = losses[-1]
+        print(f"{label:24s} {losses[0]:8.4f} {losses[-1]:8.4f}")
+
+    best = min(results, key=results.get)
+    print(f"\nbest: {best}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Serving demo: batched prefill + token-by-token decode with KV caches.
+
+Covers three cache regimes: full-attention KV (yi), sliding-window ring
+buffers (gemma3), and O(1) SSM recurrent state (mamba2).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import lm_batch
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+
+def main():
+    for arch in ["yi-6b", "gemma3-1b", "mamba2-370m"]:
+        cfg = dataclasses.replace(get_smoke_config(arch),
+                                  compute_dtype="float32")
+        params, _ = init_params(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params, max_len=128,
+                             cache_dtype=jax.numpy.float32)
+
+        batch = 4
+        prompt = np.asarray(lm_batch(0, batch, 16, cfg.vocab_size)["tokens"])
+        out_greedy = engine.generate(prompt, n_new=16, temperature=0.0)
+        out_sampled = engine.generate(prompt, n_new=16, temperature=0.8,
+                                      seed=1)
+        kind = ("SSM state" if cfg.ssm is not None else
+                f"window={cfg.attn_window}" if cfg.attn_window else "full KV")
+        print(f"{arch:14s} [{kind:12s}] batch={batch} "
+              f"greedy={out_greedy[0, :6].tolist()} "
+              f"sampled={out_sampled[0, :6].tolist()}")
+        assert out_greedy.shape == (batch, 16)
+    print("serving demo OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Checkpointing: flat-key npz payload + JSON manifest (offline container —
+no orbax). Saves/restores arbitrary pytrees of arrays (params, optimizer
+state, worker-stacked or not) with dtype/shape verification on restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+SEP = "//"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{SEP}{k}" if prefix else str(k)))
+    elif isinstance(tree, (tuple, list)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{SEP}#{i}" if prefix else f"#{i}"))
+    elif hasattr(tree, "_fields"):          # NamedTuple
+        for k in tree._fields:
+            v = getattr(tree, k)
+            out.update(_flatten(v, f"{prefix}{SEP}@{k}" if prefix else f"@{k}"))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree: Any, meta: Dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    manifest = {
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                 for k, v in flat.items()},
+        "meta": meta or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like = _flatten(like)
+    if set(flat_like) != set(data.files):
+        missing = set(flat_like) ^ set(data.files)
+        raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:8]}")
+    leaves, treedef = jax.tree.flatten(like)
+    flat_keys = list(_flatten(like).keys())
+    assert len(flat_keys) == len(leaves)
+    restored = []
+    for k, leaf in zip(flat_keys, leaves):
+        arr = data[k]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {k}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        restored.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
+    return jax.tree.unflatten(treedef, restored), manifest["meta"]

@@ -1,0 +1,25 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    SHAPES_BY_NAME,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    TrainConfig,
+    WASGDConfig,
+)
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+
+__all__ = [
+    "INPUT_SHAPES",
+    "SHAPES_BY_NAME",
+    "InputShape",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "TrainConfig",
+    "WASGDConfig",
+    "ARCH_IDS",
+    "get_config",
+    "get_smoke_config",
+]

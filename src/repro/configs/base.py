@@ -1,0 +1,262 @@
+"""Configuration dataclasses and the architecture registry.
+
+Every assigned architecture gets one module in ``repro.configs`` exporting a
+``CONFIG`` (full-size, dry-run only) and a ``smoke_config()`` (reduced, runs
+on CPU). ``repro.configs.registry`` maps ``--arch`` ids to those modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration."""
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    dense_residual: bool = False      # arctic: dense FFN in parallel with MoE
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) mixer configuration."""
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 64
+    conv_width: int = 4
+    dt_min: float = 1e-3
+    dt_max: float = 1e-1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # one of FAMILIES
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                         # dense FFN hidden (0 for pure-SSM / pure-MoE)
+    vocab_size: int
+    head_dim: int = 128
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+
+    # Attention pattern ------------------------------------------------------
+    attn_window: Optional[int] = None   # sliding-window size; None = full
+    global_attn_every: int = 0          # >0: layer idx % every == every-1 is global
+    cross_attn_every: int = 0           # >0 (vlm): cross-attn at idx % every == every-1
+    n_media_tokens: int = 0             # vlm: patch tokens per example (stub frontend)
+
+    # Audio ------------------------------------------------------------------
+    n_codebooks: int = 0                # musicgen: parallel EnCodec streams
+
+    # MoE --------------------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1                  # MoE FFN at layer idx % moe_every == moe_every-1
+    expert_sharding: str = "ep_data"    # "ep_data": single expert-parallel copy
+                                        #   sharded over the worker axis (all-to-all
+                                        #   dispatch; required for arctic-class MoE)
+                                        # "worker": full per-worker expert copies —
+                                        #   experts join the weighted aggregation,
+                                        #   zero dispatch traffic (§Perf, olmoe)
+
+    # SSM / hybrid -----------------------------------------------------------
+    ssm: Optional[SSMConfig] = None
+    attn_every: int = 0                 # hybrid: attention at idx % attn_every == attn_every-1
+                                        # (0 with ssm set => pure SSM, no attention)
+
+    # Numerics ---------------------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    sharded_ce: bool = False            # §Perf: vocab-sharded cross-entropy
+                                        # (one-hot contraction + logsumexp, no
+                                        # gather over the sharded vocab dim)
+    tie_embeddings: bool = False
+    remat: bool = True                  # activation checkpointing per block
+    logits_softcap: float = 0.0
+    unroll_attn_scan: bool = False      # dry-run: unroll flash KV scan so HLO
+                                        # cost analysis sees every block
+    windowed_qblock: bool = False       # §Perf: q-blocked sliding-window path
+                                        # that skips out-of-window kv blocks
+
+    # Citation (provenance of the numbers above) -----------------------------
+    source: str = ""
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so TP sharding over the model axis divides evenly."""
+        return int(math.ceil(self.vocab_size / 256) * 256)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def layer_is_attn(self, idx: int) -> bool:
+        """Hybrid/SSM schedule: which mixer does layer ``idx`` use."""
+        if self.ssm is None:
+            return True
+        if self.attn_every <= 0:
+            return False                    # pure SSM
+        return idx % self.attn_every == self.attn_every - 1
+
+    def layer_is_ssm(self, idx: int) -> bool:
+        return self.ssm is not None and not self.layer_is_attn(idx)
+
+    def layer_is_moe(self, idx: int) -> bool:
+        if self.moe is None:
+            return False
+        return idx % self.moe_every == self.moe_every - 1
+
+    def layer_is_global_attn(self, idx: int) -> bool:
+        """gemma3-style local:global interleave; True = full-context attention."""
+        if self.attn_window is None:
+            return True
+        if self.global_attn_every <= 0:
+            return False
+        return idx % self.global_attn_every == self.global_attn_every - 1
+
+    def layer_is_cross_attn(self, idx: int) -> bool:
+        if self.cross_attn_every <= 0:
+            return False
+        return idx % self.cross_attn_every == self.cross_attn_every - 1
+
+    def window_for_layer(self, idx: int) -> Optional[int]:
+        if self.attn_window is not None and not self.layer_is_global_attn(idx):
+            return self.attn_window
+        return None
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d = self.d_model
+        n = 0
+        n += self.padded_vocab * d                       # embed
+        if not self.tie_embeddings:
+            heads = max(1, self.n_codebooks)
+            n += heads * self.padded_vocab * d           # lm head(s)
+        for i in range(self.n_layers):
+            if self.layer_is_attn(i):
+                n += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+                n += 2 * d                               # norms
+                if self.layer_is_cross_attn(i):
+                    n += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+                    n += d
+            if self.layer_is_ssm(i):
+                s = self.ssm
+                di = s.d_inner(d)
+                nh = s.n_heads(d)
+                n += d * (2 * di + 2 * s.d_state + nh)        # in_proj: z,x,B,C,dt
+                n += (di + 2 * s.d_state) * (s.conv_width + 1)  # depthwise conv + bias
+                n += 3 * nh + di                              # A_log, D, dt_bias, norm
+                n += di * d + d                               # out proj + final norm
+            if self.layer_is_moe(i):
+                m = self.moe
+                n += d * m.n_experts                          # router
+                n += m.n_experts * 3 * d * m.d_ff_expert      # gated experts
+                if m.dense_residual and self.d_ff > 0:
+                    n += 3 * d * self.d_ff
+                n += d
+            elif self.d_ff > 0 and not self.layer_is_ssm(i):
+                n += 3 * d * self.d_ff + d                    # gated dense FFN
+        n += d                                                # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        inactive_per_moe_layer = (m.n_experts - m.top_k) * 3 * self.d_model * m.d_ff_expert
+        n_moe_layers = sum(self.layer_is_moe(i) for i in range(self.n_layers))
+        return self.param_count() - n_moe_layers * inactive_per_moe_layer
+
+
+# ---------------------------------------------------------------------------
+# WASGD / training / input-shape configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WASGDConfig:
+    """The paper's knobs (Alg. 1)."""
+    beta: float = 0.9                 # acceptance of the aggregate (Eq. 10)
+    a_tilde: float = 1.0              # Boltzmann temperature^{-1} (Eq. 13); T = 1/a
+    tau: int = 4                      # local steps per communication round
+    strategy: str = "boltzmann"       # boltzmann | inverse (WASGD v1) | equal | best
+    m_estimate: int = 100             # loss-energy sample budget (Eq. 21/26)
+    record_chunks: int = 4            # c in Alg. 2 RecordIndex
+    order_search: bool = True         # WASGD+ sample-order search (Judge/OrderGen)
+    order_keep_score: float = -1.0    # keep order if z-score <= this (Alg. 2)
+    a_schedule: str = "constant"      # beyond-paper: "anneal" raises a_tilde
+    anneal_rate: float = 0.05         #   per round: T cools, explore->exploit
+    quantize_comm: bool = False       # beyond-paper: int8 aggregation payload
+    comm_dtype: str = "float32"       # beyond-paper: bf16 halves ring bytes
+    hierarchical: bool = False        # beyond-paper: pod-local then cross-pod 2-hop
+    n_pods: int = 1                   # pod count for the hierarchical 2-hop
+    sharded_aggregate: bool = False   # beyond-paper: reduce-scatter + local axpy + all-gather
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 1e-3
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    optimizer: str = "sgd"            # sgd | momentum | adamw
+    global_batch: int = 256
+    seq_len: int = 4096
+    wasgd: WASGDConfig = WASGDConfig()
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One assigned (seq_len, global_batch) workload."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+    window_override: Optional[int] = None   # sub-quadratic override for dense archs
+
+
+INPUT_SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", 4096, 256, "train"),
+    InputShape("prefill_32k", 32768, 32, "prefill"),
+    InputShape("decode_32k", 32768, 128, "decode"),
+    InputShape("long_500k", 524288, 1, "decode", window_override=8192),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in INPUT_SHAPES}
+
+
+def dtype_of(name: str):
+    return jnp.dtype(name)

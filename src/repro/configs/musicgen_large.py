@@ -1,0 +1,41 @@
+"""musicgen-large — decoder-only transformer over EnCodec tokens
+[arXiv:2306.05284].
+
+The EnCodec conv codec (audio frontend) is a STUB per the assignment: the
+model consumes the 4 parallel codebook token streams directly
+(``tokens: (batch, seq, n_codebooks) int32``) with summed codebook
+embeddings and 4 parallel output heads (the "delay pattern" interleave is a
+data-layout concern handled in the pipeline).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    n_codebooks=4,
+    source="[arXiv:2306.05284] Simple and Controllable Music Generation",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-smoke",
+        family="audio",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=256,
+        n_codebooks=4,
+        remat=False,
+        source=CONFIG.source,
+    )

@@ -1,0 +1,35 @@
+"""Architecture registry: maps ``--arch`` ids to config modules."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+# arch-id -> module path (all ten assigned architectures)
+_ARCH_MODULES: Dict[str, str] = {
+    "yi-6b": "repro.configs.yi_6b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "jamba-v0.1-52b": "repro.configs.jamba_52b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).smoke_config()

@@ -1,0 +1,32 @@
+from repro.core.aggregate import (
+    aggregate_leaf,
+    map_worker_leaves,
+    replicate_workers,
+    strip_worker_axis,
+    take_worker,
+    weighted_aggregate,
+    worker_in_axes,
+)
+from repro.core.energy import estimation_error, record_indices, record_mask
+from repro.core.order import OrderState, grouped_order, judge_scores
+from repro.core.wasgd import CommResult, communicate
+from repro.core.weights import (
+    best_weights,
+    boltzmann_weights,
+    compute_theta,
+    equal_weights,
+    inverse_weights,
+    normalize_energy,
+    omega,
+    theta_entropy,
+)
+
+__all__ = [
+    "aggregate_leaf", "map_worker_leaves", "replicate_workers",
+    "strip_worker_axis", "take_worker", "weighted_aggregate",
+    "worker_in_axes", "estimation_error", "record_indices", "record_mask",
+    "OrderState", "grouped_order", "judge_scores", "CommResult",
+    "communicate", "best_weights", "boltzmann_weights", "compute_theta",
+    "equal_weights", "inverse_weights", "normalize_energy", "omega",
+    "theta_entropy",
+]

@@ -1,0 +1,104 @@
+"""Asynchronous WASGD+ (paper Alg. 4) as an event-driven simulation.
+
+On a TPU pod SPMD is lockstep, so the async/backup-worker variant has no
+native execution analogue (DESIGN.md §2) — but its *scheduling semantics*
+can be simulated exactly: p + b workers with heterogeneous step-time
+distributions; at each communication point a worker aggregates as soon as
+the FIRST p round-results are available (Alg. 4 line 16), so the b slowest
+workers of the round are excluded from that aggregation and adopt it late.
+
+The simulation advances real parameters (any loss_fn) while tracking
+simulated wall-clock, which reproduces the paper's Sec. 3.5 decision rule:
+high step-time variance + small tau => async wins; low variance => sync.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregate as agg
+from repro.core.weights import compute_theta
+
+
+class StepTimeModel:
+    """Per-worker step-time sampler: lognormal base + straggler spikes."""
+
+    def __init__(self, n_workers: int, mean: float = 1.0, sigma: float = 0.1,
+                 straggle_p: float = 0.0, straggle_mult: float = 10.0,
+                 seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.n = n_workers
+        self.mean, self.sigma = mean, sigma
+        self.straggle_p, self.straggle_mult = straggle_p, straggle_mult
+
+    def round_times(self, tau: int) -> np.ndarray:
+        """Simulated wall-time for each worker to finish tau local steps."""
+        t = self.rng.lognormal(np.log(self.mean), self.sigma,
+                               size=(self.n, tau))
+        spikes = self.rng.random((self.n, tau)) < self.straggle_p
+        t = np.where(spikes, t * self.straggle_mult, t)
+        return t.sum(axis=1)
+
+
+class AsyncResult(NamedTuple):
+    losses: np.ndarray          # per-round mean loss (over active workers)
+    wall: float                 # simulated wall-clock
+    dropped_rounds: int         # total straggler exclusions
+
+
+def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
+                     axes: Dict, batches, *, n_workers: int, backups: int,
+                     tau: int, rounds: int, lr: float,
+                     time_model: StepTimeModel, a_tilde: float = 1.0,
+                     beta: float = 0.9, synchronous: bool = False
+                     ) -> AsyncResult:
+    """Alg. 4 if ``synchronous=False`` (p of p+b fastest aggregate), Alg. 1
+    if True (barrier over all workers; backups just add capacity).
+
+    ``grad_fn(params_stacked, batch) -> (losses (w,), grads_stacked)``.
+    """
+    w = n_workers + backups
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), params0)
+    w_axes = jax.tree.map(lambda ax: ("worker",) + tuple(ax), axes,
+                          is_leaf=agg._axes_is_leaf)
+
+    wall = 0.0
+    dropped = 0
+    losses_hist = []
+    for r in range(rounds):
+        batch = next(batches)                      # (w, tau*b_local, ...)
+        losses, grads = grad_fn(params, batch)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+        t = time_model.round_times(tau)
+        if synchronous:
+            wall += float(t.max())
+            active = np.ones(w, bool)
+        else:
+            order = np.argsort(t)
+            active = np.zeros(w, bool)
+            active[order[:n_workers]] = True       # first p arrivals
+            wall += float(t[order[n_workers - 1]]) # p-th arrival gates
+            dropped += int((~active).sum())
+
+        h = np.where(active, np.asarray(losses), np.inf)
+        theta = np.asarray(compute_theta(jnp.asarray(
+            np.where(active, h, 1e30)), "boltzmann", a_tilde))
+        theta = np.where(active, theta, 0.0)
+        theta = theta / theta.sum()
+        new_params = agg.weighted_aggregate(
+            params, w_axes, jnp.asarray(theta, jnp.float32), beta)
+        # stragglers adopt the aggregate fully when they arrive (late join)
+        params = jax.tree.map(
+            lambda new, old: jnp.where(
+                jnp.asarray(active).reshape((-1,) + (1,) * (old.ndim - 1)),
+                new, jnp.tensordot(jnp.asarray(theta, jnp.float32),
+                                   new.astype(jnp.float32), axes=1)[None]
+                .astype(old.dtype)),
+            new_params, params)
+        losses_hist.append(float(np.mean(np.asarray(losses)[active])))
+    return AsyncResult(np.asarray(losses_hist), wall, dropped)

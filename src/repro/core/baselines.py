@@ -1,0 +1,98 @@
+"""Benchmark baselines from the paper (Sec. 5.2.2), as communication rules
+over a worker-stacked parameter tree. All share the WASGD round structure
+(local steps, then a communication) so comparisons isolate the aggregation
+rule itself:
+
+* ``spsgd``  — SimuParallelSGD [Zinkevich et al. 2010]: equal-weight average.
+* ``easgd``  — Elastic Averaging SGD [Zhang et al. 2015]: center variable
+               x~ with moving rate alpha (Eqs. 3-4).
+* ``omwu``   — Original Multiplicative Weight Update [Dwork & Roth]: weights
+               updated multiplicatively from FULL-dataset loss; workers adopt
+               the highest-weight worker's parameters.
+* ``mmwu``   — Modified MWU: same rule but with the paper's free m-sample
+               loss estimator (the paper's own modification).
+* sequential SGD is the p=1 degenerate case of any rule.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregate as agg
+from repro.core.weights import equal_weights
+
+
+# -- SimuParallelSGD -------------------------------------------------------------
+
+def spsgd_communicate(params: Dict, axes: Dict) -> Dict:
+    p = None
+
+    def first_w(x, ax):
+        nonlocal p
+        if agg.is_worker_leaf(ax) and p is None:
+            p = x.shape[0]
+        return x
+
+    jax.tree.map(first_w, params, axes)
+    theta = equal_weights(p)
+    return agg.weighted_aggregate(params, axes, theta, beta=1.0)
+
+
+# -- EASGD -----------------------------------------------------------------------
+
+class EASGDState(NamedTuple):
+    center: Dict                 # x~ — same structure as params minus worker dim
+
+
+def easgd_init(params: Dict, axes: Dict) -> EASGDState:
+    center = jax.tree.map(
+        lambda x, ax: x[0] if agg.is_worker_leaf(ax) else x, params, axes)
+    return EASGDState(center)
+
+
+def easgd_communicate(params: Dict, axes: Dict, state: EASGDState,
+                      alpha: float) -> Tuple[Dict, EASGDState]:
+    """Eq. 3 elastic pull + Eq. 4 center update (communication part only)."""
+    def upd(x, ax, c):
+        if not agg.is_worker_leaf(ax):
+            return x, c
+        p = x.shape[0]
+        delta = alpha * (x.astype(jnp.float32) - c.astype(jnp.float32)[None])
+        new_x = (x.astype(jnp.float32) - delta).astype(x.dtype)
+        new_c = (c.astype(jnp.float32) + delta.sum(0)).astype(c.dtype)
+        return new_x, new_c
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_a = treedef.flatten_up_to(axes)
+    flat_c = treedef.flatten_up_to(state.center)
+    new_p, new_c = zip(*[upd(x, ax, c)
+                         for x, ax, c in zip(flat_p, flat_a, flat_c)])
+    return (jax.tree.unflatten(treedef, new_p),
+            EASGDState(jax.tree.unflatten(treedef, new_c)))
+
+
+# -- Multiplicative Weight Update ---------------------------------------------------
+
+class MWUState(NamedTuple):
+    log_w: jax.Array             # (p,) log multiplicative weights
+
+
+def mwu_init(p: int) -> MWUState:
+    return MWUState(jnp.zeros((p,), jnp.float32))
+
+
+def mwu_communicate(params: Dict, axes: Dict, state: MWUState, h: jax.Array,
+                    eps: float = 0.5) -> Tuple[Dict, MWUState]:
+    """w_i <- w_i * exp(-eps * h'_i); all workers adopt the argmax worker.
+
+    OMWU computes ``h`` over the full training set (its cost is the point of
+    the paper's comparison); MMWU passes the free m-sample estimate instead —
+    the communication rule is identical.
+    """
+    hp = h.astype(jnp.float32) / jnp.maximum(h.sum(), 1e-30)
+    log_w = state.log_w - eps * hp
+    theta = jax.nn.one_hot(jnp.argmax(log_w), h.shape[0], dtype=jnp.float32)
+    new_params = agg.weighted_aggregate(params, axes, theta, beta=1.0)
+    return new_params, MWUState(log_w)

@@ -1,0 +1,39 @@
+"""Loss-energy estimation (paper Sec. 3.3, Eq. 26 + Alg. 2 ``RecordIndex``).
+
+The weight of a worker is computed from losses *already produced during
+backprop* — no extra forward passes. ``record_mask`` marks which of the tau
+in-round steps contribute: the last ``m/c`` steps of each of the ``c``
+round segments (Alg. 2 Function 1), i.e. recording is spread over the round
+("same time" recording) to avoid a stale single-point estimate while staying
+free.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def record_indices(tau: int, m: int, c: int) -> np.ndarray:
+    """Alg. 2 Function 1: indices ((i+1)*tau/c - j - 1) for j < m/c, i < c."""
+    c = max(1, min(c, tau))
+    per_chunk = max(1, min(m // c if m >= c else 1, tau // c))
+    out = set()
+    for i in range(c):
+        end = (i + 1) * tau // c
+        for j in range(per_chunk):
+            idx = end - j - 1
+            if 0 <= idx < tau:
+                out.add(idx)
+    return np.asarray(sorted(out), dtype=np.int32)
+
+
+def record_mask(tau: int, m: int, c: int) -> jnp.ndarray:
+    mask = np.zeros((tau,), bool)
+    mask[record_indices(tau, m, c)] = True
+    return jnp.asarray(mask)
+
+
+def estimation_error(theta: jax.Array, theta_true: jax.Array) -> jax.Array:
+    """Eq. 27: sum_i |theta_i - theta_true_i|, in [0, 2]."""
+    return jnp.abs(theta - theta_true).sum()

@@ -1,0 +1,118 @@
+"""Explicit shard_map formulation of the WASGD communication step.
+
+The pjit path (core/aggregate.py) lets XLA derive the worker-axis
+all-reduce from `tensordot(theta, x)`. This module expresses the same
+Eq. 10 update with explicit ``jax.lax`` collectives under ``shard_map`` —
+the form you reach for when scheduling matters (e.g. to interleave the
+per-leaf reduces with the next round's first forward, or to stage
+pod-local/cross-pod hops by hand):
+
+    per shard:  m = psum(theta_local * x_local, axis=("pod", "data"))
+                out = (1 - beta) * x_local + beta * m
+
+Both paths are numerically identical; tests/test_dryrun_small.py checks the
+shard_map path on an 8-device placeholder mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.aggregate import _axes_is_leaf, is_worker_leaf
+
+
+def _worker_axes_in(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def aggregate_leaf_shard_map(x: jax.Array, theta: jax.Array,
+                             beta: float, mesh: Mesh) -> jax.Array:
+    """x: (w, ...) sharded over the worker mesh axes; theta: (w,)."""
+    waxes = _worker_axes_in(mesh)
+    ndim = x.ndim
+    spec = P(waxes, *([None] * (ndim - 1)))
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec, P(waxes)), out_specs=spec)
+    def run(x_local, theta_local):
+        # x_local: (w/|waxes|, ...) = (1, ...) when fully sharded
+        contrib = theta_local.reshape(
+            theta_local.shape + (1,) * (ndim - 1)) * x_local.astype(jnp.float32)
+        m = jax.lax.psum(contrib.sum(axis=0, keepdims=True), waxes)
+        out = (1.0 - beta) * x_local.astype(jnp.float32) + beta * m
+        return out.astype(x_local.dtype)
+
+    return run(x, theta)
+
+
+def aggregate_leaf_rs_ag(x: jax.Array, theta: jax.Array, beta: float,
+                         mesh: Mesh, comm_dtype=jnp.bfloat16) -> jax.Array:
+    """Reduce-scatter + local FMA + all-gather schedule of Eq. 10.
+
+    Same ring bytes as one all-reduce, but (a) the payload dtype is pinned
+    (psum_scatter operates on the ``comm_dtype`` operand — the bf16
+    optimization XLA re-associates away under pjit, see EXPERIMENTS §Perf
+    H1 Iter 2), and (b) the two phases can overlap with neighboring compute
+    on real hardware. Each worker shard reduces a 1/p slice of the flattened
+    leaf, applies the FMA on its slice, and gathers the result.
+    """
+    waxes = _worker_axes_in(mesh)
+    p = 1
+    for a in waxes:
+        p *= mesh.shape[a]
+    orig_shape = x.shape
+    n = 1
+    for s in x.shape[1:]:
+        n *= s
+    pad = (-n) % p
+    flat = x.reshape(x.shape[0], n)
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    spec = P(waxes, None)
+
+    ax = waxes[-1] if len(waxes) == 1 else waxes
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(spec, P(waxes)),
+                       out_specs=spec)
+    def run(x_local, theta_local):
+        # x_local: (1, n_pad) — this worker's copy slice
+        contrib = (theta_local.astype(jnp.float32)[:, None]
+                   * x_local.astype(jnp.float32)).astype(comm_dtype)
+        # reduce-scatter: each worker ends with a 1/p slice of sum_j theta_j x_j
+        m_slice = jax.lax.psum_scatter(contrib.reshape(-1), ax,
+                                       scatter_dimension=0, tiled=True)
+        # all-gather the aggregate slices back (RS+AG == all-reduce bytes,
+        # with the ring payload pinned to comm_dtype)
+        m = jax.lax.all_gather(m_slice, ax, tiled=True).astype(jnp.float32)
+        # the (1-beta) x_i term is worker-LOCAL, so the FMA runs after the
+        # gather — chunks of x_i must never cross workers.
+        out = (1.0 - beta) * x_local.astype(jnp.float32) \
+            + beta * m.reshape(x_local.shape)
+        return out.astype(x_local.dtype)
+
+    out = run(flat, theta)
+    if pad:
+        out = out[:, :n]
+    return out.reshape(orig_shape)
+
+
+def weighted_aggregate_shard_map(params: Dict, axes: Dict, theta: jax.Array,
+                                 beta: float, mesh: Mesh,
+                                 schedule: str = "all_reduce") -> Dict:
+    """schedule: "all_reduce" (psum) or "rs_ag" (reduce-scatter + FMA +
+    all-gather, bf16 payload)."""
+    leaf = aggregate_leaf_shard_map if schedule == "all_reduce" \
+        else aggregate_leaf_rs_ag
+
+    def visit(x, ax):
+        if is_worker_leaf(ax):
+            return leaf(x, theta, beta, mesh)
+        return x
+
+    return jax.tree.map(visit, params, axes, is_leaf=_axes_is_leaf)

@@ -1,0 +1,47 @@
+"""WASGD+ round orchestration: the communication step of Alg. 1.
+
+``communicate`` consumes the per-worker loss energies accumulated during the
+round (core/energy.py), computes θ with the configured weight-evaluating
+function (core/weights.py), applies the weighted aggregation (Eq. 10) to the
+parameter tree, and returns the Judge z-scores for the order search.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import WASGDConfig
+from repro.core import aggregate as agg
+from repro.core.order import judge_scores
+from repro.core.weights import compute_theta, omega, theta_entropy
+
+
+class CommResult(NamedTuple):
+    params: Dict
+    theta: jax.Array            # (p,)
+    scores: jax.Array           # (p,) Judge z-scores
+    metrics: Dict
+
+
+def communicate(params: Dict, axes: Dict, h: jax.Array, wcfg: WASGDConfig,
+                leaf_fn=None) -> CommResult:
+    """One communication (lines 12-19 of Alg. 1), SPMD formulation.
+
+    ``h``: (p,) loss energies. The paper's send/wait/arrange steps are
+    subsumed by SPMD: ``h`` is already globally consistent (tiny all-gather)
+    and the weighted sum lowers to one all-reduce over the worker axis.
+    """
+    theta = compute_theta(h, wcfg.strategy, wcfg.a_tilde)
+    new_params = agg.weighted_aggregate(
+        params, axes, theta, wcfg.beta,
+        quantize=wcfg.quantize_comm, leaf_fn=leaf_fn)
+    scores = judge_scores(h)
+    metrics = {
+        "theta_entropy": theta_entropy(theta),
+        "omega": omega(theta),
+        "h_mean": h.mean(),
+        "h_min": h.min(),
+    }
+    return CommResult(new_params, theta, scores, metrics)

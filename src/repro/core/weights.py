@@ -1,0 +1,66 @@
+"""Weight evaluating functions (paper Sec. 3.2).
+
+Given per-worker loss energies ``h`` (shape ``(p,)``), produce normalized
+aggregation weights ``theta`` (summing to 1):
+
+* ``boltzmann`` (WASGD+, Eq. 13): theta_i = softmax(-a_tilde * h_i / sum(h))
+  — Property 1: a→0 gives equal weights, a→inf broadcasts the best worker.
+* ``inverse`` (WASGD v1, Alg. 3): theta_i ∝ 1 / h_i.
+* ``equal``: theta_i = 1/p (SimuParallelSGD-style averaging).
+* ``best``: one-hot on the minimum energy (the a→inf limit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+STRATEGIES = ("boltzmann", "inverse", "equal", "best")
+
+
+def normalize_energy(h: jax.Array) -> jax.Array:
+    """h'_i = h_i / sum_j h_j (Eq. 12 normalization)."""
+    h = h.astype(jnp.float32)
+    return h / jnp.maximum(h.sum(), 1e-30)
+
+
+def boltzmann_weights(h: jax.Array, a_tilde: float) -> jax.Array:
+    """Eq. 13 — the Boltzmann weight evaluating function of WASGD+."""
+    return jax.nn.softmax(-a_tilde * normalize_energy(h))
+
+
+def inverse_weights(h: jax.Array) -> jax.Array:
+    """WASGD v1: theta_i = (1/h_i) / sum_j (1/h_j)."""
+    inv = 1.0 / jnp.maximum(h.astype(jnp.float32), 1e-30)
+    return inv / inv.sum()
+
+
+def equal_weights(p: int) -> jax.Array:
+    return jnp.full((p,), 1.0 / p, jnp.float32)
+
+
+def best_weights(h: jax.Array) -> jax.Array:
+    return jax.nn.one_hot(jnp.argmin(h), h.shape[0], dtype=jnp.float32)
+
+
+def compute_theta(h: jax.Array, strategy: str = "boltzmann",
+                  a_tilde: float = 1.0) -> jax.Array:
+    if strategy == "boltzmann":
+        return boltzmann_weights(h, a_tilde)
+    if strategy == "inverse":
+        return inverse_weights(h)
+    if strategy == "equal":
+        return equal_weights(h.shape[0])
+    if strategy == "best":
+        return best_weights(h)
+    raise ValueError(f"unknown weighting strategy {strategy!r}")
+
+
+def theta_entropy(theta: jax.Array) -> jax.Array:
+    """Diagnostic: entropy of the weight distribution (log p = equal)."""
+    t = jnp.maximum(theta, 1e-30)
+    return -(t * jnp.log(t)).sum()
+
+
+def omega(theta: jax.Array) -> jax.Array:
+    """omega = sum_i theta_i^2 (Lemma 2) — controls the aggregate variance."""
+    return jnp.sum(jnp.square(theta))

@@ -1,0 +1,10 @@
+from repro.data.pipeline import OrderedDataset
+from repro.data.synthetic import (
+    lm_batch,
+    make_classification,
+    make_images,
+    make_tokens,
+)
+
+__all__ = ["OrderedDataset", "lm_batch", "make_classification",
+           "make_images", "make_tokens"]

@@ -1,0 +1,60 @@
+"""Order-managed data pipeline (paper Alg. 1 lines 4-7 + OrderGen).
+
+Each worker traverses the full dataset in its own permutation order; the
+epoch is split into ``n_segments`` order segments whose seeds survive or get
+reshuffled based on Judge scores (core/order.OrderState). Batches are
+assembled worker-major with leading dim ``tau * p * b_local`` to match the
+train-step reshape contract.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core.order import OrderState
+
+
+class OrderedDataset:
+    def __init__(self, data: Dict[str, np.ndarray], n_workers: int, tau: int,
+                 b_local: int, n_segments: int = 1,
+                 order_state: Optional[OrderState] = None, seed: int = 0):
+        self.data = data
+        self.n = len(next(iter(data.values())))
+        self.p = n_workers
+        self.tau = tau
+        self.b_local = b_local
+        self.n_segments = n_segments
+        self.order = order_state or OrderState(n_workers, n_segments, seed)
+        self.per_round = tau * b_local           # samples per worker per round
+        self.seg_len = self.n // n_segments
+        self.rounds_per_segment = max(1, self.seg_len // self.per_round)
+        self.rounds_per_epoch = self.rounds_per_segment * n_segments
+
+    def segment_of_round(self, r: int) -> int:
+        return (r // self.rounds_per_segment) % self.n_segments
+
+    def batches(self) -> Iterator[Dict[str, np.ndarray]]:
+        """Infinite iterator over rounds; reshuffles per OrderGen at segment
+        boundaries."""
+        r = 0
+        while True:
+            seg = self.segment_of_round(r)
+            within = r % self.rounds_per_segment
+            if within == 0 and r > 0 and seg == 0:
+                for s in range(self.n_segments):
+                    self.order.end_segment(s)
+            # per-worker sample indices for this round
+            idx = np.empty((self.p, self.per_round), np.int64)
+            for w in range(self.p):
+                perm = self.order.order_for(seg, w, self.seg_len)
+                start = (within * self.per_round) % max(
+                    1, self.seg_len - self.per_round + 1)
+                sel = perm[start:start + self.per_round]
+                if len(sel) < self.per_round:   # wrap
+                    sel = np.concatenate([sel, perm[: self.per_round - len(sel)]])
+                idx[w] = seg * self.seg_len + sel
+            flat = idx.reshape(-1)               # worker-major: (p * tau * b_local)
+            batch = {k: v[flat] for k, v in self.data.items()}
+            yield batch
+            r += 1

@@ -1,0 +1,5 @@
+from repro.kernels.decode_attn.decode_attn import decode_attn
+from repro.kernels.decode_attn.ops import decode_attention
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+__all__ = ["decode_attn", "decode_attention", "decode_attn_ref"]

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: single-token GQA flash-decode attention.
+
+One new query token per sequence attends over a long KV cache:
+
+    q: (b, kv, g, hd)   (GQA groups folded out of h = kv * g)
+    k, v: (b, S, kv, hd)
+    out: (b, kv, g, hd)
+
+The compute hot spot of the decode_32k / long_500k shapes. The grid is
+(b, kv, S/block_s); TPU iterates the minor (S) axis sequentially per (b, kv),
+so the running flash-softmax state (m, l, acc) lives in VMEM scratch across
+S blocks and the output is written once at the last block. Masking handles
+cache validity (pos < cache_len) and an optional sliding window.
+
+VMEM per step: block_s x hd KV tile (e.g. 512 x 128 x 2 x 2B = 256 KiB)
+plus (g, hd) accumulators — far under the ~16 MiB budget, leaving room for
+double buffering of the K/V streams.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   block_s: int, n_blocks: int, window: Optional[int],
+                   seq_len: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)        # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)        # (bs, hd)
+    hd = q.shape[-1]
+
+    cache_len = len_ref[0]
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, (k.shape[0],), 0)
+    valid = pos < cache_len
+    if window is not None:
+        valid &= (cache_len - 1 - pos) < window
+
+    s = jnp.einsum("gd,td->gt", q * hd ** -0.5, k)          # (g, bs)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    m_safe = jnp.maximum(m_new, -0.5e30)
+    p = jnp.exp(s - m_safe[:, None])
+    corr = jnp.exp(m_prev - m_safe)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_new = acc_prev * corr[:, None] + jnp.einsum("gt,td->gd", p, v)
+
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(s_idx == n_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block_s", "interpret"))
+def decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                cache_len: jax.Array, *, window: Optional[int] = None,
+                block_s: int = 512, interpret: bool = True) -> jax.Array:
+    """q: (b, kv, g, hd); k, v: (b, S, kv, hd); cache_len: () int32."""
+    b, kv, g, hd = q.shape
+    S = k.shape[1]
+    bs = min(block_s, S)
+    pad = (-S) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_blocks = (S + pad) // bs
+
+    kernel = functools.partial(
+        _decode_kernel, block_s=bs, n_blocks=n_blocks, window=window,
+        seq_len=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ki, si: (0,)),
+            pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bi, ki, si: (bi, si, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),      # running max m
+            pltpu.VMEM((g,), jnp.float32),      # running denominator l
+            pltpu.VMEM((g, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(jnp.asarray(cache_len, jnp.int32).reshape(1), q, k, v)
+    return out

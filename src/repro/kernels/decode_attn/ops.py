@@ -1,0 +1,29 @@
+"""jit'd wrapper exposing the kernel in the model's (b, 1, h, hd) layout."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.decode_attn import decode_attn
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len, *, window: Optional[int] = None) -> jax.Array:
+    """Model-layout entry: q (b, 1, h, hd), caches (b, S, kv, hd)."""
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    out = decode_attn(qg, k_cache, v_cache, jnp.asarray(cache_len, jnp.int32),
+                      window=window, interpret=_interpret())
+    return out.reshape(b, 1, h, hd)
+
+
+__all__ = ["decode_attention", "decode_attn", "decode_attn_ref"]

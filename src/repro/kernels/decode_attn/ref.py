@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the decode_attn kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    cache_len: jax.Array, *, window: Optional[int] = None
+                    ) -> jax.Array:
+    """q: (b, kv, g, hd); k, v: (b, S, kv, hd) -> (b, kv, g, hd)."""
+    hd = q.shape[-1]
+    S = k.shape[1]
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32))
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window is not None:
+        valid &= (cache_len - 1 - pos) < window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

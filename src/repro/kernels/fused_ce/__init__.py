@@ -1,0 +1,4 @@
+from repro.kernels.fused_ce.ops import fused_ce
+from repro.kernels.fused_ce.ref import fused_ce_ref
+
+__all__ = ["fused_ce", "fused_ce_ref"]

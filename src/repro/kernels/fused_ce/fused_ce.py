@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused vocab-tiled cross-entropy.
+
+    nll[t] = logsumexp(logits[t, :]) - logits[t, labels[t]]
+
+The §Perf analysis showed the CE epilogue is where large-vocab architectures
+(gemma3: 262k) burn HBM and collective bytes: XLA materializes log_softmax
+over the full vocab and (under SPMD) all-gathers logits for the label
+gather. This kernel streams (block_rows x block_v) logits tiles through VMEM
+once, keeping a running (max, sumexp) flash-style accumulator per row and
+picking the label logit in whichever vocab tile owns it — never
+materializing probabilities. It is the kernel-level twin of the
+``sharded_ce`` formulation (models/transformer.loss_fn).
+
+VMEM: block 256 x 2048 f32 = 2 MiB/tile + 3 row vectors.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ce_kernel(labels_ref, logits_ref, o_ref, m_ref, l_ref, lab_ref, *,
+               block_v: int, n_vblocks: int, vocab: int):
+    v_idx = pl.program_id(1)
+
+    @pl.when(v_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        lab_ref[...] = jnp.zeros_like(lab_ref)
+
+    x = logits_ref[...].astype(jnp.float32)            # (br, bv)
+    v0 = v_idx * block_v
+    cols = v0 + jax.lax.broadcasted_iota(jnp.int32, (x.shape[1],), 0)
+    x = jnp.where((cols < vocab)[None, :], x, NEG_INF)  # mask padding
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, x.max(axis=-1))
+    p = jnp.exp(x - m_new[:, None])
+    l_new = l_prev * jnp.exp(m_prev - m_new) + p.sum(axis=-1)
+    m_ref[...], l_ref[...] = m_new, l_new
+
+    labels = labels_ref[...]                           # (br,)
+    in_tile = (labels >= v0) & (labels < v0 + block_v)
+    local = jnp.clip(labels - v0, 0, block_v - 1)
+    onehot = jax.nn.one_hot(local, block_v, dtype=jnp.float32)
+    picked = (x * onehot).sum(axis=-1)
+    lab_ref[...] = lab_ref[...] + jnp.where(in_tile, picked, 0.0)
+
+    @pl.when(v_idx == n_vblocks - 1)
+    def _finalize():
+        o_ref[...] = (m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+                      - lab_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "block_v", "interpret"))
+def fused_ce(logits: jax.Array, labels: jax.Array, *, block_rows: int = 256,
+             block_v: int = 2048, interpret: bool = True) -> jax.Array:
+    """logits: (T, V); labels: (T,) int32. Returns per-token nll (T,) f32."""
+    t, v = logits.shape
+    br = min(block_rows, t)
+    bv = min(block_v, v)
+    pad_t = (-t) % br
+    pad_v = (-v) % bv
+    if pad_t or pad_v:
+        logits = jnp.pad(logits, ((0, pad_t), (0, pad_v)))
+        labels = jnp.pad(labels, (0, pad_t))
+    tp, vp = t + pad_t, v + pad_v
+
+    out = pl.pallas_call(
+        functools.partial(_ce_kernel, block_v=bv, n_vblocks=vp // bv,
+                          vocab=v),
+        grid=(tp // br, vp // bv),
+        in_specs=[
+            pl.BlockSpec((br,), lambda i, j: (i,)),
+            pl.BlockSpec((br, bv), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tp,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((br,), jnp.float32),    # running max
+            pltpu.VMEM((br,), jnp.float32),    # running sumexp
+            pltpu.VMEM((br,), jnp.float32),    # label logit
+        ],
+        interpret=interpret,
+    )(labels.astype(jnp.int32), logits)
+    return out[:t]

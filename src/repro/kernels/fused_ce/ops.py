@@ -1,0 +1,15 @@
+"""jit'd entry point for fused_ce (interpret mode off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fused_ce.fused_ce import fused_ce as _fused_ce
+from repro.kernels.fused_ce.ref import fused_ce_ref
+
+
+def fused_ce(logits, labels, **kw):
+    kw.setdefault("interpret", jax.default_backend() != "tpu")
+    return _fused_ce(logits, labels, **kw)
+
+
+__all__ = ["fused_ce", "fused_ce_ref"]

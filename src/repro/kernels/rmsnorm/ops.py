@@ -1,0 +1,15 @@
+"""jit'd wrapper for the rmsnorm kernel (interpret mode off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm as _rmsnorm
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    return _rmsnorm(x, scale, eps,
+                    interpret=jax.default_backend() != "tpu")
+
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]

@@ -1,0 +1,58 @@
+"""jit'd wrapper: a full chunked-SSD forward that uses the Pallas kernel for
+the within-chunk blocks and pure JAX for the (tiny) inter-chunk recurrence —
+a drop-in for ``models.ssm.ssd_chunked``."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_chunked_kernel(xs: jax.Array, dt: jax.Array, a: jax.Array,
+                       B: jax.Array, C: jax.Array, chunk: int,
+                       init_state: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Same contract as models.ssm.ssd_chunked (y, final_state)."""
+    b, s, nh, hd = xs.shape
+    ds = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xs_c = xs.reshape(b, nc, chunk, nh, hd)
+    dt_c = dt.reshape(b, nc, chunk, nh)
+    B_c = B.reshape(b, nc, chunk, ds)
+    C_c = C.reshape(b, nc, chunk, ds)
+
+    y_diag, states, totals = ssd_chunk(xs_c, dt_c, a, B_c, C_c,
+                                       interpret=_interpret())
+
+    s0 = jnp.zeros((b, nh, ds, hd), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st, tot = inp
+        prev = carry
+        new = jnp.exp(tot)[:, :, None, None] * prev + st
+        return new, prev
+
+    final, prevs = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   totals.transpose(1, 0, 2)))
+    prevs = prevs.transpose(1, 0, 2, 3, 4)
+
+    cum = jnp.cumsum(dt_c.astype(jnp.float32)
+                     * a.astype(jnp.float32), axis=2)
+    y_off = jnp.einsum("bnls,bnhsd,bnlh->bnlhd", C_c.astype(jnp.float32),
+                       prevs, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, s, nh, hd)
+    return y, final
+
+
+__all__ = ["ssd_chunk", "ssd_chunk_ref", "ssd_chunked_kernel"]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the ssd_chunk kernel (the within-chunk part of
+models/ssm.ssd_chunked)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(xs, dt, a, B, C):
+    """Same contract as kernels.ssd_chunk.ssd_chunk."""
+    xs = xs.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    L = xs.shape[2]
+
+    ll = dt * a                                       # (b, nc, L, nh)
+    cum = jnp.cumsum(ll, axis=2)
+    totals = cum[:, :, -1]                            # (b, nc, nh)
+
+    cb = jnp.einsum("bnls,bnms->bnlm", C, B)
+    dmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    att = jnp.where(mask[None, None, :, :, None], jnp.exp(dmat), 0.0) \
+        * cb[..., None] * dt[:, :, None, :, :]
+    y = jnp.einsum("bnlmh,bnmhd->bnlhd", att, xs)
+
+    decay_to_end = jnp.exp(totals[:, :, None, :] - cum) * dt
+    states = jnp.einsum("bnlh,bnls,bnlhd->bnhsd", decay_to_end, B, xs)
+    return y, states, totals

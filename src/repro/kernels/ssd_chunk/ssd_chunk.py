@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: Mamba2 SSD within-chunk block (arXiv:2405.21060).
+
+For each (batch, chunk, head) grid cell, computes the quadratic
+"attention-like" diagonal block and the chunk's contribution to the
+recurrent state:
+
+    ll     = dt * a                      (L,)  log-decays
+    cum    = cumsum(ll)
+    y      = [tril(exp(cum_i - cum_j)) * (C B^T) * dt_j] @ x      (L, hd)
+    state  = (exp(cum_L - cum) * dt * B)^T @ x                    (ds, hd)
+    total  = cum_L                                                ()
+
+The inter-chunk linear recurrence and the off-diagonal C·S_prev term stay in
+pure JAX (tiny: one (nh, ds, hd) einsum per chunk) — this kernel owns the
+O(L^2) and O(L·ds·hd) matmuls, which dominate SSD training FLOPs.
+
+VMEM per cell at L=64, hd=64, ds=128: x 16 KiB + B/C 64 KiB + two (L, L)
+f32 blocks 32 KiB — comfortably resident; both matmuls are MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(xs_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, total_ref):
+    xs = xs_ref[0, 0, :, 0].astype(jnp.float32)       # (L, hd)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)       # (L,)
+    a = a_ref[0].astype(jnp.float32)                  # ()
+    B = b_ref[0, 0].astype(jnp.float32)               # (L, ds)
+    C = c_ref[0, 0].astype(jnp.float32)               # (L, ds)
+    L = xs.shape[0]
+
+    ll = dt * a
+    cum = jnp.cumsum(ll)                              # (L,)
+    total = cum[L - 1]
+
+    cb = jnp.dot(C, B.T)                              # (L, L)
+    dmat = cum[:, None] - cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    att = jnp.where(mask, jnp.exp(dmat), 0.0) * cb * dt[None, :]
+    y = jnp.dot(att, xs)                              # (L, hd)
+
+    decay_to_end = jnp.exp(total - cum) * dt          # (L,)
+    state = jnp.dot((decay_to_end[:, None] * B).T, xs)  # (ds, hd)
+
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+    state_ref[0, 0, 0] = state.astype(state_ref.dtype)
+    total_ref[0, 0, 0] = total.astype(total_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(xs: jax.Array, dt: jax.Array, a: jax.Array, B: jax.Array,
+              C: jax.Array, *, interpret: bool = True):
+    """Within-chunk SSD.
+
+    xs: (b, nc, L, nh, hd); dt: (b, nc, L, nh); a: (nh,);
+    B, C: (b, nc, L, ds).
+    Returns (y_diag (b, nc, L, nh, hd), states (b, nc, nh, ds, hd),
+             totals (b, nc, nh)).
+    """
+    b, nc, L, nh, hd = xs.shape
+    ds = B.shape[-1]
+    y, states, totals = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(b, nc, nh),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, 1, hd), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1,), lambda bi, ci, hi: (hi,)),
+            pl.BlockSpec((1, 1, L, ds), lambda bi, ci, hi: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, L, ds), lambda bi, ci, hi: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, 1, hd), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, ds, hd), lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, ci, hi: (bi, ci, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, L, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, nh, ds, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xs, dt, a, B, C)
+    return y, states, totals

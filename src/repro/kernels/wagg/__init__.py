@@ -1,0 +1,5 @@
+from repro.kernels.wagg.ops import aggregate_tree_wagg, wagg_leaf
+from repro.kernels.wagg.ref import wagg_ref
+from repro.kernels.wagg.wagg import wagg
+
+__all__ = ["aggregate_tree_wagg", "wagg", "wagg_leaf", "wagg_ref"]

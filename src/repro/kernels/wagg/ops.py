@@ -1,0 +1,34 @@
+"""jit'd public entry points for the wagg kernel.
+
+``aggregate_tree_wagg`` applies the kernel leaf-wise over a worker-stacked
+parameter tree — a drop-in ``leaf_fn`` for ``core.aggregate.weighted_aggregate``.
+On non-TPU backends the kernel runs in interpret mode (CPU validation); the
+pure-jnp reference is available as a fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wagg.wagg import wagg
+from repro.kernels.wagg.ref import wagg_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def wagg_leaf(x: jax.Array, theta: jax.Array, beta) -> jax.Array:
+    """One (p, ...) parameter leaf through the fused kernel."""
+    p = x.shape[0]
+    flat = x.reshape(p, -1)
+    out = wagg(flat, theta, float(beta), interpret=_interpret())
+    return out.reshape(x.shape)
+
+
+def aggregate_tree_wagg(params, axes, theta, beta):
+    from repro.core.aggregate import weighted_aggregate
+    return weighted_aggregate(params, axes, theta, beta, leaf_fn=wagg_leaf)
+
+
+__all__ = ["wagg", "wagg_ref", "wagg_leaf", "aggregate_tree_wagg"]

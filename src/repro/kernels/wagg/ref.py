@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the wagg kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wagg_ref(x: jax.Array, theta: jax.Array, beta: float) -> jax.Array:
+    """out[i] = (1-beta) x[i] + beta * sum_j theta[j] x[j]."""
+    xf = x.astype(jnp.float32)
+    agg = jnp.tensordot(theta.astype(jnp.float32), xf, axes=1)
+    return ((1.0 - beta) * xf + beta * agg[None]).astype(x.dtype)

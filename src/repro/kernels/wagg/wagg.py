@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: fused WASGD weighted aggregation (Eq. 10).
+
+    out[i, :] = (1 - beta) * x[i, :] + beta * sum_j theta[j] * x[j, :]
+
+over a worker-stacked parameter block x: (p, N). A naive XLA lowering does
+(reduce -> broadcast -> two muls -> add) with three HBM round trips over the
+full parameter set; this kernel streams each (p, block_n) tile through VMEM
+once. The worker dimension p (<= 32 on the production meshes) rides along in
+full per tile, so the MXU-free VPU reduction over p stays in registers.
+
+Tiling: grid over N in ``block_n`` VMEM tiles; block_n is chosen so
+p * block_n * 4B (f32 accumulation) fits comfortably in VMEM (default
+p=32 x 8192 x 4B = 1 MiB in, 1 MiB out).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wagg_kernel(theta_ref, x_ref, o_ref, *, beta: float):
+    x = x_ref[...].astype(jnp.float32)            # (p, bn)
+    theta = theta_ref[...].astype(jnp.float32)    # (p,)
+    agg = jnp.einsum("p,pn->n", theta, x)         # VPU reduction over workers
+    out = (1.0 - beta) * x + beta * agg[None, :]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block_n", "interpret"))
+def wagg(x: jax.Array, theta: jax.Array, beta: float,
+         block_n: int = 8192, interpret: bool = True) -> jax.Array:
+    """x: (p, N); theta: (p,). Returns (p, N)."""
+    p, n = x.shape
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    np_ = n + pad
+    out = pl.pallas_call(
+        functools.partial(_wagg_kernel, beta=float(beta)),
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((p,), lambda j: (0,)),
+            pl.BlockSpec((p, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((p, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((p, np_), x.dtype),
+        interpret=interpret,
+    )(theta, xp)
+    return out[:, :n] if pad else out

@@ -1,0 +1,142 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``collective_bytes`` parses a (stable)HLO/optimized-HLO dump and sums operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (including async ``-start`` forms; ``-done`` halves are
+skipped so nothing is double counted).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"\b(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([^\s=]+)\s*=\s*(.*)$")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _result_type_map(text: str) -> Dict[str, str]:
+    out = {}
+    for line in text.splitlines():
+        m = _NAME_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        # result type = everything up to the opcode token; taking the prefix
+        # before the first '(' that follows an opcode word is fragile, so we
+        # just keep the full rest — _shape_bytes only counts dtype[dims]
+        # patterns, and the *first* ones on the line are the result type(s).
+        # For operand-size lookups only the first type matters rarely; we
+        # store the prefix up to the last '=' free segment.
+        out[name] = rest
+    return out
+
+
+def _paren_span(line: str, start: int) -> Tuple[int, int]:
+    depth = 0
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return start, i
+    return start, len(line) - 1
+
+
+_GROUPS_LITERAL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\](?:T\(([0-9,]+)\))?")
+
+
+def _group_stride(line: str) -> int:
+    """First-two-element stride of the first replica group (-1 unknown).
+
+    stride 1  => groups are contiguous device runs  => "model" (TP) axis;
+    stride >1 => strided groups                     => worker ("data"/"pod")
+    axis, under the production mesh layout (model minor).
+    """
+    m = _GROUPS_LITERAL_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        return ids[1] - ids[0] if len(ids) > 1 else 0
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s, n, perm = m.groups()
+        if perm is None or perm == "0,1":
+            return 1              # groups are consecutive rows of iota
+        return int(m.group(1)) if perm == "1,0" else -1
+    return -1
+
+
+def classify_axis(stride: int) -> str:
+    if stride == 1:
+        return "model"
+    if stride > 1:
+        return "worker"
+    return "unknown"
+
+
+def collective_bytes(text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind. Returns {kind: bytes, total:}."""
+    # map of instruction name -> result-type bytes (first shapes on the line)
+    result_bytes: Dict[str, int] = {}
+    for line in text.splitlines():
+        m = _NAME_RE.match(line)
+        if m:
+            name, rest = m.groups()
+            # only count shapes before the opcode's '(' — cut at first '('
+            cut = rest.find("(")
+            head = rest if cut < 0 else rest[:cut]
+            if not _SHAPE_RE.search(head):
+                head = rest  # tuple results start with '(' — keep everything
+                cut2 = rest.find(")")
+                head = rest[:cut2 + 1] if cut2 > 0 else rest
+            result_bytes[name] = _shape_bytes(head)
+
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    by_axis = {"model": 0, "worker": 0, "unknown": 0}
+    for line in text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        kind = m.group(1)
+        op_start = line.find("(", m.start())
+        a, b = _paren_span(line, op_start)
+        inner = line[a + 1:b]
+        nbytes = _shape_bytes(inner)              # inline operand shapes
+        if nbytes == 0:                           # resolve operand names
+            for name in _OPERAND_NAME_RE.findall(inner):
+                nbytes += result_bytes.get(name, 0)
+        out[kind] += nbytes
+        counts[kind] += 1
+        by_axis[classify_axis(_group_stride(line))] += nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    out["by_axis"] = by_axis
+    return out

@@ -1,0 +1,96 @@
+"""Render the dry-run JSONL artifacts into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report results/dryrun_single.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def load(paths: List[str]) -> Dict:
+    recs = {}
+    for path in paths:
+        for line in open(path):
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| arch | shape | mesh | status | compile | temp/chip | args/chip | collectives (AR/AG/RS/A2A/CP) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if not r["ok"]:
+            rows.append(f"| {arch} | {shape} | {mesh} | FAIL: {r['error'][:40]} | | | | |")
+            continue
+        cb = r["collective_bytes"]
+        cc = r["collective_counts"]
+        coll = "/".join(str(cc[k]) for k in
+                        ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        mem = r.get("memory") or {}
+        rows.append(
+            f"| {arch} | {shape} | {mesh} | OK | {r['t_compile_s']:.0f}s "
+            f"| {fmt_bytes(mem.get('temp_bytes'))} "
+            f"| {fmt_bytes(mem.get('argument_bytes'))} "
+            f"| {coll} ({fmt_bytes(cb['total'])}) |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs) -> str:
+    rows = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | dominant | useful FLOPs | worker-coll | next lever |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if not r["ok"] or mesh != "16x16":
+            continue
+        rf = r["roofline"]
+        ax = r.get("collective_by_axis", {})
+        lever = _lever(r)
+        rows.append(
+            f"| {arch} | {shape} | {rf['compute_s']*1e3:.2f} "
+            f"| {rf['memory_s']*1e3:.2f} | {rf['collective_s']*1e3:.3f} "
+            f"| **{rf['dominant'].replace('_s','')}** "
+            f"| {r['useful_flops_frac']:.2f} "
+            f"| {fmt_bytes(ax.get('worker', 0) + ax.get('unknown', 0))} "
+            f"| {lever} |")
+    return "\n".join(rows)
+
+
+def _lever(r) -> str:
+    rf = r["roofline"]
+    dom = rf["dominant"]
+    if dom == "collective_s":
+        return "raise tau (worker-coll amortizes 1/tau) or quantize payload"
+    if dom == "compute_s":
+        if r["useful_flops_frac"] < 0.5:
+            return "cut replicated/wasted compute (head sharding, windowed-block skip)"
+        return "near roofline; overlap collectives"
+    if r["useful_flops_frac"] < 0.3:
+        return "bytes & flops both inflated by replication — reshard"
+    return "fuse elementwise chains (XLA:TPU/flash kernel), cut f32 temps"
+
+
+def main():
+    paths = sys.argv[1:] or ["results/dryrun_single.jsonl"]
+    recs = load(paths)
+    ok = sum(r["ok"] for r in recs.values())
+    print(f"## Dry-run matrix ({ok}/{len(recs)} OK)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16, per compiled step)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

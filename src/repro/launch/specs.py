@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input-shape) workload.
+
+``input_specs`` returns everything the dry-run needs to lower one compiled
+step — abstract state/batch trees, matching logical-axes trees, the step
+callable, and the rules table — without allocating a single device byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (InputShape, ModelConfig, TrainConfig,
+                                WASGDConfig)
+from repro.models import abstract_params, cache_axes, decode_step, init_cache, prefill
+from repro.parallel.sharding import SERVE_LONG_RULES, SERVE_RULES, TRAIN_RULES
+from repro.train.lm import abstract_lm_state, lm_batch_specs, make_lm_loss
+from repro.train.step import build_train_step
+
+
+def effective_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Apply the long-context sub-quadratic override (DESIGN.md §4.2):
+    pure full-attention architectures run ``long_500k`` only under an
+    explicit sliding-window variant."""
+    if (shape.window_override and cfg.ssm is None and cfg.attn_window is None
+            and shape.kind == "decode"):
+        return dataclasses.replace(cfg, attn_window=shape.window_override,
+                                   global_attn_every=0)
+    return cfg
+
+
+class Workload(NamedTuple):
+    fn: Any                     # callable to jit
+    arg_shapes: tuple           # ShapeDtypeStruct pytrees (positional)
+    arg_axes: tuple             # logical-axes pytrees (same structure)
+    rules: Dict                 # logical-axis -> mesh-axis table
+    cfg: ModelConfig            # effective model config
+    meta: Dict
+
+
+def _abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    shapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_len, jnp.bfloat16))
+    return shapes, cache_axes(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, n_workers: int,
+                tcfg: Optional[TrainConfig] = None,
+                for_dryrun: bool = True,
+                train_rules: Optional[Dict] = None) -> Workload:
+    cfg = effective_config(cfg, shape)
+    if for_dryrun:
+        # unroll the flash-attention KV scan so HLO cost analysis (which
+        # counts while bodies once) sees every block's FLOPs
+        cfg = dataclasses.replace(cfg, unroll_attn_scan=True)
+    tcfg = tcfg or TrainConfig()
+
+    if shape.kind == "train":
+        state_shapes, state_axes, optimizer = abstract_lm_state(
+            cfg, tcfg, n_workers)
+        batch_shapes, batch_axes = lm_batch_specs(
+            cfg, shape.global_batch, shape.seq_len)
+        step = build_train_step(make_lm_loss(cfg), optimizer,
+                                state_axes.params, tcfg.wasgd, n_workers)
+        rules = TRAIN_RULES if train_rules is None else train_rules
+        return Workload(step, (state_shapes, batch_shapes),
+                        (state_axes, batch_axes), rules, cfg,
+                        {"kind": "train", "tau": tcfg.wasgd.tau,
+                         "workers": n_workers})
+
+    params_shapes, params_axes = abstract_params(cfg)
+    rules = SERVE_LONG_RULES if shape.global_batch == 1 else SERVE_RULES
+
+    if shape.kind == "prefill":
+        cache_shapes, cax = _abstract_cache(cfg, shape.global_batch,
+                                            shape.seq_len)
+        if cfg.n_codebooks > 0:
+            tok = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.n_codebooks), jnp.int32)
+            tok_axes = ("batch", "seq", None)
+        else:
+            tok = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                       jnp.int32)
+            tok_axes = ("batch", "seq")
+        args = [params_shapes, tok, cache_shapes]
+        axes = [params_axes, tok_axes, cax]
+        if cfg.n_media_tokens > 0:
+            args.append(jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.n_media_tokens, cfg.d_model),
+                jnp.bfloat16))
+            axes.append(("batch", "media", None))
+        fn = functools.partial(prefill, cfg)
+        return Workload(fn, tuple(args), tuple(axes), rules, cfg,
+                        {"kind": "prefill"})
+
+    # decode: one new token against a seq_len-deep cache
+    cache_shapes, cax = _abstract_cache(cfg, shape.global_batch,
+                                        shape.seq_len)
+    if cfg.n_codebooks > 0:
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.n_codebooks),
+                                   jnp.int32)
+        tok_axes = ("batch", None, None)
+    else:
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_axes = ("batch", None)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    args = [params_shapes, tok, cache_shapes, index]
+    axes = [params_axes, tok_axes, cax, ()]
+    if cfg.n_media_tokens > 0:
+        args.append(jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.n_media_tokens, cfg.d_model),
+            jnp.bfloat16))
+        axes.append(("batch", "media", None))
+    fn = functools.partial(decode_step, cfg)
+    return Workload(fn, tuple(args), tuple(axes), rules, cfg,
+                    {"kind": "decode"})

@@ -1,0 +1,84 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --smoke \
+        --workers 4 --rounds 20
+
+On a real TPU pod this builds the production mesh and shards the worker-
+stacked state per parallel/sharding.py; on CPU (this container) it runs the
+reduced config on the host device with the same code path — the mesh only
+changes the `in_shardings`, never the program.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save
+from repro.configs import (TrainConfig, WASGDConfig, get_config,
+                           get_smoke_config)
+from repro.data import OrderedDataset, make_tokens
+from repro.models import init_params
+from repro.train import Trainer
+from repro.train.lm import make_lm_loss
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--beta", type=float, default=0.9)
+    ap.add_argument("--a-tilde", type=float, default=1.0)
+    ap.add_argument("--strategy", default="boltzmann",
+                    choices=["boltzmann", "inverse", "equal", "best"])
+    ap.add_argument("--rule", default="wasgd",
+                    choices=["wasgd", "spsgd", "easgd", "omwu", "mmwu", "seq"])
+    ap.add_argument("--lr", type=float, default=0.03)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--b-local", type=int, default=2)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"params={cfg.param_count():,} workers={args.workers}")
+
+    tcfg = TrainConfig(
+        learning_rate=args.lr, optimizer="sgd",
+        wasgd=WASGDConfig(tau=args.tau, beta=args.beta, a_tilde=args.a_tilde,
+                          strategy=args.strategy))
+
+    toks = make_tokens(0, 2048, args.seq, cfg.vocab_size)
+    data = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.n_codebooks:
+        rng = np.random.default_rng(0)
+        t = rng.integers(0, cfg.vocab_size,
+                         (2048, args.seq + 1, cfg.n_codebooks), dtype=np.int32)
+        data = {"tokens": t[:, :-1], "labels": t[:, 1:]}
+    if cfg.n_media_tokens:
+        data["media"] = np.random.default_rng(1).normal(
+            size=(2048, cfg.n_media_tokens, cfg.d_model)).astype(np.float32)
+
+    ds = OrderedDataset(data, args.workers, args.tau, args.b_local,
+                        n_segments=2)
+    params, axes = init_params(cfg, jax.random.key(0))
+    trainer = Trainer(make_lm_loss(cfg), params, axes, tcfg, args.workers,
+                      rule=args.rule)
+    summary = trainer.run(ds.batches(), args.rounds, order_state=ds.order,
+                          segment_fn=ds.segment_of_round,
+                          log_every=max(1, args.rounds // 5))
+    print(f"done: {summary}")
+    if args.ckpt:
+        save(args.ckpt, trainer.state.params,
+             meta={"arch": cfg.name, "rounds": args.rounds})
+        print(f"checkpoint written to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from repro.models.transformer import (
+    abstract_params,
+    cache_axes,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "abstract_params",
+    "cache_axes",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "prefill",
+]

@@ -1,0 +1,248 @@
+"""GQA attention: chunked (flash-style) training/prefill path, single-token
+decode path against a KV cache, sliding-window masking, and cross-attention
+for the VLM backbone.
+
+The chunked path is the pure-JAX reference of the Pallas ``decode_attn``
+kernel (kernels/decode_attn) and keeps peak memory at
+O(seq * block) instead of O(seq^2), which is what lets the 32k-prefill
+shapes lower with sane ``memory_analysis``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+from repro.models.param import ParamBuilder
+
+NEG_INF = -1e30
+
+
+def attention_init(b: ParamBuilder, name: str, d_model: int, n_heads: int,
+                   n_kv_heads: int, head_dim: int):
+    s = b.scope(name)
+    s.param("wq", (d_model, n_heads, head_dim), ("embed", "heads", "head_dim"))
+    s.param("wk", (d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim"))
+    s.param("wv", (d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim"))
+    s.param("wo", (n_heads, head_dim, d_model), ("heads", "head_dim", "embed"))
+
+
+# -- core softmax-attention over chunked KV --------------------------------------
+
+def _block_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+                window: Optional[int], k_valid: Optional[jax.Array] = None):
+    """(sq, bk) boolean mask of allowed attention edges."""
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    if k_valid is not None:
+        mask &= k_valid[None, :]
+    return mask
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, block_k: int = 512,
+                    unroll: bool = False) -> jax.Array:
+    """Chunked attention with running softmax.
+
+    q: (b, sq, h, hd);  k, v: (b, sk, kv, hd)  with h = kv * group.
+    Returns (b, sq, h, hd).
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    block_k = min(block_k, sk)
+    n_blocks = -(-sk // block_k)
+    pad = n_blocks * block_k - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, n_blocks, block_k, kv, hd)
+    vb = v.reshape(b, n_blocks, block_k, kv, hd)
+
+    qg = (q.reshape(b, sq, kv, g, hd) * scale).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        k_j, v_j, j = blk
+        k_pos = j * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k_j.astype(jnp.float32))
+        mask = _block_mask(q_pos, k_pos, causal, window,
+                           k_valid=k_pos < sk)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        m_safe = jnp.maximum(m_new, -0.5e30)          # avoid inf-inf -> nan
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(m - m_safe)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc[...] * corr[..., None] + jnp.einsum(
+            "bkgqt,btkd->bkgqd", p, v_j.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_blocks)),
+        unroll=n_blocks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def flash_attention_windowed(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             window: int, block: int = 512) -> jax.Array:
+    """Sliding-window attention with q-blocking that SKIPS kv blocks entirely
+    outside the window (beyond-paper §Perf optimization: the masked-but-
+    computed blocks of the generic chunked path are pure waste when
+    window << seq).
+
+    q block i only touches kv span [max(0,(i-wb)*block), i*block + block) of
+    length (wb+1)*block where wb = ceil(window/block) — compute drops from
+    O(s^2) to O(s * (window + block)).
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if s <= block or window >= s:
+        return flash_attention(q, k, v, causal=True, window=window,
+                               block_k=block)
+    blk = block
+    nqb = -(-s // blk)
+    padq = nqb * blk - s
+    if padq:
+        q = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, padq), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padq), (0, 0), (0, 0)))
+    sp = nqb * blk
+    wb = -(-window // blk)
+    span = (wb + 1) * blk
+    scale = hd ** -0.5
+
+    outs = []
+    for i in range(nqb):
+        q_i = (q[:, i * blk:(i + 1) * blk].reshape(b, blk, kvh, g, hd)
+               * scale).astype(jnp.float32)
+        start = min(max(0, (i - wb) * blk), max(0, sp - span))
+        kspan = k[:, start:start + min(span, sp)]
+        vspan = v[:, start:start + min(span, sp)]
+        q_pos = i * blk + jnp.arange(blk)
+        k_pos = start + jnp.arange(kspan.shape[1])
+        mask = _block_mask(q_pos, k_pos, True, window, k_valid=k_pos < s)
+        sc = jnp.einsum("bqkgd,btkd->bkgqt", q_i,
+                        kspan.astype(jnp.float32))
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bkgqt,btkd->bkgqd", p, vspan.astype(jnp.float32))
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(b, blk, h, hd))
+    out = jnp.concatenate(outs, axis=1)[:, :s]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, window: Optional[int] = None
+                     ) -> jax.Array:
+    """One-token attention: q (b, 1, h, hd) vs cache (b, S, kv, hd).
+
+    ``cache_len`` is the number of valid cache entries (the new token's K/V
+    must already be written at position cache_len-1). Pure-jnp reference of
+    the ``decode_attn`` Pallas kernel.
+    """
+    b, _, h, hd = q.shape
+    S, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = (q.reshape(b, kv, g, hd) * hd ** -0.5).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32))
+    k_pos = jnp.arange(S)
+    valid = k_pos < cache_len
+    if window is not None:
+        valid &= (cache_len - 1 - k_pos) < window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# -- full self-attention layer ----------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array                 # (b, S, kv, hd)
+    v: jax.Array
+
+
+def self_attention(params, x: jax.Array, positions: jax.Array, *,
+                   rope_theta: float, window: Optional[int],
+                   compute_dtype, cache: Optional[KVCache] = None,
+                   cache_index: Optional[jax.Array] = None,
+                   use_pallas_decode: bool = False, unroll: bool = False,
+                   windowed_qblock: bool = False
+                   ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """x: (b, s, d). Training/prefill when cache is None or s>1 fills it;
+    decode when s == 1 and cache is given."""
+    wq, wk, wv, wo = (params[n].astype(compute_dtype)
+                      for n in ("wq", "wk", "wv", "wo"))
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    if cache is None:
+        if windowed_qblock and window is not None:
+            out = flash_attention_windowed(q, k, v, window=window)
+        else:
+            out = flash_attention(q, k, v, causal=True, window=window,
+                                  unroll=unroll)
+        new_cache = None
+    elif x.shape[1] == 1:
+        # decode: write new K/V at cache_index, attend over the cache
+        idx = cache_index
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k, idx, axis=1) \
+            if k.shape[1] == 1 else cache.k
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v, idx, axis=1)
+        if use_pallas_decode:
+            from repro.kernels.decode_attn import ops as dops
+            out = dops.decode_attention(q, k_cache, v_cache, idx + 1,
+                                        window=window)
+        else:
+            out = decode_attention(q, k_cache, v_cache, idx + 1, window=window)
+        new_cache = KVCache(k_cache, v_cache)
+    else:
+        # prefill: run chunked attention and emit the filled cache
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              unroll=unroll)
+        S = cache.k.shape[1]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), 0, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), 0, axis=1)
+        new_cache = KVCache(k_cache, v_cache)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, new_cache
+
+
+# -- cross-attention (VLM) ----------------------------------------------------------
+
+def cross_attention_init(b: ParamBuilder, name: str, d_model: int, n_heads: int,
+                         n_kv_heads: int, head_dim: int):
+    attention_init(b, name, d_model, n_heads, n_kv_heads, head_dim)
+
+
+def cross_attention(params, x: jax.Array, media: jax.Array, *,
+                    compute_dtype, unroll: bool = False) -> jax.Array:
+    """x: (b, s, d) attends over media embeddings (b, M, d). No mask, no rope."""
+    wq, wk, wv, wo = (params[n].astype(compute_dtype)
+                      for n in ("wq", "wk", "wv", "wo"))
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bmd,dhk->bmhk", media, wk)
+    v = jnp.einsum("bmd,dhk->bmhk", media, wv)
+    out = flash_attention(q, k, v, causal=False, window=None, unroll=unroll)
+    return jnp.einsum("bshk,hkd->bsd", out, wo)

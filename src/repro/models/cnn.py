@@ -1,0 +1,85 @@
+"""The paper's experiment models (Section 5.2.1), for the faithful-repro
+benchmarks: the 6-layer MNIST/Fashion-MNIST CNN
+``(1,28)C(16,24)M(16,12)C(32,8)M(32,4)`` + linear head, and a small MLP used
+for fast CPU sweeps. Pure ``jax.lax`` convolutions — no external NN library.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamBuilder, build
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def cnn6_init(b: ParamBuilder, n_classes: int = 10, in_ch: int = 1):
+    """(1,28)C(16,24)M(16,12)C(32,8)M(32,4) + FC head (paper Sec. 5.2.1)."""
+    b.param("conv1_w", (5, 5, in_ch, 16), (None, None, None, None), scale=0.1)
+    b.param("conv1_b", (16,), (None,), init="zeros")
+    b.param("conv2_w", (5, 5, 16, 32), (None, None, None, None), scale=0.05)
+    b.param("conv2_b", (32,), (None,), init="zeros")
+    b.param("fc_w", (32 * 4 * 4, n_classes), (None, None), scale=0.05)
+    b.param("fc_b", (n_classes,), (None,), init="zeros")
+
+
+def cnn6_apply(params: Dict, images: jax.Array) -> jax.Array:
+    """images: (b, 28, 28, in_ch) -> logits (b, n_classes)."""
+    x = jax.nn.relu(_conv(images, params["conv1_w"], params["conv1_b"]))
+    x = _maxpool(x)                                   # (b, 12, 12, 16)
+    x = jax.nn.relu(_conv(x, params["conv2_w"], params["conv2_b"]))
+    x = _maxpool(x)                                   # (b, 4, 4, 32)
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+def mlp_init(b: ParamBuilder, d_in: int, d_hidden: int, n_classes: int,
+             n_hidden_layers: int = 2):
+    b.param("w_in", (d_in, d_hidden), (None, None))
+    b.param("b_in", (d_hidden,), (None,), init="zeros")
+    for i in range(n_hidden_layers - 1):
+        b.param(f"w_{i}", (d_hidden, d_hidden), (None, None))
+        b.param(f"b_{i}", (d_hidden,), (None,), init="zeros")
+    b.param("w_out", (d_hidden, n_classes), (None, None))
+    b.param("b_out", (n_classes,), (None,), init="zeros")
+
+
+def mlp_apply(params: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(x @ params["w_in"] + params["b_in"])
+    i = 0
+    while f"w_{i}" in params:
+        h = jax.nn.relu(h @ params[f"w_{i}"] + params[f"b_{i}"])
+        i += 1
+    return h @ params["w_out"] + params["b_out"]
+
+
+def init_cnn6(key, n_classes: int = 10, in_ch: int = 1):
+    params, _ = build(functools.partial(cnn6_init, n_classes=n_classes,
+                                        in_ch=in_ch), key)
+    return params
+
+
+def init_mlp(key, d_in: int, d_hidden: int, n_classes: int,
+             n_hidden_layers: int = 2):
+    params, _ = build(functools.partial(
+        mlp_init, d_in=d_in, d_hidden=d_hidden, n_classes=n_classes,
+        n_hidden_layers=n_hidden_layers), key)
+    return params
+
+
+def classification_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

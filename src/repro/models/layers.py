@@ -1,0 +1,107 @@
+"""Primitive layers: RMSNorm, rotary embeddings, gated MLP, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamBuilder
+
+
+# -- RMSNorm -------------------------------------------------------------------
+
+def rmsnorm_init(b: ParamBuilder, name: str, dim: int):
+    b.scope(name).param("scale", (dim,), ("embed",), init="ones")
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# -- Rotary position embeddings --------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- Gated (SwiGLU) MLP -----------------------------------------------------------
+
+def mlp_init(b: ParamBuilder, name: str, d_model: int, d_ff: int):
+    s = b.scope(name)
+    s.param("w_gate", (d_model, d_ff), ("embed", "ffn"))
+    s.param("w_up", (d_model, d_ff), ("embed", "ffn"))
+    s.param("w_down", (d_ff, d_model), ("ffn", "embed"))
+
+
+def mlp(params, x: jax.Array, compute_dtype) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(compute_dtype))
+
+
+# -- Embedding / LM head ------------------------------------------------------------
+
+def embed_init(b: ParamBuilder, name: str, vocab: int, d_model: int,
+               n_codebooks: int = 0):
+    s = b.scope(name)
+    if n_codebooks > 0:
+        s.param("tok", (n_codebooks, vocab, d_model), (None, "vocab", "embed"),
+                scale=d_model ** -0.5)
+    else:
+        s.param("tok", (vocab, d_model), ("vocab", "embed"), scale=d_model ** -0.5)
+
+
+def embed(params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    tok = params["tok"].astype(compute_dtype)
+    if tok.ndim == 3:            # audio: (n_q, V, d), tokens (b, s, n_q)
+        per_cb = jnp.einsum("bsqv,qvd->bsd",
+                            jax.nn.one_hot(tokens, tok.shape[1], dtype=compute_dtype),
+                            tok)
+        return per_cb
+    return tok[tokens]
+
+
+def head_init(b: ParamBuilder, name: str, d_model: int, vocab: int,
+              n_codebooks: int = 0):
+    s = b.scope(name)
+    if n_codebooks > 0:
+        s.param("w", (n_codebooks, d_model, vocab), (None, "embed", "vocab"))
+    else:
+        s.param("w", (d_model, vocab), ("embed", "vocab"))
+
+
+def head(params, x: jax.Array, compute_dtype, softcap: float = 0.0) -> jax.Array:
+    w = params["w"].astype(compute_dtype)
+    if w.ndim == 3:              # audio: logits (b, s, n_q, V)
+        logits = jnp.einsum("bsd,qdv->bsqv", x, w)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, w)
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def tied_head(embed_params, x: jax.Array, compute_dtype, softcap: float = 0.0):
+    tok = embed_params["tok"].astype(compute_dtype)
+    logits = jnp.einsum("...d,vd->...v", x, tok)
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

@@ -1,0 +1,105 @@
+"""Top-k mixture-of-experts FFN with capacity-based scatter dispatch.
+
+Expert weights live under the ``experts`` scope and are the one part of the
+parameter tree that does NOT get a WASGD worker dimension: they are a single
+expert-parallel copy sharded over the worker ("data") axis (DESIGN.md §4.1).
+Token dispatch across that axis is what produces the all-to-all traffic in
+the dry-run HLO.
+
+Dispatch is sort-based: tokens are ranked within their expert via an argsort
+over expert ids, dropped beyond capacity, scattered into an (E, C, d) buffer,
+processed by a gated MLP einsum over all experts, and combined back with
+router gates. This is the standard capacity-factor formulation (Switch/GShard
+lineage) expressed in pure ``jax.lax`` ops so it lowers on any backend.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.param import ParamBuilder
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+    dropped_fraction: jax.Array
+
+
+def moe_init(b: ParamBuilder, name: str, d_model: int, m: MoEConfig):
+    s = b.scope(name)
+    s.param("router", (d_model, m.n_experts), ("embed", None), scale=0.02)
+    e = s.scope("experts")
+    e.param("w_gate", (m.n_experts, d_model, m.d_ff_expert),
+            ("experts", "embed", "expert_ffn"))
+    e.param("w_up", (m.n_experts, d_model, m.d_ff_expert),
+            ("experts", "embed", "expert_ffn"))
+    e.param("w_down", (m.n_experts, m.d_ff_expert, d_model),
+            ("experts", "expert_ffn", "embed"))
+
+
+def _capacity(n_tokens: int, m: MoEConfig) -> int:
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)          # round up to a multiple of 8
+
+
+def moe_ffn(params, x: jax.Array, m: MoEConfig, compute_dtype
+            ) -> Tuple[jax.Array, MoEAux]:
+    """x: (b, s, d) -> (b, s, d) plus auxiliary losses."""
+    b, s, d = x.shape
+    T = b * s
+    E, K = m.n_experts, m.top_k
+    C = _capacity(T, m)
+    xf = x.reshape(T, d)
+
+    router = params["router"].astype(jnp.float32)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)              # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                  # renormalize
+
+    # -- aux losses (Switch-style) ---------------------------------------------
+    me = probs.mean(axis=0)                                      # (E,)
+    ce = jnp.zeros(E).at[expert_idx.reshape(-1)].add(1.0) / (T * K)
+    load_balance = E * jnp.sum(me * ce) * m.load_balance_loss
+    z_loss = m.router_z_loss * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # -- rank tokens within their expert (sort-based) ----------------------------
+    flat_e = expert_idx.reshape(-1)                              # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)                     # slots sorted by expert
+    sorted_e = flat_e[order]
+    # position within the expert segment:
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank_sorted = jnp.arange(T * K) - seg_start[sorted_e]
+    rank = jnp.zeros(T * K, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)             # E*C = drop bin
+
+    # -- dispatch: scatter tokens into (E*C+1, d) ----------------------------------
+    tok_of_slotk = jnp.repeat(jnp.arange(T), K)                  # (T*K,)
+    buf = jnp.zeros((E * C + 1, d), compute_dtype)
+    buf = buf.at[slot].add(xf.astype(compute_dtype)[tok_of_slotk])
+    buf = buf[: E * C].reshape(E, C, d)
+
+    # -- expert computation (gated MLP over all experts) -----------------------------
+    ep = params["experts"]
+    g = jnp.einsum("ecd,edf->ecf", buf, ep["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, ep["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, ep["w_down"].astype(compute_dtype))
+
+    # -- combine: gather back and weight by gates --------------------------------------
+    out_flat = out_buf.reshape(E * C, d)
+    safe_slot = jnp.minimum(slot, E * C - 1)
+    gathered = jnp.where(keep[:, None], out_flat[safe_slot], 0.0)  # (T*K, d)
+    combined = (gathered.reshape(T, K, d)
+                * gate_vals[..., None].astype(compute_dtype)).sum(axis=1)
+
+    aux = MoEAux(load_balance, z_loss,
+                 1.0 - keep.astype(jnp.float32).mean())
+    return combined.reshape(b, s, d).astype(x.dtype), aux

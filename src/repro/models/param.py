@@ -1,0 +1,115 @@
+"""Parameter construction with logical-axis bookkeeping.
+
+``ParamBuilder`` creates parameter leaves and records, in a parallel pytree of
+the same structure, the tuple of *logical axis names* for every leaf. The
+launcher resolves those names against a mesh + rules table to produce
+``NamedSharding``s for ``jax.jit(in_shardings=...)`` — no hand-written
+PartitionSpecs anywhere in the model code.
+
+Running an ``init_fn(builder)`` under ``jax.eval_shape`` yields the abstract
+parameter tree (ShapeDtypeStructs) *and*, by side effect, the axes tree —
+which is how the multi-pod dry-run gets full-size parameter specs without
+allocating 480B parameters.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Axes = Tuple[Optional[str], ...]
+
+
+class ParamBuilder:
+    def __init__(self, key: jax.Array, param_dtype=jnp.float32, path: str = "",
+                 params: Optional[Dict] = None, axes: Optional[Dict] = None):
+        self._key = key
+        self.param_dtype = param_dtype
+        self._path = path
+        self.params: Dict = {} if params is None else params
+        self.axes: Dict = {} if axes is None else axes
+
+    # -- scoping --------------------------------------------------------------
+    def scope(self, name: str) -> "ParamBuilder":
+        sub_p = self.params.setdefault(name, {})
+        sub_a = self.axes.setdefault(name, {})
+        child = ParamBuilder(self._next_key(), self.param_dtype,
+                             f"{self._path}/{name}", sub_p, sub_a)
+        return child
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- leaf creation ----------------------------------------------------------
+    def param(self, name: str, shape: Tuple[int, ...], axes: Axes,
+              init: str = "normal", scale: Optional[float] = None) -> jax.Array:
+        assert len(shape) == len(axes), (self._path, name, shape, axes)
+        if name in self.params:
+            raise ValueError(f"duplicate param {self._path}/{name}")
+        if init == "normal":
+            std = scale if scale is not None else shape[0] ** -0.5
+            v = jax.random.normal(self._next_key(), shape, self.param_dtype) * std
+        elif init == "zeros":
+            v = jnp.zeros(shape, self.param_dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, self.param_dtype)
+        elif init == "uniform":
+            lim = scale if scale is not None else 1.0
+            v = jax.random.uniform(self._next_key(), shape, self.param_dtype,
+                                   minval=-lim, maxval=lim)
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        self.params[name] = v
+        self.axes[name] = axes
+        return v
+
+
+def build(init_fn: Callable[[ParamBuilder], None], key: jax.Array,
+          param_dtype=jnp.float32):
+    """Run ``init_fn`` concretely; returns (params, axes)."""
+    b = ParamBuilder(key, param_dtype)
+    init_fn(b)
+    return b.params, b.axes
+
+
+def build_abstract(init_fn: Callable[[ParamBuilder], None], param_dtype=jnp.float32):
+    """Shape-only init: returns (ShapeDtypeStruct tree, axes tree). No allocation."""
+    axes_box: Dict = {}
+
+    def run(key):
+        b = ParamBuilder(key, param_dtype)
+        init_fn(b)
+        axes_box.update(b.axes)
+        return b.params
+
+    shapes = jax.eval_shape(run, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return shapes, axes_box
+
+
+def add_worker_axis(shapes, axes, n_workers: int, skip: Callable[[str], bool] = None):
+    """Prefix every parameter leaf with the WASGD worker dimension.
+
+    ``skip(path)`` selects leaves that stay single-copy (e.g. expert weights
+    under expert parallelism — see DESIGN.md §4.1).
+    """
+    def _walk(s, a, path):
+        if isinstance(s, dict):
+            return (
+                {k: _walk(s[k], a[k], f"{path}/{k}")[0] for k in s},
+                {k: _walk(s[k], a[k], f"{path}/{k}")[1] for k in s},
+            )
+        if skip is not None and skip(path):
+            return s, a
+        new_s = jax.ShapeDtypeStruct((n_workers,) + tuple(s.shape), s.dtype) \
+            if isinstance(s, jax.ShapeDtypeStruct) else \
+            jnp.broadcast_to(s, (n_workers,) + s.shape)
+        return new_s, ("worker",) + tuple(a)
+
+    return _walk(shapes, axes, "")
+
+
+def is_expert_path(path: str) -> bool:
+    """Leaves that are expert-parallel single copies (no worker dim)."""
+    return "/experts/" in path or path.endswith("/experts")

@@ -1,0 +1,218 @@
+"""Mamba2 mixer — SSD (state-space duality) chunked algorithm [arXiv:2405.21060].
+
+Training/prefill runs the chunked form: quadratic attention-like blocks within
+chunks of length L plus a linear recurrence over chunk states — O(s·L) instead
+of O(s²), MXU-friendly einsums. Decode carries an O(1) recurrent state, which
+is what makes the ``long_500k`` shape native for SSM/hybrid architectures.
+
+``ssd_reference`` is the naive per-step recurrence used as the correctness
+oracle in tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.param import ParamBuilder
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state."""
+    s: jax.Array            # (b, nh, ds, hd)
+    conv: jax.Array         # (b, conv_width-1, di + 2*ds)
+
+
+def ssm_init(b: ParamBuilder, name: str, d_model: int, cfg: SSMConfig):
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    ds = cfg.d_state
+    s = b.scope(name)
+    s.param("in_proj", (d_model, 2 * di + 2 * ds + nh), ("embed", "ssm_heads"))
+    s.param("conv_w", (cfg.conv_width, di + 2 * ds), ("conv", "ssm_heads"))
+    s.param("conv_b", (di + 2 * ds,), ("ssm_heads",), init="zeros")
+    s.param("A_log", (nh,), ("ssm_heads",), init="uniform", scale=1.0)
+    s.param("D", (nh,), ("ssm_heads",), init="ones")
+    s.param("dt_bias", (nh,), ("ssm_heads",), init="zeros")
+    s.param("norm_scale", (di,), ("ssm_heads",), init="ones")
+    s.param("out_proj", (di, d_model), ("ssm_heads", "embed"))
+
+
+def _split_proj(proj: jax.Array, di: int, ds: int, nh: int):
+    z = proj[..., :di]
+    xBC = proj[..., di:2 * di + 2 * ds]
+    dt = proj[..., 2 * di + 2 * ds:]
+    assert dt.shape[-1] == nh
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, bias: jax.Array,
+                 history: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d. xBC: (b, s, ch); w: (width, ch)."""
+    width = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((xBC.shape[0], width - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = history.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)                    # (b, s+w-1, ch)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(out + bias)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+
+
+def ssd_chunked(xs: jax.Array, dt: jax.Array, a: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xs: (b, s, nh, hd); dt: (b, s, nh); a: (nh,) negative;
+    B, C: (b, s, ds).  Returns (y (b, s, nh, hd), final_state (b, nh, ds, hd)).
+    """
+    b, s, nh, hd = xs.shape
+    ds = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xs = xs.reshape(b, nc, chunk, nh, hd).astype(jnp.float32)
+    dt = dt.reshape(b, nc, chunk, nh).astype(jnp.float32)
+    B = B.reshape(b, nc, chunk, ds).astype(jnp.float32)
+    C = C.reshape(b, nc, chunk, ds).astype(jnp.float32)
+
+    ll = dt * a                                              # (b, nc, L, nh) log-decay
+    cum = jnp.cumsum(ll, axis=2)                             # inclusive
+    total = cum[:, :, -1]                                    # (b, nc, nh)
+
+    # within-chunk (diagonal blocks)
+    cb = jnp.einsum("bnls,bnms->bnlm", C, B)                 # (b, nc, L, L)
+    dmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (b, nc, L, L, nh) i,j
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    att = jnp.where(mask[None, None, :, :, None],
+                    jnp.exp(dmat), 0.0) * cb[..., None] * dt[:, :, None, :, :]
+    y_diag = jnp.einsum("bnlmh,bnmhd->bnlhd", att, xs)
+
+    # chunk end-states
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)       # (b, nc, L, nh)
+    states = jnp.einsum("bnlh,bnls,bnlhd->bnhsd",
+                        decay_to_end * dt, B, xs)            # (b, nc, nh, ds, hd)
+
+    # inter-chunk recurrence
+    s0 = jnp.zeros((b, nh, ds, hd), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st, tot = inp                                        # (b,nh,ds,hd), (b,nh)
+        prev = carry
+        new = jnp.exp(tot)[:, :, None, None] * prev + st
+        return new, prev
+
+    final, prevs = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    prevs = prevs.transpose(1, 0, 2, 3, 4)                   # (b, nc, nh, ds, hd)
+
+    # off-diagonal: contribution of previous chunks' state
+    y_off = jnp.einsum("bnls,bnhsd,bnlh->bnlhd", C, prevs, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, s, nh, hd)
+    return y, final
+
+
+def ssd_reference(xs, dt, a, B, C, init_state=None):
+    """Naive per-step recurrence (oracle)."""
+    b, s, nh, hd = xs.shape
+    ds = B.shape[-1]
+    st = jnp.zeros((b, nh, ds, hd), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+    xs, dt, B, C = (t.astype(jnp.float32) for t in (xs, dt, B, C))
+
+    def step(st, inp):
+        x_t, dt_t, b_t, c_t = inp                            # (b,nh,hd),(b,nh),(b,ds),(b,ds)
+        da = jnp.exp(dt_t * a)                               # (b, nh)
+        st = da[:, :, None, None] * st + jnp.einsum(
+            "bh,bs,bhd->bhsd", dt_t, b_t, x_t)
+        y = jnp.einsum("bs,bhsd->bhd", c_t, st)
+        return st, y
+
+    st, ys = jax.lax.scan(step, st,
+                          (xs.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                           B.transpose(1, 0, 2), C.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), st
+
+
+def ssm_layer(params, x: jax.Array, cfg: SSMConfig, d_model: int, compute_dtype,
+              state: Optional[SSMState] = None
+              ) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full Mamba2 mixer. x: (b, s, d). state given => decode (s == 1)."""
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    ds = cfg.d_state
+    hd = cfg.head_dim
+
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(compute_dtype))
+    z, xBC, dt_raw = _split_proj(proj, di, ds, nh)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))        # (nh,) < 0
+    D = params["D"].astype(jnp.float32)
+
+    if state is None:
+        xBC = _causal_conv(xBC, params["conv_w"].astype(compute_dtype),
+                           params["conv_b"].astype(compute_dtype))
+        xin, B, C = xBC[..., :di], xBC[..., di:di + ds], xBC[..., di + ds:]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))
+        xs = xin.reshape(*xin.shape[:2], nh, hd)
+        s_len = xs.shape[1]
+        pad = (-s_len) % cfg.chunk_size
+        if pad:
+            # dt is padded AFTER softplus: dt=0 => decay 1, contribution 0
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+            C_p = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+            y, _ = ssd_chunked(xs_p, dt_p, a, B_p, C_p, cfg.chunk_size)
+            y = y[:, :s_len]
+        else:
+            y, _ = ssd_chunked(xs, dt, a, B, C, cfg.chunk_size)
+        y = y + D[:, None] * xs.astype(jnp.float32)
+        y = y.reshape(*x.shape[:2], di)
+        out = _gated_norm(y, z, params["norm_scale"])
+        new_state = None
+    else:
+        # decode: O(1) recurrent update
+        hist = state.conv
+        xBC_t = _causal_conv(xBC, params["conv_w"].astype(compute_dtype),
+                             params["conv_b"].astype(compute_dtype),
+                             history=hist)
+        new_conv = jnp.concatenate([hist[:, 1:], xBC.astype(hist.dtype)], axis=1)
+        xin, B, C = xBC_t[..., :di], xBC_t[..., di:di + ds], xBC_t[..., di + ds:]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))
+        xs = xin.reshape(x.shape[0], nh, hd).astype(jnp.float32)
+        dt1 = dt[:, 0]                                       # (b, nh)
+        b1 = B[:, 0].astype(jnp.float32)
+        c1 = C[:, 0].astype(jnp.float32)
+        da = jnp.exp(dt1 * a)
+        s_new = da[:, :, None, None] * state.s.astype(jnp.float32) + \
+            jnp.einsum("bh,bs,bhd->bhsd", dt1, b1, xs)
+        y = jnp.einsum("bs,bhsd->bhd", c1, s_new) + D[:, None] * xs
+        y = y.reshape(x.shape[0], 1, di)
+        out = _gated_norm(y, z, params["norm_scale"])
+        new_state = SSMState(s_new.astype(state.s.dtype), new_conv)
+
+    y_out = jnp.einsum("bsk,kd->bsd", out.astype(compute_dtype),
+                       params["out_proj"].astype(compute_dtype))
+    return y_out.astype(x.dtype), new_state
+
+
+def init_ssm_state(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32
+                   ) -> SSMState:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    return SSMState(
+        s=jnp.zeros((batch, nh, cfg.d_state, cfg.head_dim), dtype),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, di + 2 * cfg.d_state), dtype),
+    )

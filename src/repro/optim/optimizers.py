@@ -1,0 +1,121 @@
+"""Native pytree optimizers (no optax): SGD, momentum-SGD, AdamW.
+
+The paper's method is defined over plain SGD (Eq. 10 subtracts eta*g after
+the aggregation); momentum/AdamW are provided for the substrate's generality.
+Optimizer state is element-wise, so the WASGD worker dimension is transparent.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Dict], Any]
+    update: Callable[[Dict, Any, Dict], Tuple[Dict, Any]]
+    name: str
+
+
+def _tree_zeros(params):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Scale the whole gradient pytree so its global norm <= max_norm."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def lr_schedule(kind: str, base_lr: float, warmup_steps: int = 0,
+                total_steps: int = 10000, min_ratio: float = 0.1
+                ) -> Callable[[jax.Array], jax.Array]:
+    """constant | linear_warmup | cosine (with linear warmup)."""
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup_steps, 1))
+        if kind == "constant":
+            return base_lr * (warm if warmup_steps else 1.0)
+        if kind == "linear_warmup":
+            return base_lr * warm
+        if kind == "cosine":
+            t = jnp.clip((step - warmup_steps)
+                         / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+            cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+            return base_lr * warm * (min_ratio + (1 - min_ratio) * cos)
+        raise ValueError(kind)
+    return fn
+
+
+def make_optimizer(name: str = "sgd", learning_rate: float = 1e-3,
+                   momentum: float = 0.9, weight_decay: float = 0.0,
+                   b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+                   ) -> Optimizer:
+    lr = learning_rate
+
+    if name == "sgd":
+        def init(params):
+            return ()
+
+        def update(grads, state, params):
+            new_p = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * (g.astype(jnp.float32)
+                                      + weight_decay * p.astype(jnp.float32))
+                              ).astype(p.dtype),
+                params, grads)
+            return new_p, state
+
+    elif name == "momentum":
+        def init(params):
+            return _tree_zeros(params)
+
+        def update(grads, state, params):
+            new_m = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state, grads)
+            new_p = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                params, new_m)
+            return new_p, new_m
+
+    elif name == "adamw":
+        class AdamState(NamedTuple):
+            mu: Dict
+            nu: Dict
+            count: jax.Array
+
+        def init(params):
+            return AdamState(_tree_zeros(params), _tree_zeros(params),
+                             jnp.zeros((), jnp.int32))
+
+        def update(grads, state, params):
+            count = state.count + 1
+            mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) *
+                              g.astype(jnp.float32), state.mu, grads)
+            nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                              jnp.square(g.astype(jnp.float32)),
+                              state.nu, grads)
+            c1 = 1 - b1 ** count.astype(jnp.float32)
+            c2 = 1 - b2 ** count.astype(jnp.float32)
+
+            def upd(p, m, v):
+                step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+                return (p.astype(jnp.float32)
+                        - lr * (step + weight_decay * p.astype(jnp.float32))
+                        ).astype(p.dtype)
+
+            return (jax.tree.map(upd, params, mu, nu),
+                    AdamState(mu, nu, count))
+    else:
+        raise ValueError(f"unknown optimizer {name!r}")
+
+    return Optimizer(init, update, name)

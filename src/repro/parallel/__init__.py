@@ -1,0 +1,19 @@
+from repro.parallel.sharding import (
+    SERVE_LONG_RULES,
+    SERVE_RULES,
+    TRAIN_RULES,
+    num_workers,
+    sharding_for,
+    spec_for,
+    tree_shardings,
+)
+
+__all__ = [
+    "SERVE_LONG_RULES",
+    "SERVE_RULES",
+    "TRAIN_RULES",
+    "num_workers",
+    "sharding_for",
+    "spec_for",
+    "tree_shardings",
+]

@@ -1,0 +1,57 @@
+"""Serving engine: batched prefill + token-by-token decode with per-layer
+KV caches (ring buffers for sliding-window layers) and SSM recurrent states.
+
+For trained WASGD checkpoints the served copy is worker 0's slice after a
+final beta=1 aggregation (all workers coincide — Sec. 4.1's tau-step fixed
+point), extracted with ``core.take_worker``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Dict, max_len: int = 2048,
+                 cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self._prefill = jax.jit(functools.partial(prefill, cfg))
+        self._decode = jax.jit(functools.partial(decode_step, cfg))
+
+    def generate(self, prompt: np.ndarray, n_new: int,
+                 media: Optional[np.ndarray] = None,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """prompt: (b, s) int32 (or (b, s, n_q) audio). Greedy if T == 0."""
+        b, s = prompt.shape[:2]
+        cache = init_cache(self.cfg, b, self.max_len, self.cache_dtype)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompt), cache,
+                                      media)
+        key = jax.random.key(seed)
+        out = [self._sample(logits, temperature, key)]
+        index = s
+        for t in range(n_new - 1):
+            key, sub = jax.random.split(key)
+            tok = out[-1]
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(index), media)
+            out.append(self._sample(logits, temperature, sub))
+            index += 1
+        return np.concatenate([np.asarray(t) for t in out], axis=1)
+
+    def _sample(self, logits, temperature, key):
+        logits = logits[:, -1:] if logits.shape[1] > 1 else logits
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)

@@ -1,0 +1,17 @@
+from repro.train.state import TrainState, init_state
+from repro.train.step import (
+    build_train_step,
+    easgd_rule,
+    init_comm_state,
+    mwu_rule,
+    no_comm_rule,
+    spsgd_rule,
+    wasgd_rule,
+)
+from repro.train.trainer import RULES, Trainer
+
+__all__ = [
+    "TrainState", "init_state", "build_train_step", "easgd_rule",
+    "init_comm_state", "mwu_rule", "no_comm_rule", "spsgd_rule",
+    "wasgd_rule", "RULES", "Trainer",
+]

@@ -1,0 +1,54 @@
+"""Evaluation harness: held-out perplexity / accuracy for LM checkpoints
+(worker-0 slice or the aggregated consensus)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import take_worker, weighted_aggregate, equal_weights
+from repro.models import loss_fn as lm_loss
+
+
+def consensus_params(params: Dict, axes: Dict) -> Dict:
+    """Final beta=1 equal aggregation, then worker 0's slice — the served
+    copy (all workers coincide after a beta=1 communication, Sec. 4.1)."""
+    w = None
+    for leaf, ax in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(axes, is_leaf=lambda x: isinstance(
+                            x, tuple))):
+        if isinstance(ax, tuple) and ax and ax[0] == "worker":
+            w = leaf.shape[0]
+            break
+    if w is None:
+        return params
+    agg = weighted_aggregate(params, axes, equal_weights(w), beta=1.0)
+    return take_worker(agg, axes, 0)
+
+
+def evaluate_lm(cfg: ModelConfig, params: Dict, batches, n_batches: int = 8
+                ) -> Dict[str, float]:
+    """Mean NLL / perplexity / next-token accuracy over held-out batches."""
+    @jax.jit
+    def eval_batch(p, batch):
+        loss, metrics = lm_loss(cfg, p, batch)
+        from repro.models import forward
+        logits, _ = forward(cfg, p, batch["tokens"], batch.get("media"))
+        pred = jnp.argmax(logits, axis=-1)
+        acc = (pred == batch["labels"]).mean()
+        return metrics["ce"], acc
+
+    nlls, accs = [], []
+    for _ in range(n_batches):
+        batch = next(batches)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        nll, acc = eval_batch(params, batch)
+        nlls.append(float(nll))
+        accs.append(float(acc))
+    nll = float(np.mean(nlls))
+    return {"nll": nll, "ppl": float(np.exp(min(nll, 30.0))),
+            "acc": float(np.mean(accs))}

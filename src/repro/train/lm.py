@@ -1,0 +1,82 @@
+"""LM glue: wire a ModelConfig into the WASGD round builder, and produce the
+abstract (ShapeDtypeStruct) state + logical-axes trees the multi-pod dry-run
+lowers against — full-size parameters are never allocated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import abstract_params, loss_fn as lm_loss
+from repro.models.param import add_worker_axis, is_expert_path
+from repro.optim import Optimizer, make_optimizer
+from repro.train.state import TrainState
+
+
+def make_lm_loss(cfg: ModelConfig):
+    def loss(params, batch):
+        return lm_loss(cfg, params, batch)
+    return loss
+
+
+def opt_axes_like(opt_name: str, opt_shapes, param_axes):
+    """Logical axes for the optimizer state (mirrors params where stateful)."""
+    if opt_name == "sgd":
+        return ()
+    if opt_name == "momentum":
+        return param_axes
+    if opt_name == "adamw":
+        return type(opt_shapes)(mu=param_axes, nu=param_axes, count=())
+    raise ValueError(opt_name)
+
+
+def abstract_lm_state(cfg: ModelConfig, tcfg: TrainConfig, n_workers: int
+                      ) -> Tuple[TrainState, TrainState, Optimizer]:
+    """(state ShapeDtypeStructs, state logical-axes, optimizer)."""
+    shapes, axes = abstract_params(cfg)
+    skip = is_expert_path if (cfg.moe is not None
+                              and cfg.expert_sharding == "ep_data") else None
+    shapes, axes = add_worker_axis(shapes, axes, n_workers, skip=skip)
+    optimizer = make_optimizer(tcfg.optimizer, tcfg.learning_rate,
+                               tcfg.momentum, tcfg.weight_decay)
+    opt_shapes = jax.eval_shape(optimizer.init, shapes)
+    o_axes = opt_axes_like(optimizer.name, opt_shapes, axes)
+
+    state_shapes = TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=shapes,
+        opt_state=opt_shapes,
+        energy=jax.ShapeDtypeStruct((n_workers,), jnp.float32),
+        comm_state=(),
+    )
+    state_axes = TrainState(
+        step=(),
+        params=axes,
+        opt_state=o_axes,
+        energy=("worker",),
+        comm_state=(),
+    )
+    return state_shapes, state_axes, optimizer
+
+
+def lm_batch_specs(cfg: ModelConfig, global_batch: int, seq_len: int
+                   ) -> Tuple[Dict, Dict]:
+    """(batch ShapeDtypeStructs, batch logical-axes) for one training round."""
+    if cfg.n_codebooks > 0:
+        tok = jax.ShapeDtypeStruct((global_batch, seq_len, cfg.n_codebooks),
+                                   jnp.int32)
+        tok_axes = ("worker", None, None)
+    else:
+        tok = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+        tok_axes = ("worker", None)
+    shapes = {"tokens": tok, "labels": tok}
+    axes = {"tokens": tok_axes, "labels": tok_axes}
+    if cfg.n_media_tokens > 0:
+        shapes["media"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_media_tokens, cfg.d_model), jnp.bfloat16)
+        axes["media"] = ("worker", None, None)
+    return shapes, axes

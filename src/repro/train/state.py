@@ -1,0 +1,26 @@
+"""Training state for WASGD rounds."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # round counter (int32 scalar)
+    params: Dict             # worker-stacked parameter tree
+    opt_state: Any
+    energy: jax.Array        # (p,) accumulated loss energies (reset per round)
+    comm_state: Any          # rule-specific (EASGD center, MWU weights, ())
+
+
+def init_state(params: Dict, opt_state: Any, n_workers: int,
+               comm_state: Any = ()) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=opt_state,
+        energy=jnp.zeros((n_workers,), jnp.float32),
+        comm_state=comm_state,
+    )

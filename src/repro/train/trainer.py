@@ -1,0 +1,104 @@
+"""Host-side training loop: rounds, order search, checkpointing.
+
+The device side (one WASGD round) is ``train/step.py``; the Trainer drives
+it with batches whose per-worker sample order comes from the paper's
+``Judge``/``OrderGen`` search (core/order.py), and feeds the round's Judge
+scores back into the order state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig, WASGDConfig
+from repro.core import replicate_workers
+from repro.core.order import OrderState
+from repro.optim import make_optimizer
+from repro.train.state import TrainState, init_state
+from repro.train.step import build_train_step, init_comm_state, wasgd_rule
+from repro.train import step as step_mod
+
+
+RULES = {
+    "wasgd": lambda tcfg: step_mod.wasgd_rule(tcfg.wasgd),
+    "wasgd+": lambda tcfg: step_mod.wasgd_rule(tcfg.wasgd),
+    "spsgd": lambda tcfg: step_mod.spsgd_rule(),
+    "easgd": lambda tcfg: step_mod.easgd_rule(alpha=0.9 / 16),
+    "omwu": lambda tcfg: step_mod.mwu_rule(),
+    "mmwu": lambda tcfg: step_mod.mwu_rule(),
+    "seq": lambda tcfg: step_mod.no_comm_rule(),
+}
+
+
+class Trainer:
+    def __init__(self, loss_fn, params: Dict, axes: Dict, tcfg: TrainConfig,
+                 n_workers: int, rule: str = "wasgd",
+                 replicate: bool = True, jit: bool = True,
+                 easgd_alpha: Optional[float] = None):
+        self.tcfg = tcfg
+        self.n_workers = n_workers
+        if replicate:
+            params, axes = replicate_workers(
+                params, axes, n_workers,
+                expert_copies=getattr(tcfg, "expert_copies", False))
+        self.axes = axes
+        self.optimizer = make_optimizer(
+            tcfg.optimizer, tcfg.learning_rate, tcfg.momentum,
+            tcfg.weight_decay)
+        opt_state = self.optimizer.init(params)
+        comm_state = init_comm_state(rule, params, axes, n_workers,
+                                     wcfg=tcfg.wasgd)
+        self.state: TrainState = init_state(params, opt_state, n_workers,
+                                            comm_state)
+        if rule == "easgd" and easgd_alpha is not None:
+            rule_fn = step_mod.easgd_rule(easgd_alpha)
+        else:
+            rule_fn = RULES[rule](tcfg)
+        self._step = build_train_step(loss_fn, self.optimizer, axes,
+                                      tcfg.wasgd, n_workers, rule=rule_fn)
+        if jit:
+            self._step = jax.jit(self._step, donate_argnums=(0,))
+        self.history: list = []
+
+    def run(self, batches: Iterator[Dict], n_rounds: int,
+            order_state: Optional[OrderState] = None,
+            segment_fn: Optional[Callable[[int], int]] = None,
+            log_every: int = 0, metrics_path: Optional[str] = None,
+            checkpoint_every: int = 0,
+            checkpoint_path: Optional[str] = None) -> Dict:
+        t0 = time.time()
+        mf = open(metrics_path, "a") if metrics_path else None
+        for r in range(n_rounds):
+            batch = next(batches)
+            self.state, metrics = self._step(self.state, batch)
+            rec = {k: np.asarray(v) for k, v in metrics.items()}
+            rec["round"] = r
+            self.history.append(rec)
+            if order_state is not None:
+                seg = segment_fn(r) if segment_fn else 0
+                order_state.record_scores(seg, rec["scores"])
+            if mf is not None:
+                mf.write(json.dumps(
+                    {k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                     for k, v in rec.items()}) + "\n")
+                mf.flush()
+            if checkpoint_every and checkpoint_path \
+                    and (r + 1) % checkpoint_every == 0:
+                from repro.checkpoint import save
+                save(os.path.join(checkpoint_path, f"round_{r+1}"),
+                     self.state.params, meta={"round": r + 1})
+            if log_every and (r + 1) % log_every == 0:
+                print(f"round {r+1}/{n_rounds} loss={rec['loss']:.4f} "
+                      f"theta_entropy={rec['theta_entropy']:.3f}")
+        if mf is not None:
+            mf.close()
+        return {"rounds": n_rounds, "wall": time.time() - t0,
+                "final_loss": float(self.history[-1]["loss"])}
+
+    def losses(self) -> np.ndarray:
+        return np.array([h["loss"] for h in self.history])

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Make `repro` importable without installation (PYTHONPATH=src also works).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests must see the real single CPU device — never the dry-run's 512
+# placeholders (the dry-run sets its own XLA_FLAGS before any import).

@@ -1,0 +1,107 @@
+"""Weighted aggregation (Eq. 10) semantics + worker-tree plumbing."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (aggregate_leaf, equal_weights, replicate_workers,
+                        take_worker, weighted_aggregate, worker_in_axes)
+from repro.core.aggregate import strip_worker_axis
+
+
+def _tree(p=4):
+    params = {"a": {"w": jnp.arange(p * 6, dtype=jnp.float32).reshape(p, 2, 3)},
+              "experts": {"w_up": jnp.ones((2, 3))}}
+    axes = {"a": {"w": ("worker", None, None)},
+            "experts": {"w_up": ("experts", None)}}
+    return params, axes
+
+
+def test_beta1_equal_is_mean():
+    params, axes = _tree()
+    th = equal_weights(4)
+    out = weighted_aggregate(params, axes, th, beta=1.0)
+    mean = params["a"]["w"].mean(0)
+    for i in range(4):
+        np.testing.assert_allclose(out["a"]["w"][i], mean, rtol=1e-6)
+
+
+def test_beta0_identity():
+    params, axes = _tree()
+    th = jnp.array([0.1, 0.2, 0.3, 0.4])
+    out = weighted_aggregate(params, axes, th, beta=0.0)
+    np.testing.assert_allclose(out["a"]["w"], params["a"]["w"])
+
+
+def test_expert_leaves_untouched():
+    params, axes = _tree()
+    out = weighted_aggregate(params, axes, equal_weights(4), beta=1.0)
+    np.testing.assert_allclose(out["experts"]["w_up"],
+                               params["experts"]["w_up"])
+
+
+def test_eq10_matches_manual():
+    x = jnp.array([[1.0, 2.0], [3.0, 4.0], [5.0, 6.0]])
+    th = jnp.array([0.5, 0.3, 0.2])
+    beta = 0.7
+    agg = (th[:, None] * x).sum(0)
+    expected = (1 - beta) * x + beta * agg[None]
+    np.testing.assert_allclose(aggregate_leaf(x, th, beta), expected,
+                               rtol=1e-6)
+
+
+def test_quantized_aggregation_close():
+    x = jax.random.normal(jax.random.key(0), (4, 256))
+    th = jax.nn.softmax(jnp.arange(4.0))
+    exact = aggregate_leaf(x, th, 0.9)
+    quant = aggregate_leaf(x, th, 0.9, quantize=True)
+    err = np.abs(np.asarray(exact - quant)).max()
+    assert err < 0.05  # int8 with per-leaf scale: ~x.max()/127 * beta
+
+
+def test_replicate_and_take_worker():
+    single = {"a": {"w": jnp.ones((2, 3))},
+              "moe": {"experts": {"w_up": jnp.ones((4, 2))}}}
+    axes = {"a": {"w": (None, None)},
+            "moe": {"experts": {"w_up": ("experts", None)}}}
+    stacked, st_axes = replicate_workers(single, axes, 3)
+    assert stacked["a"]["w"].shape == (3, 2, 3)
+    assert stacked["moe"]["experts"]["w_up"].shape == (4, 2)  # shared
+    assert st_axes["a"]["w"][0] == "worker"
+    back = take_worker(stacked, st_axes, 1)
+    np.testing.assert_allclose(back["a"]["w"], single["a"]["w"])
+
+
+def test_worker_in_axes_and_strip():
+    in_ax = worker_in_axes(_tree()[1])
+    assert in_ax["a"]["w"] == 0
+    assert in_ax["experts"]["w_up"] is None
+    stripped = strip_worker_axis(_tree()[1])
+    assert stripped["a"]["w"] == (None, None)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    p=st.integers(2, 8),
+    beta=st.floats(0.0, 1.0),
+    seed=st.integers(0, 1000),
+)
+def test_hyp_aggregate_preserves_weighted_mean(p, beta, seed):
+    """The theta-weighted mean is a fixed point of Eq. 10."""
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (p, 5))
+    th = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (p,)))
+    out = aggregate_leaf(x, th, beta)
+    np.testing.assert_allclose((th[:, None] * out).sum(0),
+                               (th[:, None] * x).sum(0), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.integers(2, 6), seed=st.integers(0, 100))
+def test_hyp_beta1_collapses_all_workers(p, seed):
+    """beta = 1: all workers coincide after one communication (Sec. 4.1)."""
+    x = jax.random.normal(jax.random.key(seed), (p, 7))
+    th = jax.nn.softmax(jax.random.normal(jax.random.key(seed + 1), (p,)))
+    out = np.asarray(aggregate_leaf(x, th, 1.0))
+    for i in range(1, p):
+        np.testing.assert_allclose(out[i], out[0], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,71 @@
+"""Alg. 4 async simulation: scheduling semantics + the paper's Sec. 3.5
+sync/async decision rule."""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.async_sim import StepTimeModel, run_parallel_sgd
+from repro.data import make_classification
+from repro.models import cnn
+from repro.models.param import build
+
+
+def _setup(seed=0):
+    X, y = make_classification(seed, 1024, d=16, n_classes=4)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=16, d_hidden=32, n_classes=4), jax.random.key(seed))
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(cnn.mlp_apply(p, b["x"]), b["y"]), {}
+
+    def grad_fn(ps, batch):
+        one = lambda p, b: loss_fn(p, b)[0]
+        losses = jax.vmap(one)(ps, batch)
+        grads = jax.grad(lambda q: jax.vmap(one)(q, batch).sum())(ps)
+        return losses, grads
+
+    def batches(w, n):
+        rng = np.random.default_rng(seed)
+        while True:
+            idx = rng.integers(0, len(X), size=(w, n))
+            yield {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return params, axes, loss_fn, jax.jit(grad_fn), batches
+
+
+def test_step_time_model_stragglers_increase_max():
+    uniform = StepTimeModel(8, sigma=0.01, seed=0).round_times(50)
+    spiky = StepTimeModel(8, sigma=0.01, straggle_p=0.1, straggle_mult=50,
+                          seed=0).round_times(50)
+    assert spiky.max() > uniform.max() * 5
+
+
+def test_async_gates_on_pth_arrival():
+    params, axes, loss_fn, grad_fn, batches = _setup()
+    tm = StepTimeModel(6, sigma=0.3, straggle_p=0.1, straggle_mult=30, seed=1)
+    sync = run_parallel_sgd(loss_fn, grad_fn, params, axes, batches(6, 8),
+                            n_workers=4, backups=2, tau=4, rounds=6, lr=0.05,
+                            time_model=StepTimeModel(6, sigma=0.3,
+                                                     straggle_p=0.1,
+                                                     straggle_mult=30, seed=1),
+                            synchronous=True)
+    asyn = run_parallel_sgd(loss_fn, grad_fn, params, axes, batches(6, 8),
+                            n_workers=4, backups=2, tau=4, rounds=6, lr=0.05,
+                            time_model=StepTimeModel(6, sigma=0.3,
+                                                     straggle_p=0.1,
+                                                     straggle_mult=30, seed=1),
+                            synchronous=False)
+    assert asyn.wall <= sync.wall             # p-th arrival <= max arrival
+    assert asyn.dropped_rounds == 2 * 6       # b backups excluded per round
+    assert np.isfinite(asyn.losses).all()
+
+
+def test_async_still_trains():
+    params, axes, loss_fn, grad_fn, batches = _setup(seed=2)
+    tm = StepTimeModel(6, seed=2)
+    out = run_parallel_sgd(loss_fn, grad_fn, params, axes, batches(6, 16),
+                           n_workers=4, backups=2, tau=4, rounds=15, lr=0.1,
+                           time_model=tm, synchronous=False)
+    assert out.losses[-1] < out.losses[0]

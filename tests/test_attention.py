@@ -1,0 +1,82 @@
+"""Attention substrate: chunked flash == naive softmax, sliding windows,
+GQA grouping, decode-vs-prefill consistency."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.attention import (decode_attention, flash_attention)
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k.astype(jnp.float32))
+    qpos, kpos = jnp.arange(sq), jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None] <= qpos[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None] < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bkgqd", p, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("kv", [1, 2, 8])
+def test_flash_matches_naive(window, kv):
+    b, s, h, hd = 2, 65, 8, 32
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    out = flash_attention(q, k, v, causal=True, window=window, block_k=32)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_unroll_same_result():
+    b, s, h, hd = 1, 48, 4, 16
+    key = jax.random.key(3)
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, 2, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, 2, hd))
+    a = flash_attention(q, k, v, block_k=16, unroll=False)
+    bu = flash_attention(q, k, v, block_k=16, unroll=True)
+    np.testing.assert_allclose(a, bu, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_matches_last_prefill_position():
+    """decode_attention over a cache == the last row of full attention."""
+    b, s, h, kv, hd = 2, 33, 4, 2, 16
+    key = jax.random.key(1)
+    q_all = jax.random.normal(key, (b, s, h, hd))
+    k_all = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v_all = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    full = naive_attention(q_all, k_all, v_all, causal=True)
+
+    S = 64   # cache capacity > s
+    k_cache = jnp.zeros((b, S, kv, hd)).at[:, :s].set(k_all)
+    v_cache = jnp.zeros((b, S, kv, hd)).at[:, :s].set(v_all)
+    dec = decode_attention(q_all[:, -1:], k_cache, v_cache,
+                           cache_len=jnp.int32(s))
+    np.testing.assert_allclose(dec[:, 0], full[:, -1], rtol=2e-5, atol=2e-5)
+
+
+def test_decode_window_masks_old_entries():
+    b, S, h, kv, hd, win = 1, 32, 2, 1, 8, 4
+    key = jax.random.key(2)
+    q = jax.random.normal(key, (b, 1, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, S, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, S, kv, hd))
+    cl = jnp.int32(20)
+    out = decode_attention(q, k, v, cl, window=win)
+    # equivalent: zero out everything but positions [16, 20)
+    k2 = jnp.zeros_like(k).at[:, 16:20].set(k[:, 16:20])
+    v2 = jnp.zeros_like(v).at[:, 16:20].set(v[:, 16:20])
+    ref = decode_attention(q, k2, v2, cl, window=win)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,95 @@
+"""Loss-energy estimation (Sec. 3.3, Alg. 2 RecordIndex) and the
+sample-order search (Sec. 3.4, Judge/OrderGen)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.energy import estimation_error, record_indices, record_mask
+from repro.core.order import (OrderState, grouped_order, judge_scores,
+                              permutation)
+
+
+def test_record_indices_alg2():
+    """tau=1000, m=100, c=4: the last 25 steps of each 250-step chunk."""
+    idx = record_indices(1000, 100, 4)
+    assert len(idx) == 100
+    for i in range(4):
+        end = (i + 1) * 250
+        chunk = idx[(idx >= i * 250) & (idx < end)]
+        assert len(chunk) == 25
+        assert chunk.min() == end - 25 and chunk.max() == end - 1
+
+
+def test_record_mask_small_round():
+    mask = np.asarray(record_mask(4, 100, 4))
+    assert mask.all()          # m >= tau: record everything
+
+
+def test_estimation_error_range():
+    t1 = jnp.array([0.5, 0.5])
+    t2 = jnp.array([1.0, 0.0])
+    assert float(estimation_error(t1, t1)) == 0.0
+    assert abs(float(estimation_error(t1, t2)) - 1.0) < 1e-6
+
+
+def test_judge_scores_standardized():
+    h = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0])
+    s = np.asarray(judge_scores(h))
+    np.testing.assert_allclose(s.mean(), 0.0, atol=1e-6)
+    np.testing.assert_allclose(s.std(ddof=1), 1.0, rtol=1e-5)
+    assert s[0] < -1.0 < s[-1]    # best worker scores below -1 here
+
+
+def test_orderstate_keeps_good_seeds():
+    st_ = OrderState(n_workers=4, n_segments=2, base_seed=0)
+    seeds_before = st_.seeds.copy()
+    st_.record_scores(0, np.array([-2.0, 0.5, 0.5, 1.0]))
+    kept = st_.end_segment(0)
+    assert kept.tolist() == [True, False, False, False]
+    assert st_.seeds[0, 0] == seeds_before[0, 0]          # good seed survives
+    assert (st_.seeds[0, 1:] != seeds_before[0, 1:]).all()  # others reshuffle
+    assert (st_.scores[0] == 0).all()
+
+
+def test_permutation_deterministic():
+    a = permutation(7, 100)
+    b = permutation(7, 100)
+    assert (a == b).all()
+    assert sorted(a.tolist()) == list(range(100))
+
+
+def test_grouped_order_runs():
+    labels = np.array([0] * 10 + [1] * 10)
+    order = grouped_order(labels, delta=5, seed=0)
+    assert sorted(order.tolist()) == list(range(20))
+    runs = labels[order]
+    # every run of 5 consecutive samples shares one label
+    for i in range(0, 20, 5):
+        assert len(set(runs[i:i + 5])) == 1
+
+
+def test_order_effect_figure2_toy():
+    """Paper Fig. 2: fitting y=d by SGD — interleaved sample order lands near
+    (a+b)/2, grouped order lands near the last group's value."""
+    a_val, b_val, lr = 1.0, 3.0, 0.4
+    samples_grouped = [b_val] * 6 + [a_val] * 6
+    samples_inter = [b_val, a_val] * 6
+
+    def run(samples):
+        d = 0.0
+        for s in samples:
+            d -= lr * (d - s)
+        return d
+
+    target = (a_val + b_val) / 2
+    assert abs(run(samples_inter) - target) < abs(run(samples_grouped) - target)
+    assert abs(run(samples_grouped) - a_val) < 0.3   # dragged to last group
+
+
+@settings(max_examples=30, deadline=None)
+@given(tau=st.integers(4, 2000), m=st.integers(1, 500), c=st.integers(1, 16))
+def test_hyp_record_indices_valid(tau, m, c):
+    idx = record_indices(tau, m, c)
+    assert len(idx) >= 1
+    assert idx.min() >= 0 and idx.max() < tau
+    assert len(set(idx.tolist())) == len(idx)

@@ -1,0 +1,202 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode on CPU), per the kernels/<name>/{kernel,ops,ref} contract."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attn import decode_attn, decode_attn_ref
+from repro.kernels.decode_attn.ops import decode_attention as decode_attn_op
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm
+from repro.kernels.wagg import wagg, wagg_ref
+
+
+# -- wagg -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("p,n,bn", [(2, 64, 64), (8, 1000, 256),
+                                    (16, 4096, 512), (32, 333, 128)])
+def test_wagg_sweep(p, n, bn, dtype):
+    key = jax.random.key(p * n)
+    x = jax.random.normal(key, (p, n), dtype)
+    theta = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (p,)))
+    for beta in (0.0, 0.5, 1.0):
+        out = wagg(x, theta, beta, block_n=bn)
+        ref = wagg_ref(x, theta, beta)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.integers(2, 16), n=st.integers(1, 300),
+       beta=st.floats(0.0, 1.0), seed=st.integers(0, 99))
+def test_hyp_wagg_arbitrary_shapes(p, n, beta, seed):
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    theta = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (p,)))
+    out = wagg(x, theta, beta, block_n=128)
+    np.testing.assert_allclose(out, wagg_ref(x, theta, beta),
+                               rtol=1e-4, atol=1e-5)
+
+
+# -- decode_attn ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,kv,g,hd,S,bs", [
+    (1, 1, 4, 64, 128, 64),
+    (2, 2, 4, 32, 300, 128),
+    (2, 8, 1, 128, 256, 256),   # MHA-style
+    (1, 1, 8, 256, 700, 512),   # gemma-style kv=1
+])
+def test_decode_attn_sweep(b, kv, g, hd, S, bs, dtype):
+    key = jax.random.key(b + S)
+    q = jax.random.normal(key, (b, kv, g, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, S, kv, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, S, kv, hd), dtype)
+    for cl in (1, S // 2, S):
+        out = decode_attn(q, k, v, jnp.int32(cl), block_s=bs)
+        ref = decode_attn_ref(q, k, v, jnp.int32(cl))
+        tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_decode_attn_window_sweep():
+    b, kv, g, hd, S = 1, 2, 2, 32, 200
+    key = jax.random.key(7)
+    q = jax.random.normal(key, (b, kv, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, S, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, S, kv, hd))
+    for cl, win in [(10, 4), (150, 64), (200, 128), (200, 1)]:
+        out = decode_attn(q, k, v, jnp.int32(cl), window=win, block_s=64)
+        ref = decode_attn_ref(q, k, v, jnp.int32(cl), window=win)
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attn_model_layout_wrapper():
+    b, h, kv, hd, S = 2, 8, 2, 32, 96
+    key = jax.random.key(9)
+    q = jax.random.normal(key, (b, 1, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, S, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, S, kv, hd))
+    out = decode_attn_op(q, k, v, jnp.int32(50))
+    from repro.models.attention import decode_attention as model_ref
+    ref = model_ref(q, k, v, jnp.int32(50))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+# -- rmsnorm -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,br", [((8, 64), 4), ((3, 5, 128), 8),
+                                      ((1000, 96), 256)])
+def test_rmsnorm_sweep(shape, br, dtype):
+    key = jax.random.key(shape[-1])
+    x = jax.random.normal(key, shape, dtype)
+    s = jax.random.normal(jax.random.fold_in(key, 1), (shape[-1],), jnp.float32)
+    out = rmsnorm(x, s, block_rows=br)
+    ref = rmsnorm_ref(x, s)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_wagg_leaf_tree_integration():
+    """The kernel-backed aggregate equals the einsum aggregate on a tree."""
+    from repro.core import weighted_aggregate, equal_weights
+    from repro.kernels.wagg.ops import wagg_leaf
+    params = {"a": jax.random.normal(jax.random.key(0), (4, 3, 5)),
+              "b": jax.random.normal(jax.random.key(1), (4, 7))}
+    axes = {"a": ("worker", None, None), "b": ("worker", None)}
+    th = equal_weights(4)
+    ref = weighted_aggregate(params, axes, th, 0.8)
+    out = weighted_aggregate(params, axes, th, 0.8, leaf_fn=wagg_leaf)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# -- fused_ce -------------------------------------------------------------------------
+
+from repro.kernels.fused_ce import fused_ce, fused_ce_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,v,br,bv", [(16, 64, 8, 32), (100, 500, 32, 128),
+                                       (256, 1000, 64, 256)])
+def test_fused_ce_sweep(t, v, br, bv, dtype):
+    key = jax.random.key(t + v)
+    logits = jax.random.normal(key, (t, v), dtype) * 4
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (t,), 0, v)
+    out = fused_ce(logits, labels, block_rows=br, block_v=bv)
+    ref = fused_ce_ref(logits, labels)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(1, 60), v=st.integers(2, 300), seed=st.integers(0, 50))
+def test_hyp_fused_ce_arbitrary(t, v, seed):
+    key = jax.random.key(seed)
+    logits = jax.random.normal(key, (t, v), jnp.float32) * 3
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (t,), 0, v)
+    out = fused_ce(logits, labels, block_rows=16, block_v=64)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(fused_ce_ref(logits, labels)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- ssd_chunk ------------------------------------------------------------------------
+
+from repro.kernels.ssd_chunk import ssd_chunk, ssd_chunk_ref, ssd_chunked_kernel
+from repro.models.ssm import ssd_reference
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,nc,L,nh,hd,ds", [
+    (1, 2, 8, 2, 4, 3),
+    (2, 3, 16, 4, 8, 5),
+    (1, 4, 64, 2, 64, 128),   # mamba2-370m-shaped chunk
+])
+def test_ssd_chunk_sweep(b, nc, L, nh, hd, ds, dtype):
+    key = jax.random.key(b * L + ds)
+    xs = jax.random.normal(key, (b, nc, L, nh, hd), dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, nc, L, nh))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (nh,)))
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, nc, L, ds), dtype)
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, nc, L, ds), dtype)
+    y, st, tot = ssd_chunk(xs, dt, a, B, C)
+    yr, sr, tr = ssd_chunk_ref(xs, dt, a, B, C)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(tot), np.asarray(tr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ssd_chunked_kernel_full_pipeline():
+    """Kernel-backed chunked SSD == naive per-step recurrence end to end."""
+    key = jax.random.key(11)
+    b, s, nh, hd, ds, chunk = 2, 48, 3, 8, 5, 16
+    xs = jax.random.normal(key, (b, s, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, nh)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (nh,)))
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, s, ds))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, s, ds))
+    yk, stk = ssd_chunked_kernel(xs, dt, a, B, C, chunk=chunk)
+    yn, stn = ssd_reference(xs, dt, a, B, C)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yn), rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(stk), np.asarray(stn), rtol=1e-3,
+                               atol=1e-3)

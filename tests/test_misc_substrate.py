@@ -1,0 +1,201 @@
+"""Checkpointing, optimizers, sharding rules, HLO parsing, baselines."""
+import functools
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore, save
+from repro.core import baselines as bl
+from repro.core import equal_weights
+from repro.launch.hlo import collective_bytes
+from repro.models import cnn
+from repro.models.param import add_worker_axis, build, build_abstract, is_expert_path
+from repro.optim import make_optimizer
+from repro.parallel.sharding import SERVE_RULES, TRAIN_RULES, spec_for
+
+
+# -- checkpoint --------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": (jnp.ones(4), {"mu": jnp.zeros((2, 2))})}
+    save(str(tmp_path / "ck"), tree, meta={"step": 7})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, meta = restore(str(tmp_path / "ck"), like)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save(str(tmp_path / "ck"), {"w": jnp.ones((2, 2))})
+    import pytest
+    with pytest.raises(ValueError):
+        restore(str(tmp_path / "ck"), {"w": jnp.ones((3, 2))})
+
+
+# -- optimizers --------------------------------------------------------------------
+
+def test_sgd_matches_manual():
+    opt = make_optimizer("sgd", 0.1)
+    p = {"w": jnp.ones(3)}
+    g = {"w": jnp.full(3, 2.0)}
+    new_p, _ = opt.update(g, opt.init(p), p)
+    np.testing.assert_allclose(new_p["w"], 1.0 - 0.2)
+
+
+def test_momentum_accumulates():
+    opt = make_optimizer("momentum", 0.1, momentum=0.9)
+    p = {"w": jnp.zeros(2)}
+    s = opt.init(p)
+    g = {"w": jnp.ones(2)}
+    p, s = opt.update(g, s, p)
+    p, s = opt.update(g, s, p)
+    np.testing.assert_allclose(p["w"], -(0.1 + 0.19), rtol=1e-6)
+
+
+def test_adamw_first_step_unit():
+    opt = make_optimizer("adamw", 0.01)
+    p = {"w": jnp.zeros(2)}
+    g = {"w": jnp.full(2, 3.0)}
+    new_p, _ = opt.update(g, opt.init(p), p)
+    np.testing.assert_allclose(new_p["w"], -0.01, rtol=1e-4)
+
+
+# -- sharding rules -----------------------------------------------------------------
+
+def _fake_mesh_shape():
+    class M:
+        shape = {"data": 16, "model": 16}
+    return M()
+
+
+def test_spec_divisibility_fallback():
+    m = _fake_mesh_shape()
+    # 4 kv heads cannot shard over model=16 -> replicated
+    s = spec_for(m, ("embed", "kv_heads", "head_dim"), (4096, 4, 128),
+                 TRAIN_RULES)
+    assert s[1] is None
+    # q heads 32 shard fine
+    s = spec_for(m, ("embed", "heads", "head_dim"), (4096, 32, 128),
+                 TRAIN_RULES)
+    assert s[1] == "model"
+
+
+def test_serve_rules_head_dim_pickup():
+    m = _fake_mesh_shape()
+    # serve: kv=4 falls back, head_dim picks up the model axis
+    s = spec_for(m, ("batch", "kv_seq", "kv_heads", "head_dim"),
+                 (128, 32768, 4, 128), SERVE_RULES)
+    assert s[2] is None and s[3] == "model"
+    # kv=32 divides: kv_heads takes model, head_dim must NOT duplicate it
+    s = spec_for(m, ("batch", "kv_seq", "kv_heads", "head_dim"),
+                 (128, 32768, 32, 128), SERVE_RULES)
+    assert s[2] == "model" and s[3] is None
+
+
+def test_worker_axis_skips_experts():
+    def init(b):
+        b.param("w", (4, 2), (None, None))
+        e = b.scope("moe").scope("experts")
+        e.param("w_up", (8, 4, 2), ("experts", "embed", "expert_ffn"))
+
+    shapes, axes = build_abstract(init)
+    s2, a2 = add_worker_axis(shapes, axes, 16, skip=is_expert_path)
+    assert s2["w"].shape == (16, 4, 2)
+    assert a2["w"][0] == "worker"
+    assert s2["moe"]["experts"]["w_up"].shape == (8, 4, 2)
+    assert a2["moe"]["experts"]["w_up"][0] == "experts"
+
+
+# -- HLO collective parsing ------------------------------------------------------------
+
+def test_collective_bytes_parses_real_hlo():
+    """Compile a tiny all-reduce-containing program and account its bytes."""
+    fn = jax.jit(lambda x: x.sum())  # no collective on 1 device
+    txt = """
+  %param.1 = f32[1024]{0} parameter(0)
+  %all-reduce.3 = f32[1024]{0} all-reduce(%param.1), replica_groups={{0,16},{1,17}}, to_apply=%add
+  %all-gather.2 = f32[2048]{0} all-gather(f32[1024]{0} %param.1), replica_groups={{0,1}}, dimensions={0}
+"""
+    out = collective_bytes(txt)
+    assert out["all-reduce"] == 4096
+    assert out["all-gather"] == 4096
+    assert out["total"] == 8192
+    assert out["by_axis"]["worker"] == 4096     # stride-16 groups
+    assert out["by_axis"]["model"] == 4096      # contiguous groups
+
+
+# -- baselines ----------------------------------------------------------------------
+
+def _worker_tree(p=3):
+    params = {"w": jnp.arange(p * 4, dtype=jnp.float32).reshape(p, 4)}
+    axes = {"w": ("worker", None)}
+    return params, axes
+
+
+def test_easgd_center_moves_toward_workers():
+    params, axes = _worker_tree()
+    st = bl.easgd_init(params, axes)
+    new_p, new_st = bl.easgd_communicate(params, axes, st, alpha=0.1)
+    # center moves toward mean of workers; workers move toward center
+    assert float(jnp.abs(new_st.center["w"] - params["w"].mean(0)).sum()) < \
+        float(jnp.abs(st.center["w"] - params["w"].mean(0)).sum())
+    spread = lambda x: float(jnp.abs(x - x.mean(0)).sum())
+    assert spread(new_p["w"]) < spread(params["w"])
+
+
+def test_mwu_adopts_best_worker():
+    params, axes = _worker_tree()
+    st = bl.mwu_init(3)
+    h = jnp.array([5.0, 1.0, 3.0])
+    new_p, new_st = bl.mwu_communicate(params, axes, st, h)
+    for i in range(3):
+        np.testing.assert_allclose(new_p["w"][i], params["w"][1])
+
+
+def test_spsgd_is_plain_average():
+    params, axes = _worker_tree()
+    out = bl.spsgd_communicate(params, axes)
+    for i in range(3):
+        np.testing.assert_allclose(out["w"][i], params["w"].mean(0),
+                                   rtol=1e-6)
+
+
+# -- optimizer extras -----------------------------------------------------------------
+
+def test_clip_by_global_norm():
+    from repro.optim import clip_by_global_norm, global_norm
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((2, 2), -3.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    assert float(norm) > 8.0
+    same, _ = clip_by_global_norm({"a": jnp.full((2,), 0.1)}, 10.0)
+    np.testing.assert_allclose(same["a"], 0.1)
+
+
+def test_lr_schedules():
+    from repro.optim import lr_schedule
+    cos = lr_schedule("cosine", 1e-2, warmup_steps=5, total_steps=50)
+    vals = [float(cos(jnp.int32(s))) for s in (0, 5, 25, 49)]
+    assert vals[0] < vals[1]            # warmup rises
+    assert vals[2] < vals[1]            # cosine decays
+    assert vals[3] < vals[2]
+    const = lr_schedule("constant", 1e-3)
+    np.testing.assert_allclose(float(const(jnp.int32(7))), 1e-3)
+
+
+# -- consensus / eval ------------------------------------------------------------------
+
+def test_consensus_params_collapses_workers():
+    from repro.core import replicate_workers
+    from repro.train.evaluate import consensus_params
+    single = {"w": jnp.arange(6.0).reshape(2, 3)}
+    axes = {"w": (None, None)}
+    stacked, st_axes = replicate_workers(single, axes, 4)
+    stacked = {"w": stacked["w"] + jnp.arange(4.0)[:, None, None]}
+    out = consensus_params(stacked, st_axes)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(stacked["w"].mean(0)), rtol=1e-6)

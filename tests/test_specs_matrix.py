@@ -1,0 +1,71 @@
+"""Fast (no-compile) consistency checks over the FULL 10x4 assignment
+matrix: input_specs must produce structurally matched (shapes, axes) trees
+and shape-correct batch/cache stand-ins for every combination — catching
+spec bugs without paying the dry-run's compile cost."""
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, TrainConfig, get_config
+from repro.configs.base import WASGDConfig
+from repro.launch.specs import effective_config, input_specs
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", INPUT_SHAPES, ids=lambda s: s.name)
+def test_specs_consistent(arch, shape):
+    cfg = get_config(arch)
+    tcfg = TrainConfig(wasgd=WASGDConfig(tau=1))
+    wl = input_specs(cfg, shape, n_workers=16, tcfg=tcfg)
+    assert len(wl.arg_shapes) == len(wl.arg_axes)
+    for shapes, axes in zip(wl.arg_shapes, wl.arg_axes):
+        s_leaves, s_def = jax.tree.flatten(shapes)
+        a_leaves = s_def.flatten_up_to(axes)
+        assert len(s_leaves) == len(a_leaves)
+        for s, a in zip(s_leaves, a_leaves):
+            assert isinstance(a, tuple), (arch, shape.name, s, a)
+            assert len(a) == len(s.shape), (arch, shape.name, s.shape, a)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long500k_subquadratic_policy(arch):
+    """DESIGN.md §4.2: every arch must be sub-quadratic at 500k decode —
+    natively (SSM/hybrid/sliding-window) or via the flagged override."""
+    cfg = get_config(arch)
+    shape = [s for s in INPUT_SHAPES if s.name == "long_500k"][0]
+    eff = effective_config(cfg, shape)
+    native = cfg.ssm is not None or cfg.attn_window is not None
+    if native:
+        assert eff.attn_window == cfg.attn_window     # untouched
+    else:
+        assert eff.attn_window == shape.window_override
+        assert eff.global_attn_every == 0             # all layers windowed
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_cache_bounded(arch):
+    """No decode cache leaf may be quadratic in context: at long_500k every
+    per-layer KV buffer is either the (sharded) full cache for native-global
+    layers or window-sized for sliding-window layers."""
+    cfg = get_config(arch)
+    shape = [s for s in INPUT_SHAPES if s.name == "long_500k"][0]
+    wl = input_specs(cfg, shape, n_workers=16)
+    cache = wl.arg_shapes[2]
+    eff = wl.cfg
+    for lname, entry in cache.items():
+        if "kv" in entry:
+            size = entry["kv"].k.shape[1]
+            i = int(lname[1:])
+            w = eff.window_for_layer(i)
+            if w is not None:
+                assert size <= w, (arch, lname, size)
+            else:
+                assert size == shape.seq_len
+
+
+def test_train_batch_divisible_all_archs():
+    tcfg = TrainConfig(wasgd=WASGDConfig(tau=1))
+    shape = [s for s in INPUT_SHAPES if s.kind == "train"][0]
+    for arch in ARCH_IDS:
+        wl = input_specs(get_config(arch), shape, 32, tcfg)  # multi-pod w
+        toks = wl.arg_shapes[1]["tokens"]
+        assert toks.shape[0] % 32 == 0

@@ -1,0 +1,142 @@
+"""The paper's theoretical claims, verified numerically:
+
+* Theorem 1  — beta=1 WASGD+ iterates contract (exponential convergence on a
+               convex quadratic).
+* Lemma 2    — asymptotic variance of the weighted aggregate matches Eq. 35.
+* Lemma 3    — equally weighted case with zeta=1 IS mini-batch SGD.
+* Property 2 — a->inf weighting underperforms the equal baseline; a->0
+               approaches it.
+"""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import TrainConfig, WASGDConfig
+from repro.core.weights import boltzmann_weights, equal_weights, omega
+from repro.models import cnn
+from repro.models.param import build
+from repro.train import Trainer
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: contraction / exponential convergence
+# ---------------------------------------------------------------------------
+
+def test_theorem1_exponential_convergence():
+    """WASGD (beta=1) on a noisy convex quadratic: log-error decays linearly."""
+    p, d, eta, tau = 4, 8, 0.1, 5
+    key = jax.random.key(0)
+    x_star = jax.random.normal(key, (d,))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (p, d)) * 5.0
+
+    errs = []
+    for t in range(40):
+        for k in range(tau):
+            g = (x - x_star[None])   # exact gradient of 0.5||x - x*||^2
+            noise = 0.01 * jax.random.normal(jax.random.fold_in(key, t * 97 + k),
+                                             (p, d))
+            x = x - eta * (g + noise)
+        h = 0.5 * jnp.sum((x - x_star) ** 2, axis=-1)
+        th = boltzmann_weights(h, 1.0)
+        x = jnp.broadcast_to((th[:, None] * x).sum(0), x.shape)  # beta = 1
+        errs.append(float(jnp.linalg.norm(x[0] - x_star)))
+
+    errs = np.array(errs)
+    assert errs[-1] < 1e-2
+    # exponential rate: each round shrinks the error by a constant factor
+    early = np.log(errs[2] / errs[7])
+    assert early > 0.5, f"no contraction: errs={errs[:8]}"
+
+
+# ---------------------------------------------------------------------------
+# Lemma 2: asymptotic variance (Eq. 35)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("theta_kind", ["equal", "skewed"])
+def test_lemma2_asymptotic_variance(theta_kind):
+    p, c, eta, zeta = 4, 1.0, 0.1, 0.3
+    sb, sh = 0.3, 1.0
+    chains = 20000
+    T = 400
+    key = jax.random.key(42)
+
+    if theta_kind == "equal":
+        theta = np.full(p, 1.0 / p)
+    else:
+        theta = np.array([0.4, 0.3, 0.2, 0.1])
+    om = float((theta ** 2).sum())
+    rho = 2 * c * eta - (eta * c) ** 2
+    delta = zeta / ((1 - zeta) * eta * (2 * c - eta * c ** 2))
+    predicted = (eta * sh ** 2 * om /
+                 (2 * c - eta * c ** 2 - eta * sb ** 2 * (1 + delta * om)
+                  / (1 + delta)))
+
+    x = jnp.zeros((chains, p))
+    th = jnp.asarray(theta, jnp.float32)
+
+    def step(x, key):
+        kb, kh, kc = jax.random.split(key, 3)
+        b = sb * jax.random.normal(kb, x.shape)
+        h = sh * jax.random.normal(kh, x.shape)
+        x = (1 - eta * c) * x + eta * (b * x + h)
+        comm = jax.random.uniform(kc, (chains, 1)) < zeta
+        agg = (x * th[None]).sum(-1, keepdims=True)
+        x = jnp.where(comm, agg, x)
+        return x, None
+
+    keys = jax.random.split(key, T)
+    x, _ = jax.lax.scan(step, x, keys)
+    q = float(jnp.mean(jnp.square((x * th[None]).sum(-1))))
+    assert abs(q - predicted) / predicted < 0.15, (q, predicted)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3: equal weights + zeta=1 == mini-batch SGD
+# ---------------------------------------------------------------------------
+
+def test_lemma3_minibatch_equivalence():
+    p, b_local, d, eta = 4, 2, 16, 0.05
+    key = jax.random.key(0)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=d, d_hidden=32, n_classes=3), key)
+
+    X = np.asarray(jax.random.normal(jax.random.fold_in(key, 1), (p * b_local, d)))
+    y = np.asarray(jax.random.randint(jax.random.fold_in(key, 2),
+                                      (p * b_local,), 0, 3))
+
+    def loss_fn(pr, batch):
+        return cnn.classification_loss(cnn.mlp_apply(pr, batch["x"]),
+                                       batch["y"]), {}
+
+    tcfg = TrainConfig(learning_rate=eta, optimizer="sgd",
+                       wasgd=WASGDConfig(tau=1, beta=1.0, strategy="equal"))
+    tr = Trainer(loss_fn, params, axes, tcfg, p, rule="spsgd")
+    batch = {"x": jnp.asarray(X), "y": jnp.asarray(y)}
+    state, _ = tr._step(tr.state, batch)
+    wasgd_params = jax.tree.map(lambda v: v[0], state.params)
+
+    # manual mini-batch SGD step over the same p*b_local samples
+    grads = jax.grad(lambda pr: loss_fn(pr, batch)[0])(params)
+    manual = jax.tree.map(lambda pv, g: pv - eta * g, params, grads)
+
+    for a, b in zip(jax.tree.leaves(wasgd_params), jax.tree.leaves(manual)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Property 2: extreme a_tilde behavior
+# ---------------------------------------------------------------------------
+
+def test_property2_extremes():
+    """Weighted-case distance to the equal baseline: a->0 approaches it,
+    a->inf concentrates to one worker (the sequential-like regime)."""
+    h = jnp.array([1.0, 1.1, 1.3, 2.0])
+    base = equal_weights(4)
+    near = boltzmann_weights(h, 1e-6)
+    far = boltzmann_weights(h, 1e5)
+    assert float(jnp.abs(near - base).sum()) < 1e-4
+    assert float(omega(far)) > 0.99  # all mass on one worker

@@ -1,0 +1,119 @@
+"""End-to-end training behaviour: losses drop, rules differ as the paper
+predicts, energy recording feeds theta, the pipeline honors sample orders."""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, WASGDConfig, get_smoke_config
+from repro.data import OrderedDataset, lm_batch, make_classification
+from repro.models import cnn
+from repro.models.param import build
+from repro.train import Trainer
+from repro.train.lm import make_lm_loss
+
+
+def _mlp_problem(seed=0, d=32, n=2048):
+    X, y = make_classification(seed, n, d=d, n_classes=10)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=d, d_hidden=64, n_classes=10), jax.random.key(seed))
+
+    def loss_fn(p, batch):
+        return cnn.classification_loss(cnn.mlp_apply(p, batch["x"]),
+                                       batch["y"]), {}
+
+    return X, y, params, axes, loss_fn
+
+
+def test_wasgd_loss_decreases():
+    X, y, params, axes, loss_fn = _mlp_problem()
+    tcfg = TrainConfig(learning_rate=0.05,
+                       wasgd=WASGDConfig(tau=8, beta=0.9, a_tilde=1.0))
+    ds = OrderedDataset({"x": X, "y": y}, 4, 8, 16, n_segments=2)
+    tr = Trainer(loss_fn, params, axes, tcfg, 4)
+    tr.run(ds.batches(), 20, order_state=ds.order,
+           segment_fn=ds.segment_of_round)
+    losses = tr.losses()
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_all_rules_train():
+    X, y, params, axes, loss_fn = _mlp_problem(seed=1)
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=4))
+    finals = {}
+    for rule in ["wasgd", "spsgd", "easgd", "omwu", "seq"]:
+        ds = OrderedDataset({"x": X, "y": y}, 4, 4, 16, n_segments=1,
+                            seed=123)
+        tr = Trainer(loss_fn, params, axes, tcfg, 4, rule=rule)
+        tr.run(ds.batches(), 15)
+        finals[rule] = tr.losses()[-1]
+        assert np.isfinite(finals[rule])
+    # parallel communication should beat no-communication on this problem
+    assert finals["wasgd"] < finals["seq"] * 1.1
+
+
+def test_theta_reflects_energy():
+    """Worker with artificially inflated loss gets down-weighted."""
+    X, y, params, axes, loss_fn = _mlp_problem(seed=2)
+
+    def skewed_loss(p, batch):
+        loss, m = loss_fn(p, batch)
+        # worker identity is implicit in the data; corrupt nothing here —
+        # instead feed one worker garbage labels via the batch below.
+        return loss, m
+
+    tcfg = TrainConfig(learning_rate=0.05,
+                       wasgd=WASGDConfig(tau=4, a_tilde=5.0))
+    tr = Trainer(skewed_loss, params, axes, tcfg, 4)
+    batch = {"x": jnp.asarray(X[:256]), "y": jnp.asarray(y[:256])}
+    # corrupt worker 3's labels (worker-major batch layout)
+    yb = np.asarray(batch["y"]).copy()
+    yb[192:256] = (yb[192:256] + 5) % 10
+    batch["y"] = jnp.asarray(yb)
+    for _ in range(5):
+        tr.state, metrics = tr._step(tr.state, batch)
+    theta = np.asarray(metrics["theta"])
+    assert theta[3] == theta.min()
+    h = np.asarray(metrics["h"])
+    assert h[3] == h.max()
+
+
+def test_momentum_and_adamw_optimizers():
+    X, y, params, axes, loss_fn = _mlp_problem(seed=3)
+    for opt, lr in [("momentum", 0.01), ("adamw", 0.003)]:
+        tcfg = TrainConfig(learning_rate=lr, optimizer=opt,
+                           wasgd=WASGDConfig(tau=4))
+        ds = OrderedDataset({"x": X, "y": y}, 2, 4, 16, n_segments=1)
+        tr = Trainer(loss_fn, params, axes, tcfg, 2)
+        tr.run(ds.batches(), 10)
+        assert tr.losses()[-1] < tr.losses()[0]
+
+
+def test_lm_smoke_training_loss_drops():
+    from repro.models import init_params
+    cfg = get_smoke_config("stablelm-1.6b")
+    params, axes = init_params(cfg, jax.random.key(0))
+    tcfg = TrainConfig(learning_rate=0.05, optimizer="sgd",
+                       wasgd=WASGDConfig(tau=2, beta=0.9))
+    tr = Trainer(make_lm_loss(cfg), params, axes, tcfg, 2)
+    losses = []
+    for r in range(8):
+        batch = {k: jnp.asarray(v) for k, v in
+                 lm_batch(0, 8, 32, cfg.vocab_size).items()}  # same batch
+        tr.state, m = tr._step(tr.state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_pipeline_worker_major_layout():
+    n, p, tau, bl = 64, 2, 2, 4
+    X = np.arange(n, dtype=np.float32)[:, None]
+    ds = OrderedDataset({"x": X}, p, tau, bl, n_segments=1, seed=0)
+    batch = next(ds.batches())
+    assert batch["x"].shape == (p * tau * bl, 1)
+    flat = batch["x"].reshape(p, tau * bl)
+    # each worker's samples come from its own permutation (disjoint draws
+    # of the same segment); layout must be worker-major
+    o0 = ds.order.order_for(0, 0, n)[: tau * bl]
+    np.testing.assert_allclose(flat[0], X[o0, 0])

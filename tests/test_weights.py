@@ -1,0 +1,98 @@
+"""Weight evaluating function (paper Sec. 3.2, Properties 1-2) — unit +
+hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.weights import (best_weights, boltzmann_weights,
+                                compute_theta, equal_weights, inverse_weights,
+                                normalize_energy, omega)
+
+
+def test_boltzmann_sums_to_one():
+    h = jnp.array([1.0, 2.0, 3.0, 4.0])
+    th = boltzmann_weights(h, a_tilde=2.0)
+    np.testing.assert_allclose(th.sum(), 1.0, rtol=1e-6)
+
+
+def test_property1_a_to_zero_equal():
+    """a -> 0: equally weighted case (Property 1)."""
+    h = jnp.array([0.5, 1.5, 3.0])
+    th = boltzmann_weights(h, a_tilde=1e-8)
+    np.testing.assert_allclose(th, equal_weights(3), atol=1e-6)
+
+
+def test_property1_a_to_inf_broadcasts_best():
+    """a -> inf: one-hot on the smallest loss energy (Property 1)."""
+    h = jnp.array([0.5, 1.5, 3.0, 0.9])
+    th = boltzmann_weights(h, a_tilde=1e6)
+    np.testing.assert_allclose(th, best_weights(h), atol=1e-6)
+
+
+def test_better_worker_gets_larger_weight():
+    h = jnp.array([1.0, 2.0, 4.0])
+    th = boltzmann_weights(h, a_tilde=3.0)
+    assert th[0] > th[1] > th[2]
+
+
+def test_inverse_weights_wasgd_v1():
+    h = jnp.array([1.0, 2.0, 4.0])
+    th = inverse_weights(h)
+    np.testing.assert_allclose(th, np.array([4, 2, 1]) / 7.0, rtol=1e-6)
+
+
+def test_normalize_energy_eq12():
+    h = jnp.array([2.0, 6.0])
+    np.testing.assert_allclose(normalize_energy(h), [0.25, 0.75])
+
+
+def test_strategies_dispatch():
+    h = jnp.array([1.0, 2.0])
+    for s in ("boltzmann", "inverse", "equal", "best"):
+        th = compute_theta(h, s, 1.0)
+        np.testing.assert_allclose(th.sum(), 1.0, rtol=1e-6)
+    with pytest.raises(ValueError):
+        compute_theta(h, "nope")
+
+
+def test_omega_bounds():
+    """omega = sum theta^2 in [1/p, 1] (Lemma 2's variance knob)."""
+    th = equal_weights(8)
+    np.testing.assert_allclose(omega(th), 1.0 / 8)
+    th = best_weights(jnp.array([1.0, 2.0]))
+    np.testing.assert_allclose(omega(th), 1.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    h=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=16),
+    a=st.floats(0.0, 50.0),
+)
+def test_hyp_boltzmann_is_distribution(h, a):
+    th = np.asarray(boltzmann_weights(jnp.array(h), a))
+    assert np.all(th >= 0)
+    np.testing.assert_allclose(th.sum(), 1.0, rtol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    h=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=16, unique=True),
+    a=st.floats(0.1, 20.0),
+)
+def test_hyp_monotone_in_energy(h, a):
+    """Lower loss energy never gets a smaller weight."""
+    hv = jnp.array(h)
+    th = np.asarray(boltzmann_weights(hv, a))
+    order = np.argsort(h)
+    assert np.all(np.diff(th[order]) <= 1e-7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(a1=st.floats(0.1, 5.0), a2=st.floats(5.1, 50.0))
+def test_hyp_larger_a_concentrates(a1, a2):
+    """omega (weight concentration) is monotone in a_tilde."""
+    h = jnp.array([1.0, 2.0, 3.0, 5.0])
+    assert float(omega(boltzmann_weights(h, a2))) >= \
+        float(omega(boltzmann_weights(h, a1))) - 1e-7
