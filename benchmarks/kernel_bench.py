@@ -62,6 +62,33 @@ def run(fast: bool = False):
     emit("kernel_rmsnorm_ref_xla", _time(f_ref, x, s, n=5), f"rows={rows}")
 
     run_extra(fast=fast)
+    run_backends(fast=fast)
+
+
+def run_backends(fast: bool = False):
+    """Sweep every registered aggregation backend (core/backends.py) over a
+    shared worker-stacked leaf — the apples-to-apples comparison the registry
+    exists for. Interpret-mode/1-device numbers are indicative only."""
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core.backends import (AggregationContext, available_backends,
+                                     get_backend)
+
+    p, n = 8, (1 << 18 if fast else 1 << 20)
+    x = jax.random.normal(jax.random.key(2), (p, n), jnp.float32)
+    theta = jax.nn.softmax(jnp.arange(p, dtype=jnp.float32))
+    axes = {"w": ("worker", None)}
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    ctx = AggregationContext(mesh=mesh, comm_dtype=jnp.float32, n_pods=2)
+
+    for name in available_backends():
+        backend = get_backend(name)
+        fn = jax.jit(lambda x, t, b=backend: b.aggregate(
+            {"w": x}, axes, t, 0.9, ctx=ctx)["w"])
+        # pallas interpret mode is orders slower: fewer reps, same protocol
+        reps = 2 if name == "pallas_wagg" else 5
+        emit(f"agg_backend_{name}", _time(fn, x, theta, n=reps),
+             f"shape={p}x{n}")
 
 
 def run_extra(fast: bool = False):

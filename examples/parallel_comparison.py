@@ -24,6 +24,10 @@ METHODS = [
     ("WASGD (1/h)", "wasgd", dict(strategy="inverse", beta=1.0)),
     ("WASGD+ (Boltzmann)", "wasgd", dict(strategy="boltzmann", beta=0.9,
                                          a_tilde=1.0)),
+    # same rule through a different aggregation backend (core/backends.py) —
+    # WASGDConfig.backend selects it end-to-end through the train step.
+    ("WASGD+ (int8 comm)", "wasgd", dict(strategy="boltzmann", beta=0.9,
+                                         a_tilde=1.0, backend="quantized")),
 ]
 
 

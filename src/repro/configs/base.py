@@ -224,6 +224,11 @@ class WASGDConfig:
     hierarchical: bool = False        # beyond-paper: pod-local then cross-pod 2-hop
     n_pods: int = 1                   # pod count for the hierarchical 2-hop
     sharded_aggregate: bool = False   # beyond-paper: reduce-scatter + local axpy + all-gather
+    backend: str = ""                 # aggregation backend name (core/backends.py:
+                                      # einsum | quantized | hierarchical |
+                                      # shard_map | rs_ag | pallas_wagg).
+                                      # "" derives it from the legacy booleans
+                                      # above (backend_name_from_config).
 
 
 @dataclasses.dataclass(frozen=True)

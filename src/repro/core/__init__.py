@@ -7,6 +7,16 @@ from repro.core.aggregate import (
     weighted_aggregate,
     worker_in_axes,
 )
+from repro.core.backends import (
+    AggregationContext,
+    aggregate_from_config,
+    aggregate_with,
+    available_backends,
+    backend_name_from_config,
+    context_from_config,
+    get_backend,
+    register_backend,
+)
 from repro.core.energy import estimation_error, record_indices, record_mask
 from repro.core.order import OrderState, grouped_order, judge_scores
 from repro.core.wasgd import CommResult, communicate
@@ -24,7 +34,11 @@ from repro.core.weights import (
 __all__ = [
     "aggregate_leaf", "map_worker_leaves", "replicate_workers",
     "strip_worker_axis", "take_worker", "weighted_aggregate",
-    "worker_in_axes", "estimation_error", "record_indices", "record_mask",
+    "worker_in_axes", "AggregationContext", "aggregate_from_config",
+    "aggregate_with",
+    "available_backends", "backend_name_from_config", "context_from_config",
+    "get_backend", "register_backend",
+    "estimation_error", "record_indices", "record_mask",
     "OrderState", "grouped_order", "judge_scores", "CommResult",
     "communicate", "best_weights", "boltzmann_weights", "compute_theta",
     "equal_weights", "inverse_weights", "normalize_energy", "omega",

@@ -16,6 +16,10 @@ equivalent of the paper's send-to-all exchange. Beyond-paper variants:
                       a ring but exposes overlap; useful with hierarchical).
 * Pallas ``wagg``   — fused (1-β)x + β·Σθx single-pass kernel for the local
                       FMA part (kernels/wagg).
+
+These primitives are selected uniformly through the aggregation backend
+registry (``core/backends.py``); prefer ``WASGDConfig.backend`` /
+``aggregate_with`` over calling the variant kwargs here directly.
 """
 from __future__ import annotations
 

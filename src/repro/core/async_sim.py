@@ -20,7 +20,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregate as agg
+from repro.core import backends
 from repro.core.weights import compute_theta
+
+
+def masked_theta(losses: np.ndarray, active: np.ndarray,
+                 a_tilde: float = 1.0, strategy: str = "boltzmann"
+                 ) -> np.ndarray:
+    """θ over the p active workers of a p-of-p+b round; 0 for stragglers.
+
+    Inactive workers must be masked out *before* ``normalize_energy`` runs
+    inside ``compute_theta``: a large sentinel energy (the old ``1e30``
+    approach) dominates the normalizing sum, collapses the active workers'
+    normalized energies toward 0, and degenerates the Boltzmann weights to
+    near-equal regardless of loss.
+    """
+    losses = np.asarray(losses)
+    active = np.asarray(active, bool)
+    theta_active = np.asarray(compute_theta(
+        jnp.asarray(losses[active], jnp.float32), strategy, a_tilde))
+    theta = np.zeros(losses.shape[0], np.float32)
+    theta[active] = theta_active
+    return theta / theta.sum()
 
 
 class StepTimeModel:
@@ -53,13 +74,19 @@ def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
                      axes: Dict, batches, *, n_workers: int, backups: int,
                      tau: int, rounds: int, lr: float,
                      time_model: StepTimeModel, a_tilde: float = 1.0,
-                     beta: float = 0.9, synchronous: bool = False
+                     beta: float = 0.9, synchronous: bool = False,
+                     backend: str = "einsum",
+                     ctx: Optional[backends.AggregationContext] = None
                      ) -> AsyncResult:
     """Alg. 4 if ``synchronous=False`` (p of p+b fastest aggregate), Alg. 1
     if True (barrier over all workers; backups just add capacity).
 
     ``grad_fn(params_stacked, batch) -> (losses (w,), grads_stacked)``.
+    ``backend`` names the aggregation backend (core/backends.py) applying
+    Eq. 10 over the active workers; ``ctx`` carries its mesh/comm_dtype/
+    n_pods knobs (defaults suit the meshless ``einsum`` family).
     """
+    ctx = backends.DEFAULT_CONTEXT if ctx is None else ctx
     w = n_workers + backups
     params = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), params0)
@@ -85,13 +112,10 @@ def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
             wall += float(t[order[n_workers - 1]]) # p-th arrival gates
             dropped += int((~active).sum())
 
-        h = np.where(active, np.asarray(losses), np.inf)
-        theta = np.asarray(compute_theta(jnp.asarray(
-            np.where(active, h, 1e30)), "boltzmann", a_tilde))
-        theta = np.where(active, theta, 0.0)
-        theta = theta / theta.sum()
-        new_params = agg.weighted_aggregate(
-            params, w_axes, jnp.asarray(theta, jnp.float32), beta)
+        theta = masked_theta(np.asarray(losses), active, a_tilde)
+        new_params = backends.aggregate_with(
+            backend, params, w_axes, jnp.asarray(theta, jnp.float32), beta,
+            ctx=ctx)
         # stragglers adopt the aggregate fully when they arrive (late join)
         params = jax.tree.map(
             lambda new, old: jnp.where(

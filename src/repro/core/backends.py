@@ -1,0 +1,304 @@
+"""Aggregation backend registry: one pluggable seam for the Eq. 10 step.
+
+The paper's contribution is a single communication rule,
+
+    x_i  <-  (1 - beta) * x_i  +  beta * sum_j theta_j * x_j        (Eq. 10)
+
+but the repo grows several *implementations* of it — different lowerings,
+payload dtypes, and schedules. This module is the seam they all plug into,
+in the spirit of ``configs/registry.py``: every implementation is an
+``AggregatorBackend`` registered under a string name, selected end-to-end by
+``WASGDConfig.backend`` (``core/wasgd.py:communicate``, ``train/step.py``,
+``core/async_sim.py``, benchmarks, examples).
+
+Registered backends
+===================
+
+``einsum``        The reference. pjit tensordot over the worker axis; XLA
+                  derives the theta-weighted all-reduce. Honors
+                  ``ctx.comm_dtype`` (bf16 halves ring bytes).
+``quantized``     int8 aggregation payload with a per-leaf symmetric scale
+                  (~4x fewer collective bytes; quantization error stays
+                  local). ``ctx.comm_dtype`` is ignored — the payload is
+                  already int8.
+``hierarchical``  2-hop reduction: pod-local partial reduce, then a tiny
+                  cross-pod reduce so the DCN hop carries pre-reduced
+                  partials. Uses ``ctx.n_pods`` and ``ctx.comm_dtype``.
+``shard_map``     Explicit ``lax.psum`` under ``shard_map`` — the form to
+                  reach for when collective scheduling matters. Requires
+                  ``ctx.mesh``.
+``rs_ag``         reduce-scatter + local FMA + all-gather schedule. Same
+                  ring bytes as one all-reduce, but the payload dtype is
+                  pinned to ``ctx.comm_dtype`` (XLA can't re-associate it
+                  away) and the phases can overlap with neighboring compute.
+                  Requires ``ctx.mesh``.
+``pallas_wagg``   Fused Pallas TPU kernel for the local FMA
+                  (``kernels/wagg``): one VMEM pass instead of three HBM
+                  round trips. Interpret mode on CPU.
+
+Composition rules
+=================
+
+The backend name picks the *aggregation rule / schedule*; orthogonal knobs
+ride in the ``AggregationContext`` so they compose instead of shadowing each
+other:
+
+* ``ctx.comm_dtype``  — payload dtype for the worker-axis collective
+  (``einsum``, ``hierarchical``, ``rs_ag``).
+* ``ctx.n_pods``      — pod count for the ``hierarchical`` 2-hop.
+* ``ctx.mesh``        — physical mesh, required by the ``shard_map`` /
+  ``rs_ag`` backends (they place explicit collectives).
+
+``backend_name_from_config`` derives the name from the legacy boolean knobs
+(``quantize_comm`` -> ``quantized``, ``hierarchical`` -> ``hierarchical``,
+``sharded_aggregate`` -> ``rs_ag``) when ``WASGDConfig.backend`` is unset,
+so existing configs select the same computation. One deliberate behavior
+change: ``sharded_aggregate=True`` used to be silently ignored outside
+``train/step.py``; it now routes to ``rs_ag``, which needs a mesh — pass
+``mesh=`` through ``communicate``/``wasgd_rule``/``Trainer``.
+
+Adding a backend
+================
+
+    from repro.core.backends import register_backend
+
+    @register_backend("my_sched")
+    def _my_sched(params, axes, theta, beta, ctx):
+        ...return the updated params tree...
+
+Then set ``WASGDConfig(backend="my_sched")`` — it is immediately selectable
+through ``communicate``/``train/step.py`` and picked up by the shared
+numerical-parity test (``tests/test_backends.py``) and the
+``benchmarks/kernel_bench.py`` backend sweep. Backends that place explicit
+collectives should pass ``needs_mesh=True`` so a missing ``ctx.mesh`` fails
+with a clear error at trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import aggregate as agg
+from repro.core import shardmap_agg as smagg
+
+
+# ---------------------------------------------------------------------------
+# Context + protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AggregationContext:
+    """Orthogonal knobs every backend receives (and may ignore).
+
+    ``mesh``       physical mesh for backends that place explicit collectives.
+    ``comm_dtype`` payload dtype riding the worker-axis collective.
+    ``n_pods``     pod count for the hierarchical 2-hop.
+    """
+    mesh: Optional[Mesh] = None
+    comm_dtype: Any = jnp.float32
+    n_pods: int = 1
+
+
+DEFAULT_CONTEXT = AggregationContext()
+
+
+@runtime_checkable
+class AggregatorBackend(Protocol):
+    """One implementation of the Eq. 10 communication step."""
+    name: str
+    needs_mesh: bool
+
+    def aggregate(self, params: Dict, axes: Dict, theta: jax.Array,
+                  beta, *, ctx: AggregationContext = DEFAULT_CONTEXT) -> Dict:
+        ...
+
+
+class _FnBackend:
+    """Adapter turning a plain ``fn(params, axes, theta, beta, ctx)`` into an
+    ``AggregatorBackend``."""
+
+    def __init__(self, name: str, fn: Callable, needs_mesh: bool = False):
+        self.name = name
+        self.needs_mesh = needs_mesh
+        self._fn = fn
+
+    def aggregate(self, params, axes, theta, beta, *,
+                  ctx: AggregationContext = DEFAULT_CONTEXT):
+        if self.needs_mesh and ctx.mesh is None:
+            raise ValueError(
+                f"aggregation backend {self.name!r} places explicit "
+                f"collectives and needs ctx.mesh (pass mesh= through "
+                f"communicate/wasgd_rule, or use the 'einsum' family)")
+        return self._fn(params, axes, theta, beta, ctx)
+
+    def __repr__(self):
+        return f"AggregatorBackend({self.name!r})"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, AggregatorBackend] = {}
+
+
+def register_backend(name: str, fn: Optional[Callable] = None, *,
+                     needs_mesh: bool = False, overwrite: bool = False):
+    """Register an aggregation backend under ``name``.
+
+    Usable as a decorator (``@register_backend("einsum")``) over a function
+    ``fn(params, axes, theta, beta, ctx)``, or called directly with an object
+    already satisfying the ``AggregatorBackend`` protocol.
+    """
+    def _register(obj):
+        if name in _REGISTRY and not overwrite:
+            raise ValueError(f"aggregation backend {name!r} already "
+                             f"registered; pass overwrite=True to replace")
+        if hasattr(obj, "aggregate"):
+            backend = obj
+            if needs_mesh and not getattr(obj, "needs_mesh", False):
+                # honor needs_mesh for object backends too: wrap so the
+                # promised clear missing-mesh error fires at trace time.
+                backend = _FnBackend(
+                    name,
+                    lambda p, a, t, b, ctx: obj.aggregate(p, a, t, b,
+                                                          ctx=ctx),
+                    needs_mesh=True)
+        else:
+            backend = _FnBackend(name, obj, needs_mesh=needs_mesh)
+        _REGISTRY[name] = backend
+        return obj
+
+    if fn is not None:
+        return _register(fn)
+    return _register
+
+
+def get_backend(name: str) -> AggregatorBackend:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown aggregation backend {name!r}; "
+                       f"known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def aggregate_with(name: str, params: Dict, axes: Dict, theta: jax.Array,
+                   beta, *, ctx: AggregationContext = DEFAULT_CONTEXT) -> Dict:
+    """One-shot convenience: ``get_backend(name).aggregate(...)``."""
+    return get_backend(name).aggregate(params, axes, theta, beta, ctx=ctx)
+
+
+def aggregate_from_config(wcfg, params: Dict, axes: Dict, theta: jax.Array,
+                          *, beta=None, mesh: Optional[Mesh] = None,
+                          leaf_fn=None) -> Dict:
+    """Apply Eq. 10 with the backend + context a ``WASGDConfig`` selects.
+
+    The single config→backend resolution shared by ``communicate`` and
+    ``train/step.py:wasgd_rule`` — every knob (``backend``/legacy booleans,
+    ``comm_dtype``, ``n_pods``, ``mesh``) reaches the computation through
+    here. ``beta`` defaults to ``wcfg.beta``; ``leaf_fn`` is the legacy
+    escape hatch that bypasses the registry.
+    """
+    beta = wcfg.beta if beta is None else beta
+    if leaf_fn is not None:
+        return agg.weighted_aggregate(params, axes, theta, beta,
+                                      leaf_fn=leaf_fn)
+    return aggregate_with(backend_name_from_config(wcfg), params, axes,
+                          theta, beta, ctx=context_from_config(wcfg, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Config plumbing
+# ---------------------------------------------------------------------------
+
+def backend_name_from_config(wcfg) -> str:
+    """Resolve ``WASGDConfig`` to a backend name.
+
+    An explicit ``wcfg.backend`` wins; otherwise the legacy boolean knobs
+    derive it (mutual priority: quantized > hierarchical > rs_ag > einsum,
+    matching the old if/elif sprawl in ``core/aggregate.py``).
+    """
+    explicit = getattr(wcfg, "backend", "")
+    if explicit:
+        return explicit
+    if wcfg.quantize_comm:
+        return "quantized"
+    if wcfg.hierarchical and wcfg.n_pods > 1:
+        return "hierarchical"
+    if wcfg.sharded_aggregate:
+        return "rs_ag"
+    return "einsum"
+
+
+def context_from_config(wcfg, mesh: Optional[Mesh] = None
+                        ) -> AggregationContext:
+    return AggregationContext(mesh=mesh,
+                              comm_dtype=jnp.dtype(wcfg.comm_dtype),
+                              n_pods=wcfg.n_pods)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+@register_backend("einsum")
+def _einsum(params, axes, theta, beta, ctx):
+    return agg.weighted_aggregate(params, axes, theta, beta,
+                                  comm_dtype=ctx.comm_dtype)
+
+
+@register_backend("quantized")
+def _quantized(params, axes, theta, beta, ctx):
+    return agg.weighted_aggregate(params, axes, theta, beta, quantize=True)
+
+
+@register_backend("hierarchical")
+def _hierarchical(params, axes, theta, beta, ctx):
+    # Fail clear (like needs_mesh) instead of silently taking the flat
+    # einsum path: aggregate_leaf's n_pods guard would otherwise swallow a
+    # misconfigured 2-hop and run a different computation without warning.
+    w = theta.shape[0]
+    if ctx.n_pods < 2 or w % ctx.n_pods:
+        raise ValueError(
+            f"'hierarchical' backend needs ctx.n_pods >= 2 dividing the "
+            f"worker count (got n_pods={ctx.n_pods}, workers={w}); set "
+            f"WASGDConfig.n_pods or use the 'einsum' backend")
+    return agg.weighted_aggregate(params, axes, theta, beta,
+                                  comm_dtype=ctx.comm_dtype,
+                                  n_pods=ctx.n_pods)
+
+
+@register_backend("shard_map", needs_mesh=True)
+def _shard_map(params, axes, theta, beta, ctx):
+    return smagg.weighted_aggregate_shard_map(params, axes, theta, beta,
+                                              ctx.mesh,
+                                              schedule="all_reduce")
+
+
+@register_backend("rs_ag", needs_mesh=True)
+def _rs_ag(params, axes, theta, beta, ctx):
+    return smagg.weighted_aggregate_shard_map(params, axes, theta, beta,
+                                              ctx.mesh, schedule="rs_ag",
+                                              comm_dtype=ctx.comm_dtype)
+
+
+@register_backend("pallas_wagg")
+def _pallas_wagg(params, axes, theta, beta, ctx):
+    from repro.kernels.wagg.ops import wagg_leaf   # lazy: kernels are optional
+    return agg.weighted_aggregate(params, axes, theta, beta,
+                                  leaf_fn=wagg_leaf)
+
+
+__all__ = [
+    "AggregationContext", "AggregatorBackend", "DEFAULT_CONTEXT",
+    "aggregate_from_config", "aggregate_with", "available_backends",
+    "backend_name_from_config", "context_from_config", "get_backend",
+    "register_backend",
+]

@@ -52,15 +52,20 @@ def aggregate_leaf_shard_map(x: jax.Array, theta: jax.Array,
 
 
 def aggregate_leaf_rs_ag(x: jax.Array, theta: jax.Array, beta: float,
-                         mesh: Mesh, comm_dtype=jnp.bfloat16) -> jax.Array:
+                         mesh: Mesh, comm_dtype=jnp.float32) -> jax.Array:
     """Reduce-scatter + local FMA + all-gather schedule of Eq. 10.
 
     Same ring bytes as one all-reduce, but (a) the payload dtype is pinned
-    (psum_scatter operates on the ``comm_dtype`` operand — the bf16
-    optimization XLA re-associates away under pjit, see EXPERIMENTS §Perf
-    H1 Iter 2), and (b) the two phases can overlap with neighboring compute
-    on real hardware. Each worker shard reduces a 1/p slice of the flattened
-    leaf, applies the FMA on its slice, and gathers the result.
+    (psum_scatter operates on the ``comm_dtype`` operand — pass bf16 to get
+    the halved-ring-bytes optimization XLA re-associates away under pjit,
+    see EXPERIMENTS §Perf H1 Iter 2), and (b) the two phases can overlap
+    with neighboring compute on real hardware. Each worker shard reduces a
+    1/p slice of the flattened leaf, applies the FMA on its slice, and
+    gathers the result.
+
+    The f32 default matches the registry's ``AggregationContext`` default
+    (core/backends.py) so both entry points agree; bf16 is an explicit
+    opt-in via ``WASGDConfig.comm_dtype="bfloat16"``.
     """
     waxes = _worker_axes_in(mesh)
     p = 1
@@ -81,19 +86,22 @@ def aggregate_leaf_rs_ag(x: jax.Array, theta: jax.Array, beta: float,
     @functools.partial(shard_map, mesh=mesh, in_specs=(spec, P(waxes)),
                        out_specs=spec)
     def run(x_local, theta_local):
-        # x_local: (1, n_pad) — this worker's copy slice
+        # x_local: (w/p, n_pad) — this shard's worker copies. When the worker
+        # dim holds more copies than mesh shards (w/p > 1) the local copies
+        # must be theta-reduced BEFORE the scatter; concatenating them into
+        # the scatter dim would hand each shard a chunk of the wrong copy.
         contrib = (theta_local.astype(jnp.float32)[:, None]
-                   * x_local.astype(jnp.float32)).astype(comm_dtype)
-        # reduce-scatter: each worker ends with a 1/p slice of sum_j theta_j x_j
-        m_slice = jax.lax.psum_scatter(contrib.reshape(-1), ax,
+                   * x_local.astype(jnp.float32)).sum(axis=0) \
+            .astype(comm_dtype)                    # (n_pad,) local partial
+        # reduce-scatter: each shard ends with a 1/p slice of sum_j theta_j x_j
+        m_slice = jax.lax.psum_scatter(contrib, ax,
                                        scatter_dimension=0, tiled=True)
         # all-gather the aggregate slices back (RS+AG == all-reduce bytes,
         # with the ring payload pinned to comm_dtype)
         m = jax.lax.all_gather(m_slice, ax, tiled=True).astype(jnp.float32)
         # the (1-beta) x_i term is worker-LOCAL, so the FMA runs after the
-        # gather — chunks of x_i must never cross workers.
-        out = (1.0 - beta) * x_local.astype(jnp.float32) \
-            + beta * m.reshape(x_local.shape)
+        # gather — the aggregate broadcasts over the local copies.
+        out = (1.0 - beta) * x_local.astype(jnp.float32) + beta * m[None]
         return out.astype(x_local.dtype)
 
     out = run(flat, theta)
@@ -104,11 +112,14 @@ def aggregate_leaf_rs_ag(x: jax.Array, theta: jax.Array, beta: float,
 
 def weighted_aggregate_shard_map(params: Dict, axes: Dict, theta: jax.Array,
                                  beta: float, mesh: Mesh,
-                                 schedule: str = "all_reduce") -> Dict:
+                                 schedule: str = "all_reduce",
+                                 comm_dtype=jnp.float32) -> Dict:
     """schedule: "all_reduce" (psum) or "rs_ag" (reduce-scatter + FMA +
-    all-gather, bf16 payload)."""
-    leaf = aggregate_leaf_shard_map if schedule == "all_reduce" \
-        else aggregate_leaf_rs_ag
+    all-gather with the ring payload pinned to ``comm_dtype``)."""
+    if schedule == "all_reduce":
+        leaf = aggregate_leaf_shard_map
+    else:
+        leaf = functools.partial(aggregate_leaf_rs_ag, comm_dtype=comm_dtype)
 
     def visit(x, ax):
         if is_worker_leaf(ax):

@@ -3,7 +3,8 @@
 ``communicate`` consumes the per-worker loss energies accumulated during the
 round (core/energy.py), computes θ with the configured weight-evaluating
 function (core/weights.py), applies the weighted aggregation (Eq. 10) to the
-parameter tree, and returns the Judge z-scores for the order search.
+parameter tree through the backend selected by ``wcfg.backend``
+(core/backends.py), and returns the Judge z-scores for the order search.
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import WASGDConfig
-from repro.core import aggregate as agg
+from repro.core import backends
 from repro.core.order import judge_scores
 from repro.core.weights import compute_theta, omega, theta_entropy
 
@@ -26,17 +27,22 @@ class CommResult(NamedTuple):
 
 
 def communicate(params: Dict, axes: Dict, h: jax.Array, wcfg: WASGDConfig,
-                leaf_fn=None) -> CommResult:
+                leaf_fn=None, mesh=None) -> CommResult:
     """One communication (lines 12-19 of Alg. 1), SPMD formulation.
 
     ``h``: (p,) loss energies. The paper's send/wait/arrange steps are
     subsumed by SPMD: ``h`` is already globally consistent (tiny all-gather)
     and the weighted sum lowers to one all-reduce over the worker axis.
+
+    The aggregation backend comes from ``wcfg.backend`` (or is derived from
+    the legacy ``quantize_comm``/``hierarchical``/``sharded_aggregate``
+    booleans), with ``comm_dtype``/``n_pods``/``mesh`` riding in the backend
+    context — every config knob reaches the computation. ``leaf_fn`` remains
+    as a legacy escape hatch that bypasses the registry.
     """
     theta = compute_theta(h, wcfg.strategy, wcfg.a_tilde)
-    new_params = agg.weighted_aggregate(
-        params, axes, theta, wcfg.beta,
-        quantize=wcfg.quantize_comm, leaf_fn=leaf_fn)
+    new_params = backends.aggregate_from_config(wcfg, params, axes, theta,
+                                                mesh=mesh, leaf_fn=leaf_fn)
     scores = judge_scores(h)
     metrics = {
         "theta_entropy": theta_entropy(theta),

@@ -1,7 +1,9 @@
 """jit'd public entry points for the wagg kernel.
 
 ``aggregate_tree_wagg`` applies the kernel leaf-wise over a worker-stacked
-parameter tree — a drop-in ``leaf_fn`` for ``core.aggregate.weighted_aggregate``.
+parameter tree — a drop-in ``leaf_fn`` for ``core.aggregate.weighted_aggregate``,
+and the implementation behind the ``"pallas_wagg"`` aggregation backend
+(``core/backends.py``; select it with ``WASGDConfig(backend="pallas_wagg")``).
 On non-TPU backends the kernel runs in interpret mode (CPU validation); the
 pure-jnp reference is available as a fallback.
 """

@@ -23,7 +23,7 @@ from typing import Dict, Optional
 import jax
 
 from repro.configs import ARCH_IDS, SHAPES_BY_NAME, TrainConfig, get_config
-from repro.launch.hlo import collective_bytes
+from repro.launch.hlo import collective_bytes, normalize_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
 from repro.parallel.sharding import num_workers, tree_shardings
@@ -84,7 +84,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text())
 
     flops = float(cost.get("flops", 0.0)) if cost else 0.0

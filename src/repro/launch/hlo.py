@@ -140,3 +140,11 @@ def collective_bytes(text: str) -> Dict[str, int]:
     out["counts"] = counts
     out["by_axis"] = by_axis
     return out
+
+
+def normalize_cost_analysis(cost) -> Dict:
+    """``compiled.cost_analysis()`` returns a dict on current jaxlib and a
+    one-element list of dicts on older releases; normalize to a dict."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import WASGDConfig
 from repro.core import aggregate as agg
+from repro.core import backends
 from repro.core import baselines as bl
 from repro.core.energy import record_mask
 from repro.core.order import judge_scores
@@ -35,8 +36,26 @@ LossFn = Callable[[Dict, Dict], Tuple[jax.Array, Dict]]
 # Communication rules
 # ---------------------------------------------------------------------------
 
-def wasgd_rule(wcfg: WASGDConfig, leaf_fn=None):
-    comm_dtype = jnp.dtype(wcfg.comm_dtype)
+def wasgd_rule(wcfg: WASGDConfig, leaf_fn=None, mesh=None):
+    """Eq. 10 communication rule, routed through the aggregation backend
+    registry (core/backends.py). The backend comes from ``wcfg.backend`` or
+    is derived from the legacy boolean knobs; ``comm_dtype``/``n_pods``/
+    ``mesh`` ride in the backend context. ``leaf_fn`` is the legacy escape
+    hatch that bypasses the registry."""
+    if leaf_fn is None:
+        # fail fast at build time, not at the first jitted step: unknown
+        # backend names, missing meshes, and a degenerate n_pods are all
+        # config errors.
+        name = backends.backend_name_from_config(wcfg)
+        backend = backends.get_backend(name)
+        if getattr(backend, "needs_mesh", False) and mesh is None:
+            raise ValueError(
+                f"aggregation backend {backend.name!r} needs a mesh; pass "
+                f"mesh= through Trainer/build_train_step/wasgd_rule")
+        if name == "hierarchical" and wcfg.n_pods < 2:
+            raise ValueError(
+                "'hierarchical' aggregation backend needs "
+                f"WASGDConfig.n_pods >= 2 (got {wcfg.n_pods})")
 
     def rule(params, axes, h, comm_state):
         if wcfg.a_schedule == "anneal":
@@ -49,11 +68,8 @@ def wasgd_rule(wcfg: WASGDConfig, leaf_fn=None):
         else:
             a_eff = wcfg.a_tilde
         theta = compute_theta(h, wcfg.strategy, a_eff)
-        new_params = agg.weighted_aggregate(
-            params, axes, theta, wcfg.beta,
-            quantize=wcfg.quantize_comm, comm_dtype=comm_dtype,
-            n_pods=wcfg.n_pods if wcfg.hierarchical else 1,
-            leaf_fn=leaf_fn)
+        new_params = backends.aggregate_from_config(
+            wcfg, params, axes, theta, mesh=mesh, leaf_fn=leaf_fn)
         return new_params, comm_state, theta, {}
     return rule
 
@@ -100,9 +116,13 @@ def no_comm_rule():
 def build_train_step(loss_fn: LossFn, optimizer: Optimizer, axes: Dict,
                      wcfg: WASGDConfig, n_workers: int,
                      rule: Optional[Callable] = None,
-                     donate: bool = True) -> Callable:
-    """Build ``train_step(state, batch) -> (state, metrics)`` for one round."""
-    rule = rule if rule is not None else wasgd_rule(wcfg)
+                     donate: bool = True, mesh=None) -> Callable:
+    """Build ``train_step(state, batch) -> (state, metrics)`` for one round.
+
+    ``mesh`` reaches the aggregation-backend context when the default
+    ``wasgd_rule`` is built here (required by the shard_map/rs_ag backends).
+    """
+    rule = rule if rule is not None else wasgd_rule(wcfg, mesh=mesh)
     in_axes_params = agg.worker_in_axes(axes)
     tau = wcfg.tau
     mask = record_mask(tau, wcfg.m_estimate, wcfg.record_chunks)

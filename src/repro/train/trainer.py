@@ -25,13 +25,15 @@ from repro.train import step as step_mod
 
 
 RULES = {
-    "wasgd": lambda tcfg: step_mod.wasgd_rule(tcfg.wasgd),
-    "wasgd+": lambda tcfg: step_mod.wasgd_rule(tcfg.wasgd),
-    "spsgd": lambda tcfg: step_mod.spsgd_rule(),
-    "easgd": lambda tcfg: step_mod.easgd_rule(alpha=0.9 / 16),
-    "omwu": lambda tcfg: step_mod.mwu_rule(),
-    "mmwu": lambda tcfg: step_mod.mwu_rule(),
-    "seq": lambda tcfg: step_mod.no_comm_rule(),
+    "wasgd": lambda tcfg, mesh=None: step_mod.wasgd_rule(tcfg.wasgd,
+                                                         mesh=mesh),
+    "wasgd+": lambda tcfg, mesh=None: step_mod.wasgd_rule(tcfg.wasgd,
+                                                          mesh=mesh),
+    "spsgd": lambda tcfg, mesh=None: step_mod.spsgd_rule(),
+    "easgd": lambda tcfg, mesh=None: step_mod.easgd_rule(alpha=0.9 / 16),
+    "omwu": lambda tcfg, mesh=None: step_mod.mwu_rule(),
+    "mmwu": lambda tcfg, mesh=None: step_mod.mwu_rule(),
+    "seq": lambda tcfg, mesh=None: step_mod.no_comm_rule(),
 }
 
 
@@ -39,7 +41,10 @@ class Trainer:
     def __init__(self, loss_fn, params: Dict, axes: Dict, tcfg: TrainConfig,
                  n_workers: int, rule: str = "wasgd",
                  replicate: bool = True, jit: bool = True,
-                 easgd_alpha: Optional[float] = None):
+                 easgd_alpha: Optional[float] = None, mesh=None):
+        """``mesh`` feeds the aggregation-backend context — required when
+        ``tcfg.wasgd`` selects a backend that places explicit collectives
+        (``shard_map``/``rs_ag``, incl. legacy ``sharded_aggregate=True``)."""
         self.tcfg = tcfg
         self.n_workers = n_workers
         if replicate:
@@ -58,7 +63,7 @@ class Trainer:
         if rule == "easgd" and easgd_alpha is not None:
             rule_fn = step_mod.easgd_rule(easgd_alpha)
         else:
-            rule_fn = RULES[rule](tcfg)
+            rule_fn = RULES[rule](tcfg, mesh=mesh)
         self._step = build_train_step(loss_fn, self.optimizer, axes,
                                       tcfg.wasgd, n_workers, rule=rule_fn)
         if jit:

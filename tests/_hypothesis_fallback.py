@@ -1,0 +1,105 @@
+"""Minimal deterministic stand-in for `hypothesis` when it isn't installed.
+
+The container CI / dev images don't always ship hypothesis; without it four
+test modules used to fail at *collection*. This shim implements exactly the
+surface the suite uses — ``given``, ``settings``, ``strategies.integers /
+floats / lists`` — by sampling a fixed number of pseudo-random examples from
+a seed derived from the test's qualified name, so runs are deterministic.
+
+It is NOT a property-testing engine (no shrinking, no example database). With
+the real `hypothesis` installed (``pip install -e .[test]``) this module is
+never imported — see ``conftest.py``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_MAX_EXAMPLES = 15     # cap: the fallback trades coverage for suite speed
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10,
+          unique: bool = False) -> SearchStrategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        out = []
+        attempts = 0
+        while len(out) < n and attempts < 1000:
+            v = elements.example(rng)
+            attempts += 1
+            if unique and v in out:
+                continue
+            out.append(v)
+        return out
+    return SearchStrategy(draw)
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise NotImplementedError("fallback @given supports keyword "
+                                  "strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_max_examples", _MAX_EXAMPLES),
+                    _MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, **{**drawn, **kwargs})
+        # pytest introspects the signature for fixture injection: hide the
+        # strategy-filled parameters, keep any others (parametrize/fixtures).
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in kw_strategies])
+        del wrapper.__wrapped__
+        wrapper._max_examples = _MAX_EXAMPLES
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return deco
+
+
+class settings:
+    """Accepts the kwargs the suite uses (max_examples, deadline) and applies
+    the example cap to an already-``given``-wrapped test."""
+
+    def __init__(self, max_examples=None, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._max_examples = min(self.max_examples, _MAX_EXAMPLES)
+        return fn
+
+
+def install() -> None:
+    """Register this shim as the ``hypothesis`` package in sys.modules."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers, st.floats, st.lists = integers, floats, lists
+    st.SearchStrategy = SearchStrategy
+    hyp.given, hyp.settings, hyp.strategies = given, settings, st
+    hyp.__is_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -4,5 +4,15 @@ import sys
 # Make `repro` importable without installation (PYTHONPATH=src also works).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Property tests prefer the real `hypothesis` (pip install -e .[test]); on
+# bare images fall back to the deterministic shim so the suite still collects
+# and exercises a sampled subset of each property.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()
+
 # Tests must see the real single CPU device — never the dry-run's 512
 # placeholders (the dry-run sets its own XLA_FLAGS before any import).

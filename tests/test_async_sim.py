@@ -6,7 +6,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.async_sim import StepTimeModel, run_parallel_sgd
+from repro.core.async_sim import StepTimeModel, masked_theta, run_parallel_sgd
+from repro.core.weights import compute_theta
 from repro.data import make_classification
 from repro.models import cnn
 from repro.models.param import build
@@ -60,6 +61,28 @@ def test_async_gates_on_pth_arrival():
     assert asyn.wall <= sync.wall             # p-th arrival <= max arrival
     assert asyn.dropped_rounds == 2 * 6       # b backups excluded per round
     assert np.isfinite(asyn.losses).all()
+
+
+def test_masked_theta_excludes_stragglers_before_normalization():
+    """Regression for the straggler-sentinel bug: the excluded workers'
+    sentinel energies used to ride into ``normalize_energy``'s sum, so active
+    workers' normalized energies collapsed toward 0 and their Boltzmann
+    weights degenerated to near-equal regardless of loss."""
+    losses = np.array([0.1, 1.0, 2.0, 0.5, 9.9, 9.9])
+    active = np.array([True, True, True, True, False, False])
+    theta = masked_theta(losses, active, a_tilde=5.0)
+    # stragglers get exactly zero weight; weights sum to 1
+    assert theta[~active].max() == 0.0
+    np.testing.assert_allclose(theta.sum(), 1.0, rtol=1e-6)
+    # p-of-p+b weighting: active weights equal Boltzmann over ACTIVE energies
+    expected = np.asarray(compute_theta(jnp.asarray(losses[active]),
+                                        "boltzmann", 5.0))
+    np.testing.assert_allclose(theta[active], expected, rtol=1e-5)
+    # loss-ordered and decisively non-equal (the pre-fix code returned
+    # near-uniform weights here: max/min ~ 1.0)
+    order = np.argsort(losses[active])
+    assert (np.diff(theta[active][order]) < 0).all()
+    assert theta[active].max() / theta[active].min() > 1.5
 
 
 def test_async_still_trains():

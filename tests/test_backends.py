@@ -1,0 +1,223 @@
+"""Aggregation backend registry: numerical parity across all backends, config
+plumbing through ``communicate``/``wasgd_rule``, and regressions for the
+config-dropping and rs_ag w/p>1 bugs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs.base import WASGDConfig
+from repro.core import backends as B
+from repro.core import communicate
+from repro.core.aggregate import weighted_aggregate
+from repro.core.shardmap_agg import weighted_aggregate_shard_map
+from repro.core.weights import compute_theta
+from repro.train.step import wasgd_rule
+
+W = 4
+BETA = 0.9
+
+
+def _mesh():
+    """Single-device worker mesh: collectives are trivial but every shard_map
+    code path (specs, scatter, gather, w/p>1 local reduction) still runs."""
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+def _fixture(seed=0):
+    k = jax.random.key(seed)
+    # "head" is 33-wide: odd on purpose, to exercise the rs_ag padding path.
+    params = {"blk": {"w": jax.random.normal(k, (W, 6, 5))},
+              "head": jax.random.normal(jax.random.fold_in(k, 1), (W, 33)),
+              "experts": {"up": jnp.ones((3, 2))}}
+    axes = {"blk": {"w": ("worker", None, None)},
+            "head": ("worker", None),
+            "experts": {"up": ("experts", None)}}
+    theta = jax.nn.softmax(jax.random.normal(jax.random.fold_in(k, 2), (W,)))
+    return params, axes, theta
+
+
+def _max_err(a, b):
+    return float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics
+# ---------------------------------------------------------------------------
+
+def test_all_expected_backends_registered():
+    assert set(B.available_backends()) >= {
+        "einsum", "quantized", "hierarchical", "shard_map", "rs_ag",
+        "pallas_wagg"}
+
+
+def test_get_backend_unknown_raises():
+    with pytest.raises(KeyError, match="unknown aggregation backend"):
+        B.get_backend("does_not_exist")
+
+
+def test_register_backend_duplicate_raises_and_overwrite_works():
+    def fn(params, axes, theta, beta, ctx):
+        return params
+    B.register_backend("tmp_test_backend", fn)
+    with pytest.raises(ValueError, match="already registered"):
+        B.register_backend("tmp_test_backend", fn)
+    B.register_backend("tmp_test_backend", fn, overwrite=True)
+    assert B.get_backend("tmp_test_backend").name == "tmp_test_backend"
+    del B._REGISTRY["tmp_test_backend"]
+
+
+def test_mesh_requiring_backend_raises_without_mesh():
+    params, axes, theta = _fixture()
+    for name in ("shard_map", "rs_ag"):
+        with pytest.raises(ValueError, match="needs ctx.mesh"):
+            B.aggregate_with(name, params, axes, theta, BETA)
+
+
+def test_hierarchical_backend_rejects_bad_n_pods():
+    """Fail clear instead of silently degrading to the flat einsum path."""
+    params, axes, theta = _fixture()
+    for n_pods in (1, 3):               # default, and non-divisor of w=4
+        ctx = B.AggregationContext(n_pods=n_pods)
+        with pytest.raises(ValueError, match="n_pods"):
+            B.aggregate_with("hierarchical", params, axes, theta, BETA,
+                             ctx=ctx)
+
+
+def test_aggregate_from_config_matches_explicit_backend():
+    params, axes, theta = _fixture()
+    out = B.aggregate_from_config(WASGDConfig(quantize_comm=True), params,
+                                  axes, theta)
+    ref = B.aggregate_with("quantized", params, axes, theta, BETA)
+    np.testing.assert_array_equal(np.asarray(out["head"]),
+                                  np.asarray(ref["head"]))
+
+
+@pytest.mark.parametrize("cfg,expected", [
+    (WASGDConfig(), "einsum"),
+    (WASGDConfig(quantize_comm=True), "quantized"),
+    (WASGDConfig(hierarchical=True, n_pods=2), "hierarchical"),
+    (WASGDConfig(sharded_aggregate=True), "rs_ag"),
+    (WASGDConfig(backend="pallas_wagg", quantize_comm=True), "pallas_wagg"),
+])
+def test_backend_name_from_config(cfg, expected):
+    assert B.backend_name_from_config(cfg) == expected
+
+
+# ---------------------------------------------------------------------------
+# Shared numerical-parity fixture: every backend vs the einsum reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(
+    {"einsum", "quantized", "hierarchical", "shard_map", "rs_ag",
+     "pallas_wagg"}))
+def test_backend_parity_with_einsum_reference(name):
+    params, axes, theta = _fixture()
+    ctx = B.AggregationContext(mesh=_mesh(), comm_dtype=jnp.float32, n_pods=2)
+    ref = B.aggregate_with("einsum", params, axes, theta, BETA, ctx=ctx)
+    out = B.aggregate_with(name, params, axes, theta, BETA, ctx=ctx)
+    # int8 payload: per-leaf scale bounds the error at ~beta * max|x| / 127
+    tol = 0.06 if name == "quantized" else 1e-5
+    assert _max_err(out["blk"]["w"], ref["blk"]["w"]) < tol
+    assert _max_err(out["head"], ref["head"]) < tol
+    # non-worker leaves pass through untouched for every backend
+    np.testing.assert_array_equal(np.asarray(out["experts"]["up"]),
+                                  np.asarray(params["experts"]["up"]))
+
+
+# ---------------------------------------------------------------------------
+# Regression: communicate used to drop comm_dtype / hierarchical / rs_ag
+# ---------------------------------------------------------------------------
+
+def test_communicate_honors_comm_dtype():
+    """Pre-fix, ``communicate`` passed only ``quantize_comm`` downstream, so a
+    bf16 comm config silently computed in f32 — outputs were identical."""
+    params, axes, _ = _fixture()
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    f32 = communicate(params, axes, h, WASGDConfig())
+    bf16 = communicate(params, axes, h, WASGDConfig(comm_dtype="bfloat16"))
+    assert _max_err(f32.params["head"], bf16.params["head"]) > 1e-4
+    # and bf16 stays close: same rule, lower-precision payload
+    assert _max_err(f32.params["head"], bf16.params["head"]) < 0.1
+
+
+def test_communicate_honors_hierarchical():
+    """A hierarchical+bf16 config must match the 2-hop reference computation
+    (pre-fix it ignored both knobs and equalled the plain f32 einsum)."""
+    params, axes, _ = _fixture()
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    wcfg = WASGDConfig(hierarchical=True, n_pods=2, comm_dtype="bfloat16")
+    out = communicate(params, axes, h, wcfg)
+    theta = compute_theta(h, wcfg.strategy, wcfg.a_tilde)
+    ref = weighted_aggregate(params, axes, theta, wcfg.beta,
+                             comm_dtype=jnp.bfloat16, n_pods=2)
+    np.testing.assert_allclose(np.asarray(out.params["head"]),
+                               np.asarray(ref["head"]), rtol=1e-6, atol=1e-7)
+    plain = communicate(params, axes, h, WASGDConfig())
+    assert _max_err(out.params["head"], plain.params["head"]) > 1e-4
+
+
+def test_communicate_routes_sharded_aggregate_through_rs_ag():
+    params, axes, _ = _fixture()
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    wcfg = WASGDConfig(sharded_aggregate=True)
+    with pytest.raises(ValueError, match="needs ctx.mesh"):
+        communicate(params, axes, h, wcfg)
+    out = communicate(params, axes, h, wcfg, mesh=_mesh())
+    ref = communicate(params, axes, h, WASGDConfig())
+    assert _max_err(out.params["head"], ref.params["head"]) < 1e-5
+
+
+def test_communicate_backend_field_selects_quantized():
+    params, axes, _ = _fixture()
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    ref = communicate(params, axes, h, WASGDConfig())
+    out = communicate(params, axes, h, WASGDConfig(backend="quantized"))
+    err = _max_err(out.params["head"], ref.params["head"])
+    assert 0 < err < 0.06
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: WASGDConfig.backend through the train-step rule (jitted)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["quantized", "hierarchical", "pallas_wagg"])
+def test_wasgd_rule_selects_backend_end_to_end(name):
+    params, axes, _ = _fixture()
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    wcfg = WASGDConfig(backend=name, n_pods=2)
+    rule = wasgd_rule(wcfg)
+    new_params, _, theta, _ = jax.jit(
+        lambda p, e: rule(p, axes, e, ()))(params, h)
+    ref = weighted_aggregate(params, axes, theta, wcfg.beta)
+    tol = 0.06 if name == "quantized" else 1e-5
+    assert _max_err(new_params["head"], ref["head"]) < tol
+
+
+def test_wasgd_rule_mesh_backend_end_to_end():
+    params, axes, _ = _fixture()
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    rule = wasgd_rule(WASGDConfig(backend="rs_ag"), mesh=_mesh())
+    new_params, _, theta, _ = rule(params, axes, h, ())
+    ref = weighted_aggregate(params, axes, theta, 0.9,
+                             comm_dtype=jnp.float32)
+    assert _max_err(new_params["head"], ref["head"]) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Regression: rs_ag with more worker copies than mesh shards (w/p > 1)
+# ---------------------------------------------------------------------------
+
+def test_rs_ag_more_copies_than_shards():
+    """Pre-fix, ``aggregate_leaf_rs_ag`` flattened the local copies INTO the
+    scatter dimension, so with w/p > 1 each copy received a chunk of the
+    concatenation instead of the theta-reduced aggregate."""
+    params, axes, theta = _fixture()
+    mesh = _mesh()                      # 1 shard, 4 worker copies: w/p = 4
+    out = weighted_aggregate_shard_map(params, axes, theta, BETA, mesh,
+                                       schedule="rs_ag",
+                                       comm_dtype=jnp.float32)
+    ref = weighted_aggregate(params, axes, theta, BETA)
+    assert _max_err(out["blk"]["w"], ref["blk"]["w"]) < 1e-5
+    assert _max_err(out["head"], ref["head"]) < 1e-5

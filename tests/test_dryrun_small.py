@@ -22,7 +22,7 @@ SCRIPT = textwrap.dedent("""
     from repro.configs import SHAPES_BY_NAME, TrainConfig, WASGDConfig, get_smoke_config
     from repro.configs.base import InputShape
     from repro.launch.specs import input_specs
-    from repro.launch.hlo import collective_bytes
+    from repro.launch.hlo import collective_bytes, normalize_cost_analysis
     from repro.parallel.sharding import num_workers, tree_shardings
 
     arch, shape_kind, multi = json.loads(os.environ["CASE"])
@@ -45,7 +45,7 @@ SCRIPT = textwrap.dedent("""
     with mesh:
         lowered = jax.jit(wl.fn, in_shardings=in_sh).lower(*wl.arg_shapes)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text())
     assert cost.get("flops", 0) > 0
     print("RESULT", json.dumps({"ok": True, "coll_total": coll["total"],
@@ -139,12 +139,30 @@ RSAG_SCRIPT = textwrap.dedent("""
     with mesh:
         ref = weighted_aggregate(params, axes, theta, 0.85)
         f = jax.jit(lambda p, t: weighted_aggregate_shard_map(
-            p, axes, t, 0.85, mesh, schedule="rs_ag"))
+            p, axes, t, 0.85, mesh, schedule="rs_ag",
+            comm_dtype=jnp.bfloat16))
         out = f(params, theta_sh)
         txt = f.lower(params, theta).compile().as_text()
     np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(ref["a"]),
                                rtol=2e-2, atol=2e-2)
     assert "reduce-scatter(" in txt and "all-gather(" in txt
+
+    # w/p > 1: 16 worker copies over 8 shards — the local copies must be
+    # theta-reduced before the scatter (regression: they used to be
+    # concatenated into the scatter dimension, corrupting the aggregate).
+    w2 = 16
+    params2 = {"a": jax.random.normal(jax.random.key(2), (w2, 13, 7))}
+    theta2 = jax.nn.softmax(jax.random.normal(jax.random.key(3), (w2,)))
+    params2["a"] = jax.device_put(params2["a"],
+                                  NamedSharding(mesh, P(("data",), None, None)))
+    theta2_sh = jax.device_put(theta2, NamedSharding(mesh, P(("data",))))
+    with mesh:
+        ref2 = weighted_aggregate(params2, axes, theta2, 0.85)
+        out2 = jax.jit(lambda p, t: weighted_aggregate_shard_map(
+            p, axes, t, 0.85, mesh, schedule="rs_ag",
+            comm_dtype=jnp.bfloat16))(params2, theta2_sh)
+    np.testing.assert_allclose(np.asarray(out2["a"]), np.asarray(ref2["a"]),
+                               rtol=2e-2, atol=2e-2)
     print("RESULT ok")
 """)
 
