@@ -3,6 +3,8 @@ references (interpret mode on CPU — relative numbers are indicative only;
 the BlockSpec tiling is the TPU deployment artifact)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -63,6 +65,7 @@ def run(fast: bool = False):
 
     run_extra(fast=fast)
     run_backends(fast=fast)
+    run_async(fast=fast)
 
 
 def run_backends(fast: bool = False):
@@ -89,6 +92,100 @@ def run_backends(fast: bool = False):
         reps = 2 if name == "pallas_wagg" else 5
         emit(f"agg_backend_{name}", _time(fn, x, theta, n=reps),
              f"shape={p}x{n}")
+
+
+def run_async(fast: bool = False, out_path: str = "results/BENCH_async.json"):
+    """Alg. 4 round sweep: host-side event simulation vs the on-device
+    ``async_*`` backends, same injected straggler schedule. Emits CSV rows
+    AND writes ``BENCH_async.json`` so the async perf trajectory is recorded
+    per-commit alongside the CSV artifact. Single-host numbers are
+    indicative only (the collectives are trivial); the shape of the record —
+    per-round wall time, final loss, dropped rounds — is the artifact.
+    The on_device rows include one trace+compile (each driver call builds a
+    fresh jitted round; ``includes_compile`` marks them in the JSON), so
+    compare them against each other, not against the warmed host_sim row."""
+    import functools
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import backends as B
+    from repro.core.async_device import run_parallel_sgd_on_device
+    from repro.core.async_sim import (StepTimeModel, make_schedule,
+                                      run_parallel_sgd)
+    from repro.data import make_classification
+    from repro.models import cnn
+    from repro.models.param import build
+
+    p, b, tau = (2, 1, 2) if fast else (6, 2, 4)
+    rounds = 4 if fast else 10
+    w = p + b
+    X, y = make_classification(0, 1024, d=16, n_classes=4)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=16, d_hidden=32, n_classes=4), jax.random.key(0))
+
+    def loss_fn(pp, bb):
+        return cnn.classification_loss(cnn.mlp_apply(pp, bb["x"]),
+                                       bb["y"]), {}
+
+    def grad_fn(ps, batch):
+        one = lambda pp, bb: loss_fn(pp, bb)[0]
+        losses = jax.vmap(one)(ps, batch)
+        grads = jax.grad(lambda q: jax.vmap(one)(q, batch).sum())(ps)
+        return losses, grads
+    grad_fn = jax.jit(grad_fn)
+
+    def batches():
+        rng = np.random.default_rng(1)
+        while True:
+            idx = rng.integers(0, len(X), size=(w, tau * 8))
+            yield {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    sched = make_schedule(
+        StepTimeModel(w, sigma=0.3, straggle_p=0.1, straggle_mult=20,
+                      seed=3),
+        rounds=rounds, tau=tau, n_workers=p, backups=b)
+    # worker dim must divide the mesh; fall back to 1 device otherwise
+    devs = jax.devices()
+    mesh_devs = devs if w % len(devs) == 0 else devs[:1]
+    mesh = Mesh(np.array(mesh_devs), ("data",))
+
+    records = []
+
+    def one(mode, fn, warmup, includes_compile):
+        if warmup:
+            fn()
+        t0 = time.time()
+        out = fn()
+        us = (time.time() - t0) / rounds * 1e6
+        records.append({"mode": mode, "us_per_round": round(us, 1),
+                        "includes_compile": includes_compile,
+                        "final_loss": float(out.losses[-1]),
+                        "sim_wall": out.wall,
+                        "dropped_rounds": out.dropped_rounds,
+                        "workers": w, "backups": b, "tau": tau,
+                        "rounds": rounds, "mesh_devices": len(mesh_devs),
+                        "host_devices": len(jax.devices())})
+        emit(f"async_round_{mode}", us,
+             f"p{p}+b{b};final_loss={out.losses[-1]:.4f};"
+             f"dropped={out.dropped_rounds}")
+
+    # host_sim: warm grad_fn once so the timed pass is steady-state.
+    one("host_sim", lambda: run_parallel_sgd(
+        loss_fn, grad_fn, params, axes, batches(), n_workers=p, backups=b,
+        tau=tau, rounds=rounds, lr=0.05, schedule=sched),
+        warmup=True, includes_compile=False)
+    for backend in ("async_einsum", "async_shard_map", "async_rs_ag"):
+        # each driver call builds a fresh jitted round, so a warm-up pass
+        # can't pre-compile it — skip the dead work and flag the record.
+        one(f"on_device_{backend}", lambda be=backend: run_parallel_sgd_on_device(
+            grad_fn, params, axes, batches(), n_workers=p, backups=b,
+            tau=tau, rounds=rounds, lr=0.05, schedule=sched, backend=be,
+            ctx=B.AggregationContext(mesh=mesh)),
+            warmup=False, includes_compile=True)
+
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"bench": "async_round", "records": records}, f, indent=2)
+    emit("async_bench_json", 0.0, out_path)
 
 
 def run_extra(fast: bool = False):

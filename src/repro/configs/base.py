@@ -226,9 +226,19 @@ class WASGDConfig:
     sharded_aggregate: bool = False   # beyond-paper: reduce-scatter + local axpy + all-gather
     backend: str = ""                 # aggregation backend name (core/backends.py:
                                       # einsum | quantized | hierarchical |
-                                      # shard_map | rs_ag | pallas_wagg).
+                                      # shard_map | rs_ag | pallas_wagg |
+                                      # async_einsum | async_shard_map |
+                                      # async_rs_ag).
                                       # "" derives it from the legacy booleans
                                       # above (backend_name_from_config).
+    async_mode: str = "host_sim"      # Alg. 4 execution: "host_sim" keeps the
+                                      # p-of-(p+b) regime in the numpy event
+                                      # simulation (core/async_sim.py);
+                                      # "on_device" runs the masked round as
+                                      # one jitted program on the worker mesh
+                                      # axis (core/async_device.py) — the
+                                      # round's activity mask rides in
+                                      # TrainState.comm_state.
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,6 +17,14 @@ from repro.core.backends import (
     get_backend,
     register_backend,
 )
+from repro.core.async_device import (
+    ASYNC_BACKENDS,
+    async_backend_name,
+    build_async_round,
+    run_parallel_sgd_on_device,
+    weighted_aggregate_async,
+)
+from repro.core.async_sim import StragglerSchedule, make_schedule
 from repro.core.energy import estimation_error, record_indices, record_mask
 from repro.core.order import OrderState, grouped_order, judge_scores
 from repro.core.wasgd import CommResult, communicate
@@ -26,6 +34,7 @@ from repro.core.weights import (
     compute_theta,
     equal_weights,
     inverse_weights,
+    masked_compute_theta,
     normalize_energy,
     omega,
     theta_entropy,
@@ -38,9 +47,12 @@ __all__ = [
     "aggregate_with",
     "available_backends", "backend_name_from_config", "context_from_config",
     "get_backend", "register_backend",
+    "ASYNC_BACKENDS", "async_backend_name", "build_async_round",
+    "run_parallel_sgd_on_device", "weighted_aggregate_async",
+    "StragglerSchedule", "make_schedule",
     "estimation_error", "record_indices", "record_mask",
     "OrderState", "grouped_order", "judge_scores", "CommResult",
     "communicate", "best_weights", "boltzmann_weights", "compute_theta",
-    "equal_weights", "inverse_weights", "normalize_energy", "omega",
-    "theta_entropy",
+    "equal_weights", "inverse_weights", "masked_compute_theta",
+    "normalize_energy", "omega", "theta_entropy",
 ]

@@ -1,0 +1,236 @@
+"""On-device asynchronous WASGD+ (paper Alg. 4) through the backend registry.
+
+``core/async_sim.py`` reproduces Alg. 4's *scheduling semantics* as a
+host-side numpy event simulation; this module runs the same p-of-(p+b)
+round as ONE jitted program on the worker mesh axis. Each worker's activity
+is a traced ``(w,)`` boolean mask:
+
+    local tau steps -> loss energies -> masked Boltzmann theta
+        (``weights.masked_compute_theta``: stragglers' theta is exactly 0)
+    -> Eq. 10 aggregate over the ACTIVE workers, placed as explicit
+       collectives under ``shard_map`` (all-reduce or rs_ag schedule)
+    -> straggler late-join: inactive workers adopt the aggregate
+       m = sum_j theta_j x_j when they arrive (Alg. 4 line 20).
+
+Because the stragglers' theta is zero they contribute nothing to the psum,
+so exclusion needs no gather/compaction — the whole round stays SPMD and
+the mask can change every round without recompilation.
+
+The registry names:
+
+``async_einsum``     meshless reference (pjit tensordot + late-join) — the
+                     in-registry twin of the host simulation's update.
+``async_shard_map``  masked psum + late-join in one ``shard_map`` program.
+``async_rs_ag``      reduce-scatter + local FMA + all-gather with the ring
+                     payload pinned to ``ctx.comm_dtype``, + late-join.
+
+The activity mask rides in ``AggregationContext.active`` (``None`` means
+everyone is active, which degenerates to the synchronous backends). The host
+simulation stays the semantic oracle: ``tests/test_async_device.py`` injects
+the same ``StragglerSchedule`` into both paths and requires leaf-for-leaf
+parity across all weight strategies and both mesh schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import backends
+from repro.core import shardmap_agg as smagg
+from repro.core.aggregate import _axes_is_leaf, is_worker_leaf
+from repro.core.async_sim import (AsyncResult, StepTimeModel,
+                                  StragglerSchedule, make_schedule)
+from repro.core.weights import masked_compute_theta
+
+ASYNC_BACKENDS = ("async_einsum", "async_shard_map", "async_rs_ag")
+
+# sync backend -> its Alg. 4 (masked + late-join) counterpart
+_ASYNC_OF = {"einsum": "async_einsum", "shard_map": "async_shard_map",
+             "rs_ag": "async_rs_ag"}
+
+
+def async_backend_name(name: str) -> str:
+    """Map a (possibly synchronous) backend name to its async counterpart."""
+    if name in ASYNC_BACKENDS:
+        return name
+    if name in _ASYNC_OF:
+        return _ASYNC_OF[name]
+    raise ValueError(
+        f"aggregation backend {name!r} has no async (Alg. 4) counterpart; "
+        f"use one of {sorted(_ASYNC_OF)} or {sorted(ASYNC_BACKENDS)}")
+
+
+# ---------------------------------------------------------------------------
+# Masked Eq. 10 + late-join leaves
+# ---------------------------------------------------------------------------
+
+def _resolve_active(theta: jax.Array, active: Optional[jax.Array]):
+    if active is None:
+        return jnp.ones(theta.shape, bool)
+    return active.astype(bool)
+
+
+def aggregate_leaf_async_einsum(x: jax.Array, theta: jax.Array,
+                                active: jax.Array, beta,
+                                comm_dtype=jnp.float32) -> jax.Array:
+    """Meshless reference: pjit tensordot aggregate + late-join ``where`` —
+    the same update the host event simulation applies per round."""
+    xf = x.astype(jnp.float32)
+    theta = theta.astype(jnp.float32)
+    m = jnp.tensordot(theta.astype(comm_dtype), xf.astype(comm_dtype),
+                      axes=1).astype(jnp.float32)
+    fma = (1.0 - beta) * xf + beta * m[None]
+    mask = active.reshape((-1,) + (1,) * (x.ndim - 1))
+    out = jnp.where(mask, fma, jnp.broadcast_to(m[None], fma.shape))
+    return out.astype(x.dtype)
+
+
+def weighted_aggregate_async(params: Dict, axes: Dict, theta: jax.Array,
+                             active: Optional[jax.Array], beta,
+                             mesh=None, schedule: str = "all_reduce",
+                             comm_dtype=jnp.float32) -> Dict:
+    """Apply the masked Eq. 10 + late-join to all worker leaves.
+
+    ``schedule``: "einsum" (meshless), "all_reduce" (masked psum under
+    shard_map) or "rs_ag" (reduce-scatter + FMA + all-gather). The mesh
+    schedules are the SAME collective leaves as the synchronous
+    ``shard_map``/``rs_ag`` backends (core/shardmap_agg.py) with the
+    late-join mask passed through — stragglers carry theta == 0, so the
+    collectives already exclude them, and inactive workers adopt the
+    aggregate m (analytically equal to sum_j theta_j [(1-beta)x_j + beta*m]).
+    """
+    active = _resolve_active(theta, active)
+    if schedule == "einsum":
+        leaf = functools.partial(aggregate_leaf_async_einsum,
+                                 comm_dtype=comm_dtype)
+    elif schedule == "all_reduce":
+        leaf = lambda x, t, act, b: smagg.aggregate_leaf_shard_map(
+            x, t, b, mesh, active=act)
+    elif schedule == "rs_ag":
+        leaf = lambda x, t, act, b: smagg.aggregate_leaf_rs_ag(
+            x, t, b, mesh, comm_dtype=comm_dtype, active=act)
+    else:
+        raise ValueError(f"unknown async schedule {schedule!r}")
+
+    def visit(x, ax):
+        if is_worker_leaf(ax):
+            return leaf(x, theta, active, beta)
+        return x
+
+    return jax.tree.map(visit, params, axes, is_leaf=_axes_is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Registry entries
+# ---------------------------------------------------------------------------
+
+@backends.register_backend("async_einsum")
+def _async_einsum(params, axes, theta, beta, ctx):
+    return weighted_aggregate_async(params, axes, theta, ctx.active, beta,
+                                    schedule="einsum",
+                                    comm_dtype=ctx.comm_dtype)
+
+
+@backends.register_backend("async_shard_map", needs_mesh=True)
+def _async_shard_map(params, axes, theta, beta, ctx):
+    return weighted_aggregate_async(params, axes, theta, ctx.active, beta,
+                                    mesh=ctx.mesh, schedule="all_reduce")
+
+
+@backends.register_backend("async_rs_ag", needs_mesh=True)
+def _async_rs_ag(params, axes, theta, beta, ctx):
+    return weighted_aggregate_async(params, axes, theta, ctx.active, beta,
+                                    mesh=ctx.mesh, schedule="rs_ag",
+                                    comm_dtype=ctx.comm_dtype)
+
+
+# ---------------------------------------------------------------------------
+# One compiled Alg. 4 round + the driver loop
+# ---------------------------------------------------------------------------
+
+def build_async_round(grad_fn: Callable, axes: Dict, *, lr: float,
+                      beta: float = 0.9, a_tilde: float = 1.0,
+                      strategy: str = "boltzmann",
+                      backend: str = "async_shard_map",
+                      ctx: Optional[backends.AggregationContext] = None,
+                      jit: bool = True) -> Callable:
+    """Build ``round_fn(params, batch, active) -> (params, losses, theta)``.
+
+    One jitted program per p-of-(p+b) round: the local steps, the masked
+    Boltzmann theta, the Eq. 10 aggregate, and the straggler late-join all
+    trace together — ``active`` is a ``(w,)`` bool input, so a new straggler
+    set per round costs no recompilation.
+
+    ``grad_fn(params_stacked, batch) -> (losses (w,), grads_stacked)`` —
+    the same contract as ``async_sim.run_parallel_sgd``.
+    """
+    ctx = backends.DEFAULT_CONTEXT if ctx is None else ctx
+    name = async_backend_name(backend)
+    backend_obj = backends.get_backend(name)
+    if getattr(backend_obj, "needs_mesh", False) and ctx.mesh is None:
+        raise ValueError(
+            f"async aggregation backend {name!r} places explicit "
+            f"collectives and needs ctx.mesh (AggregationContext(mesh=...))")
+    w_axes = jax.tree.map(lambda ax: ("worker",) + tuple(ax), axes,
+                          is_leaf=_axes_is_leaf)
+
+    def round_fn(params, batch, active):
+        losses, grads = grad_fn(params, batch)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        theta = masked_compute_theta(losses, active, a_tilde, strategy)
+        params = backend_obj.aggregate(
+            params, w_axes, theta, beta,
+            ctx=dataclasses.replace(ctx, active=active))
+        return params, losses, theta
+
+    return jax.jit(round_fn, donate_argnums=(0,)) if jit else round_fn
+
+
+def run_parallel_sgd_on_device(grad_fn: Callable, params0: Dict, axes: Dict,
+                               batches, *, n_workers: int, backups: int,
+                               tau: int, rounds: int, lr: float,
+                               time_model: Optional[StepTimeModel] = None,
+                               schedule: Optional[StragglerSchedule] = None,
+                               a_tilde: float = 1.0, beta: float = 0.9,
+                               strategy: str = "boltzmann",
+                               synchronous: bool = False,
+                               backend: str = "async_shard_map",
+                               ctx: Optional[backends.AggregationContext]
+                               = None) -> AsyncResult:
+    """On-device drop-in for ``async_sim.run_parallel_sgd``.
+
+    Same scheduling semantics (inject the same ``schedule`` for parity),
+    but every round executes as one jitted SPMD program through the
+    ``async_*`` backend family. ``AsyncResult.params`` is the final
+    worker-stacked parameter tree the parity harness compares leaf-for-leaf
+    against the host simulation's.
+    """
+    if schedule is None:
+        if time_model is None:
+            raise ValueError("pass either time_model= or schedule=")
+        schedule = make_schedule(time_model, rounds=rounds, tau=tau,
+                                 n_workers=n_workers, backups=backups,
+                                 synchronous=synchronous)
+    w = n_workers + backups
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), params0)
+    round_fn = build_async_round(grad_fn, axes, lr=lr, beta=beta,
+                                 a_tilde=a_tilde, strategy=strategy,
+                                 backend=backend, ctx=ctx)
+
+    losses_hist = []
+    for r in range(rounds):
+        batch = next(batches)                      # (w, tau*b_local, ...)
+        active = jnp.asarray(schedule.active[r])
+        params, losses, _ = round_fn(params, batch, active)
+        losses_np = np.asarray(losses)
+        losses_hist.append(float(losses_np[schedule.active[r]].mean()))
+
+    wall = float(schedule.round_wall[:rounds].sum())
+    dropped = int((~schedule.active[:rounds]).sum())
+    return AsyncResult(np.asarray(losses_hist), wall, dropped, params)

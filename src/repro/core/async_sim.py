@@ -64,18 +64,56 @@ class StepTimeModel:
         return t.sum(axis=1)
 
 
+class StragglerSchedule(NamedTuple):
+    """Precomputed p-of-(p+b) activity schedule — the host-side scheduling
+    semantics of Alg. 4, separated from parameter advancement so the SAME
+    schedule can be injected into both this event simulation and the
+    on-device path (core/async_device.py) for leaf-for-leaf parity tests."""
+    active: np.ndarray          # (rounds, w) bool — round-r aggregation set
+    round_wall: np.ndarray      # (rounds,) simulated gate time per round
+
+
+def make_schedule(time_model: StepTimeModel, *, rounds: int, tau: int,
+                  n_workers: int, backups: int = 0,
+                  synchronous: bool = False) -> StragglerSchedule:
+    """Sample the per-round activity sets from the step-time model.
+
+    Async (Alg. 4 line 16): the first ``n_workers`` arrivals of each round
+    form the aggregation set, and the p-th arrival gates the round's wall
+    time. Synchronous (Alg. 1): everyone is active, the slowest gates.
+    """
+    w = n_workers + backups
+    active = np.ones((rounds, w), bool)
+    round_wall = np.zeros(rounds)
+    for r in range(rounds):
+        t = time_model.round_times(tau)
+        if synchronous:
+            round_wall[r] = t.max()
+        else:
+            order = np.argsort(t)
+            active[r] = False
+            active[r, order[:n_workers]] = True    # first p arrivals
+            round_wall[r] = t[order[n_workers - 1]]
+    return StragglerSchedule(active, round_wall)
+
+
 class AsyncResult(NamedTuple):
     losses: np.ndarray          # per-round mean loss (over active workers)
     wall: float                 # simulated wall-clock
     dropped_rounds: int         # total straggler exclusions
+    params: Optional[Dict] = None   # final worker-stacked parameter tree
+                                    # (leaf-for-leaf parity vs async_device)
 
 
 def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
                      axes: Dict, batches, *, n_workers: int, backups: int,
                      tau: int, rounds: int, lr: float,
-                     time_model: StepTimeModel, a_tilde: float = 1.0,
+                     time_model: Optional[StepTimeModel] = None,
+                     a_tilde: float = 1.0,
                      beta: float = 0.9, synchronous: bool = False,
+                     strategy: str = "boltzmann",
                      backend: str = "einsum",
+                     schedule: Optional[StragglerSchedule] = None,
                      ctx: Optional[backends.AggregationContext] = None
                      ) -> AsyncResult:
     """Alg. 4 if ``synchronous=False`` (p of p+b fastest aggregate), Alg. 1
@@ -85,8 +123,18 @@ def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
     ``backend`` names the aggregation backend (core/backends.py) applying
     Eq. 10 over the active workers; ``ctx`` carries its mesh/comm_dtype/
     n_pods knobs (defaults suit the meshless ``einsum`` family).
+
+    ``schedule`` overrides ``time_model``: a precomputed activity schedule
+    (``make_schedule``), so parity tests can inject the exact same straggler
+    pattern here and into ``async_device.run_parallel_sgd_on_device``.
     """
     ctx = backends.DEFAULT_CONTEXT if ctx is None else ctx
+    if schedule is None:
+        if time_model is None:
+            raise ValueError("pass either time_model= or schedule=")
+        schedule = make_schedule(time_model, rounds=rounds, tau=tau,
+                                 n_workers=n_workers, backups=backups,
+                                 synchronous=synchronous)
     w = n_workers + backups
     params = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), params0)
@@ -101,18 +149,11 @@ def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
         losses, grads = grad_fn(params, batch)
         params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
 
-        t = time_model.round_times(tau)
-        if synchronous:
-            wall += float(t.max())
-            active = np.ones(w, bool)
-        else:
-            order = np.argsort(t)
-            active = np.zeros(w, bool)
-            active[order[:n_workers]] = True       # first p arrivals
-            wall += float(t[order[n_workers - 1]]) # p-th arrival gates
-            dropped += int((~active).sum())
+        active = schedule.active[r]
+        wall += float(schedule.round_wall[r])
+        dropped += int((~active).sum())
 
-        theta = masked_theta(np.asarray(losses), active, a_tilde)
+        theta = masked_theta(np.asarray(losses), active, a_tilde, strategy)
         new_params = backends.aggregate_with(
             backend, params, w_axes, jnp.asarray(theta, jnp.float32), beta,
             ctx=ctx)
@@ -125,4 +166,4 @@ def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
                 .astype(old.dtype)),
             new_params, params)
         losses_hist.append(float(np.mean(np.asarray(losses)[active])))
-    return AsyncResult(np.asarray(losses_hist), wall, dropped)
+    return AsyncResult(np.asarray(losses_hist), wall, dropped, params)

@@ -36,6 +36,13 @@ Registered backends
                   (``kernels/wagg``): one VMEM pass instead of three HBM
                   round trips. Interpret mode on CPU.
 
+``async_einsum`` / ``async_shard_map`` / ``async_rs_ag``
+                  Alg. 4 (p-of-(p+b)) counterparts registered by
+                  ``core/async_device.py``: theta is masked (stragglers get
+                  exactly 0) and inactive workers late-join the aggregate.
+                  The activity mask rides in ``ctx.active``; ``None`` means
+                  all-active, degenerating to the synchronous update.
+
 Composition rules
 =================
 
@@ -97,10 +104,13 @@ class AggregationContext:
     ``mesh``       physical mesh for backends that place explicit collectives.
     ``comm_dtype`` payload dtype riding the worker-axis collective.
     ``n_pods``     pod count for the hierarchical 2-hop.
+    ``active``     (w,) bool activity mask for the ``async_*`` family
+                   (may be a tracer); ``None`` = all workers active.
     """
     mesh: Optional[Mesh] = None
     comm_dtype: Any = jnp.float32
     n_pods: int = 1
+    active: Optional[jax.Array] = None
 
 
 DEFAULT_CONTEXT = AggregationContext()

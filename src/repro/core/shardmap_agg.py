@@ -31,29 +31,45 @@ def _worker_axes_in(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def aggregate_leaf_shard_map(x: jax.Array, theta: jax.Array,
-                             beta: float, mesh: Mesh) -> jax.Array:
-    """x: (w, ...) sharded over the worker mesh axes; theta: (w,)."""
+                             beta: float, mesh: Mesh,
+                             active: jax.Array = None) -> jax.Array:
+    """x: (w, ...) sharded over the worker mesh axes; theta: (w,).
+
+    ``active`` (optional ``(w,)`` bool, may be a tracer) is the Alg. 4
+    late-join mask: inactive workers adopt the aggregate m instead of the
+    FMA (core/async_device.py). ``None`` (the synchronous backends) places
+    no mask in the program at all.
+    """
     waxes = _worker_axes_in(mesh)
     ndim = x.ndim
     spec = P(waxes, *([None] * (ndim - 1)))
+    in_specs = (spec, P(waxes)) + ((P(waxes),) if active is not None else ())
 
     @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(spec, P(waxes)), out_specs=spec)
-    def run(x_local, theta_local):
+        shard_map, mesh=mesh, in_specs=in_specs, out_specs=spec)
+    def run(x_local, theta_local, *active_local):
         # x_local: (w/|waxes|, ...) = (1, ...) when fully sharded
         contrib = theta_local.reshape(
             theta_local.shape + (1,) * (ndim - 1)) * x_local.astype(jnp.float32)
         m = jax.lax.psum(contrib.sum(axis=0, keepdims=True), waxes)
         out = (1.0 - beta) * x_local.astype(jnp.float32) + beta * m
+        if active_local:
+            mask = active_local[0].reshape(
+                active_local[0].shape + (1,) * (ndim - 1))
+            out = jnp.where(mask, out, jnp.broadcast_to(m, out.shape))
         return out.astype(x_local.dtype)
 
-    return run(x, theta)
+    args = (x, theta) if active is None else (x, theta, active)
+    return run(*args)
 
 
 def aggregate_leaf_rs_ag(x: jax.Array, theta: jax.Array, beta: float,
-                         mesh: Mesh, comm_dtype=jnp.float32) -> jax.Array:
+                         mesh: Mesh, comm_dtype=jnp.float32,
+                         active: jax.Array = None) -> jax.Array:
     """Reduce-scatter + local FMA + all-gather schedule of Eq. 10.
+
+    ``active`` is the optional Alg. 4 late-join mask, as in
+    ``aggregate_leaf_shard_map``.
 
     Same ring bytes as one all-reduce, but (a) the payload dtype is pinned
     (psum_scatter operates on the ``comm_dtype`` operand — pass bf16 to get
@@ -82,10 +98,11 @@ def aggregate_leaf_rs_ag(x: jax.Array, theta: jax.Array, beta: float,
     spec = P(waxes, None)
 
     ax = waxes[-1] if len(waxes) == 1 else waxes
+    in_specs = (spec, P(waxes)) + ((P(waxes),) if active is not None else ())
 
-    @functools.partial(shard_map, mesh=mesh, in_specs=(spec, P(waxes)),
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=spec)
-    def run(x_local, theta_local):
+    def run(x_local, theta_local, *active_local):
         # x_local: (w/p, n_pad) — this shard's worker copies. When the worker
         # dim holds more copies than mesh shards (w/p > 1) the local copies
         # must be theta-reduced BEFORE the scatter; concatenating them into
@@ -102,9 +119,13 @@ def aggregate_leaf_rs_ag(x: jax.Array, theta: jax.Array, beta: float,
         # the (1-beta) x_i term is worker-LOCAL, so the FMA runs after the
         # gather — the aggregate broadcasts over the local copies.
         out = (1.0 - beta) * x_local.astype(jnp.float32) + beta * m[None]
+        if active_local:
+            out = jnp.where(active_local[0][:, None], out,
+                            jnp.broadcast_to(m[None], out.shape))
         return out.astype(x_local.dtype)
 
-    out = run(flat, theta)
+    args = (flat, theta) if active is None else (flat, theta, active)
+    out = run(*args)
     if pad:
         out = out[:, :n]
     return out.reshape(orig_shape)

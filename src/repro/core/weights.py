@@ -42,6 +42,49 @@ def best_weights(h: jax.Array) -> jax.Array:
     return jax.nn.one_hot(jnp.argmin(h), h.shape[0], dtype=jnp.float32)
 
 
+def masked_compute_theta(h: jax.Array, active: jax.Array,
+                         a_tilde: float = 1.0,
+                         strategy: str = "boltzmann") -> jax.Array:
+    """θ over the active workers only; exactly 0 for inactive ones.
+
+    Traced counterpart of ``compute_theta(h[active])`` scattered back to the
+    full worker width: ``active`` is a ``(p,)`` boolean *array* (it may be a
+    tracer), so the p-of-(p+b) weighting of Alg. 4 jits as part of one
+    on-device round (core/async_device.py). Inactive energies are excluded
+    BEFORE the Eq. 12 normalization — see ``async_sim.masked_theta`` for why
+    a sentinel-energy approach degenerates the Boltzmann weights. The
+    signature deliberately mirrors that host-side twin's
+    ``(losses, active, a_tilde, strategy)`` order.
+
+    At least one worker must be active; an all-False mask yields NaNs or
+    zeros (e.g. the softmax of an all ``-inf`` row), matching the host
+    path's empty-slice garbage rather than silently inventing weights.
+    """
+    h = h.astype(jnp.float32)
+    active = active.astype(bool)
+    m = active.astype(jnp.float32)
+    if strategy == "boltzmann":
+        # normalize over the ACTIVE energies, then softmax with inactive
+        # logits at -inf == softmax over the compacted active subset.
+        hn = h / jnp.maximum((m * h).sum(), 1e-30)
+        logits = jnp.where(active, -a_tilde * hn, -jnp.inf)
+        return jax.nn.softmax(logits)
+    if strategy == "inverse":
+        inv = m / jnp.maximum(h, 1e-30)
+        return inv / jnp.maximum(inv.sum(), 1e-30)
+    if strategy == "equal":
+        return m / jnp.maximum(m.sum(), 1.0)
+    if strategy == "best":
+        # argmin over active energies; ties break to the first active worker,
+        # matching jnp.argmin over the compacted subset. An all-False mask
+        # yields NaNs (0/0) like the other strategies, not a silent one-hot
+        # on argmin-of-all-inf (worker 0).
+        oh = jax.nn.one_hot(jnp.argmin(jnp.where(active, h, jnp.inf)),
+                            h.shape[0], dtype=jnp.float32) * m
+        return oh / oh.sum()
+    raise ValueError(f"unknown weighting strategy {strategy!r}")
+
+
 def compute_theta(h: jax.Array, strategy: str = "boltzmann",
                   a_tilde: float = 1.0) -> jax.Array:
     if strategy == "boltzmann":

@@ -169,6 +169,12 @@ def main():
     ap.add_argument("--dp-workers", action="store_true",
                     help="worker axis spans the whole mesh (no TP)")
     ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--async-mode", default="host_sim",
+                    choices=["host_sim", "on_device"],
+                    help="on_device: compile the Alg. 4 masked round (the "
+                         "straggler mask is a (w,) bool input riding in "
+                         "comm_state) instead of the synchronous Alg. 1 "
+                         "round")
     ap.add_argument("--no-unroll", action="store_true",
                     help="skip flash-scan unrolling: faster compiles, HLO "
                          "FLOPs undercount scan bodies (compile-proof runs)")
@@ -186,7 +192,8 @@ def main():
     from repro.configs.base import WASGDConfig
     tcfg = TrainConfig(wasgd=WASGDConfig(
         tau=args.tau, comm_dtype=args.comm_dtype,
-        hierarchical=args.hierarchical, n_pods=2 if args.hierarchical else 1))
+        hierarchical=args.hierarchical, n_pods=2 if args.hierarchical else 1,
+        async_mode=args.async_mode))
     cfg_overrides = {}
     if args.sharded_ce:
         cfg_overrides["sharded_ce"] = True

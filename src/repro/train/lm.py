@@ -46,19 +46,25 @@ def abstract_lm_state(cfg: ModelConfig, tcfg: TrainConfig, n_workers: int
     opt_shapes = jax.eval_shape(optimizer.init, shapes)
     o_axes = opt_axes_like(optimizer.name, opt_shapes, axes)
 
+    # async on-device rounds carry the (w,) Alg. 4 activity mask in
+    # comm_state (train/step.py:async_wasgd_rule); sync rounds carry ().
+    on_device_async = tcfg.wasgd.async_mode == "on_device"
+    comm_shapes = (jax.ShapeDtypeStruct((n_workers,), jnp.bool_)
+                   if on_device_async else ())
+    comm_axes = ("worker",) if on_device_async else ()
     state_shapes = TrainState(
         step=jax.ShapeDtypeStruct((), jnp.int32),
         params=shapes,
         opt_state=opt_shapes,
         energy=jax.ShapeDtypeStruct((n_workers,), jnp.float32),
-        comm_state=(),
+        comm_state=comm_shapes,
     )
     state_axes = TrainState(
         step=(),
         params=axes,
         opt_state=o_axes,
         energy=("worker",),
-        comm_state=(),
+        comm_state=comm_axes,
     )
     return state_shapes, state_axes, optimizer
 

@@ -19,13 +19,17 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
 from repro.configs.base import WASGDConfig
 from repro.core import aggregate as agg
+from repro.core import async_device
 from repro.core import backends
 from repro.core import baselines as bl
 from repro.core.energy import record_mask
 from repro.core.order import judge_scores
-from repro.core.weights import compute_theta, omega, theta_entropy
+from repro.core.weights import (compute_theta, masked_compute_theta, omega,
+                                theta_entropy)
 from repro.optim import Optimizer
 from repro.train.state import TrainState
 
@@ -71,6 +75,40 @@ def wasgd_rule(wcfg: WASGDConfig, leaf_fn=None, mesh=None):
         new_params = backends.aggregate_from_config(
             wcfg, params, axes, theta, mesh=mesh, leaf_fn=leaf_fn)
         return new_params, comm_state, theta, {}
+    return rule
+
+
+def async_wasgd_rule(wcfg: WASGDConfig, mesh=None):
+    """Alg. 4 (p-of-(p+b)) communication rule for ``async_mode="on_device"``.
+
+    ``comm_state`` carries the round's ``(w,)`` boolean activity mask (the
+    host loop injects a fresh mask per round — ``Trainer.run``'s
+    ``straggler_schedule``); theta is masked so stragglers get exactly 0,
+    and the aggregation + straggler late-join run through the ``async_*``
+    backend family (core/async_device.py) as part of the jitted round.
+    """
+    if wcfg.a_schedule == "anneal":
+        raise ValueError(
+            "async_mode='on_device' uses comm_state for the activity mask; "
+            "the 'anneal' a_schedule (which also rides comm_state) is not "
+            "supported in the same run")
+    name = async_device.async_backend_name(
+        backends.backend_name_from_config(wcfg))
+    backend = backends.get_backend(name)
+    if getattr(backend, "needs_mesh", False) and mesh is None:
+        raise ValueError(
+            f"aggregation backend {backend.name!r} needs a mesh; pass "
+            f"mesh= through Trainer/build_train_step/async_wasgd_rule")
+
+    def rule(params, axes, h, comm_state):
+        active = comm_state                        # (w,) bool mask
+        theta = masked_compute_theta(h, active, wcfg.a_tilde, wcfg.strategy)
+        ctx = dataclasses.replace(
+            backends.context_from_config(wcfg, mesh), active=active)
+        new_params = backend.aggregate(params, axes, theta, wcfg.beta,
+                                       ctx=ctx)
+        metrics = {"active": active.astype(jnp.float32)}
+        return new_params, comm_state, theta, metrics
     return rule
 
 
@@ -121,8 +159,14 @@ def build_train_step(loss_fn: LossFn, optimizer: Optimizer, axes: Dict,
 
     ``mesh`` reaches the aggregation-backend context when the default
     ``wasgd_rule`` is built here (required by the shard_map/rs_ag backends).
+    ``wcfg.async_mode="on_device"`` swaps in the Alg. 4 masked rule
+    (``async_wasgd_rule``): the round's straggler mask rides in
+    ``state.comm_state``.
     """
-    rule = rule if rule is not None else wasgd_rule(wcfg, mesh=mesh)
+    if rule is None:
+        rule = (async_wasgd_rule(wcfg, mesh=mesh)
+                if wcfg.async_mode == "on_device"
+                else wasgd_rule(wcfg, mesh=mesh))
     in_axes_params = agg.worker_in_axes(axes)
     tau = wcfg.tau
     mask = record_mask(tau, wcfg.m_estimate, wcfg.record_chunks)
@@ -201,6 +245,10 @@ def init_comm_state(rule_name: str, params: Dict, axes: Dict, n_workers: int,
         return bl.easgd_init(params, axes)
     if rule_name in ("omwu", "mmwu", "mwu"):
         return bl.mwu_init(n_workers)
+    if wcfg is not None and wcfg.async_mode == "on_device":
+        # Alg. 4 activity mask; all-active until the host loop injects the
+        # round's straggler set (Trainer.run straggler_schedule=).
+        return jnp.ones((n_workers,), bool)
     if wcfg is not None and wcfg.a_schedule == "anneal":
         return jnp.zeros((), jnp.float32)
     return ()

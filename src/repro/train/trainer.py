@@ -13,6 +13,7 @@ import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TrainConfig, WASGDConfig
@@ -24,11 +25,17 @@ from repro.train.step import build_train_step, init_comm_state, wasgd_rule
 from repro.train import step as step_mod
 
 
+def _wasgd_rule_for(tcfg, mesh=None):
+    """Sync Eq. 10 rule, or the Alg. 4 masked rule when the config selects
+    ``async_mode="on_device"`` (the mask rides in ``state.comm_state``)."""
+    if tcfg.wasgd.async_mode == "on_device":
+        return step_mod.async_wasgd_rule(tcfg.wasgd, mesh=mesh)
+    return step_mod.wasgd_rule(tcfg.wasgd, mesh=mesh)
+
+
 RULES = {
-    "wasgd": lambda tcfg, mesh=None: step_mod.wasgd_rule(tcfg.wasgd,
-                                                         mesh=mesh),
-    "wasgd+": lambda tcfg, mesh=None: step_mod.wasgd_rule(tcfg.wasgd,
-                                                          mesh=mesh),
+    "wasgd": _wasgd_rule_for,
+    "wasgd+": _wasgd_rule_for,
     "spsgd": lambda tcfg, mesh=None: step_mod.spsgd_rule(),
     "easgd": lambda tcfg, mesh=None: step_mod.easgd_rule(alpha=0.9 / 16),
     "omwu": lambda tcfg, mesh=None: step_mod.mwu_rule(),
@@ -47,6 +54,7 @@ class Trainer:
         (``shard_map``/``rs_ag``, incl. legacy ``sharded_aggregate=True``)."""
         self.tcfg = tcfg
         self.n_workers = n_workers
+        self.rule_name = rule
         if replicate:
             params, axes = replicate_workers(
                 params, axes, n_workers,
@@ -75,11 +83,42 @@ class Trainer:
             segment_fn: Optional[Callable[[int], int]] = None,
             log_every: int = 0, metrics_path: Optional[str] = None,
             checkpoint_every: int = 0,
-            checkpoint_path: Optional[str] = None) -> Dict:
+            checkpoint_path: Optional[str] = None,
+            straggler_schedule=None) -> Dict:
+        """``straggler_schedule`` (async_mode="on_device" only): a
+        ``StragglerSchedule`` or ``(rounds, w)`` bool array covering all
+        ``n_rounds``; round ``r``'s activity mask is injected into
+        ``state.comm_state`` before the step, so the jitted Alg. 4 round
+        excludes that round's stragglers."""
+        active_rounds = None
+        if straggler_schedule is not None:
+            if self.tcfg.wasgd.async_mode != "on_device":
+                raise ValueError(
+                    "straggler_schedule requires "
+                    "WASGDConfig(async_mode='on_device')")
+            if self.rule_name not in ("wasgd", "wasgd+"):
+                # only the Alg. 4 rule reads the mask out of comm_state —
+                # fail loud instead of running a fully synchronous baseline
+                # labeled as a straggler experiment.
+                raise ValueError(
+                    f"straggler_schedule is only consumed by the wasgd/"
+                    f"wasgd+ rules (got rule={self.rule_name!r})")
+            active_rounds = np.asarray(
+                getattr(straggler_schedule, "active", straggler_schedule),
+                bool)
+            if len(active_rounds) < n_rounds:
+                raise ValueError(
+                    f"straggler_schedule covers {len(active_rounds)} rounds "
+                    f"but run() was asked for {n_rounds}; build the "
+                    f"schedule with rounds={n_rounds} (silent reuse would "
+                    f"correlate the exclusion statistics)")
         t0 = time.time()
         mf = open(metrics_path, "a") if metrics_path else None
         for r in range(n_rounds):
             batch = next(batches)
+            if active_rounds is not None:
+                self.state = self.state._replace(
+                    comm_state=jnp.asarray(active_rounds[r]))
             self.state, metrics = self._step(self.state, batch)
             rec = {k: np.asarray(v) for k, v in metrics.items()}
             rec["round"] = r

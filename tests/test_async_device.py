@@ -1,0 +1,507 @@
+"""On-device async WASGD+ (Alg. 4) via the backend registry — parity harness.
+
+``core/async_sim.py`` (host-side numpy event simulation) is the semantic
+oracle; ``core/async_device.py`` must reproduce its parameters leaf-for-leaf
+when the SAME straggler schedule is injected into both paths, across all
+weight strategies and both mesh schedules. The in-process tests adapt to
+however many host devices exist (1 under plain tier-1; the CI "backends or
+async" job forces 8); the subprocess test always runs the acceptance grid on
+an 8-device host mesh, including the w/p>1 and pod-mesh (n_pods>1) cases.
+"""
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import backends as B
+from repro.core.async_device import (ASYNC_BACKENDS, async_backend_name,
+                                     build_async_round,
+                                     run_parallel_sgd_on_device,
+                                     weighted_aggregate_async)
+from repro.core.async_sim import (StepTimeModel, make_schedule, masked_theta,
+                                  run_parallel_sgd)
+from repro.core.weights import STRATEGIES, compute_theta, masked_compute_theta
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+MESH_BACKENDS = ("async_shard_map", "async_rs_ag")
+
+
+def _mesh():
+    """Worker mesh over every available host device."""
+    devs = np.array(jax.devices())
+    return Mesh(devs, ("data",))
+
+
+def _setup(seed=0):
+    from repro.data import make_classification
+    from repro.models import cnn
+    from repro.models.param import build
+
+    X, y = make_classification(seed, 256, d=8, n_classes=3)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=8, d_hidden=16, n_classes=3), jax.random.key(seed))
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(cnn.mlp_apply(p, b["x"]), b["y"]), {}
+
+    def grad_fn(ps, batch):
+        one = lambda p, b: loss_fn(p, b)[0]
+        losses = jax.vmap(one)(ps, batch)
+        grads = jax.grad(lambda q: jax.vmap(one)(q, batch).sum())(ps)
+        return losses, grads
+
+    def batches(w, n):
+        rng = np.random.default_rng(seed)
+        while True:
+            idx = rng.integers(0, len(X), size=(w, n))
+            yield {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return params, axes, loss_fn, jax.jit(grad_fn), batches
+
+
+def _max_leaf_err(a, b):
+    errs = jax.tree.map(
+        lambda x, y: float(jnp.abs(x.astype(jnp.float32)
+                                   - y.astype(jnp.float32)).max()), a, b)
+    return max(jax.tree.leaves(errs))
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics
+# ---------------------------------------------------------------------------
+
+def test_async_backends_registered():
+    assert set(B.available_backends()) >= set(ASYNC_BACKENDS)
+
+
+def test_async_backend_name_mapping():
+    assert async_backend_name("einsum") == "async_einsum"
+    assert async_backend_name("shard_map") == "async_shard_map"
+    assert async_backend_name("rs_ag") == "async_rs_ag"
+    for name in ASYNC_BACKENDS:                  # idempotent on async names
+        assert async_backend_name(name) == name
+    with pytest.raises(ValueError, match="no async"):
+        async_backend_name("quantized")
+
+
+def test_async_mesh_backends_raise_without_mesh():
+    params, axes, *_ = _setup()
+    w = 4
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), params)
+    w_axes = jax.tree.map(lambda ax: ("worker",) + tuple(ax), axes,
+                          is_leaf=lambda n: isinstance(n, tuple))
+    theta = jnp.full((w,), 0.25)
+    for name in MESH_BACKENDS:
+        with pytest.raises(ValueError, match="needs ctx.mesh"):
+            B.aggregate_with(name, params, w_axes, theta, 0.9)
+
+
+def test_build_async_round_raises_without_mesh():
+    _, axes, _, grad_fn, _ = _setup()
+    with pytest.raises(ValueError, match="needs ctx.mesh"):
+        build_async_round(grad_fn, axes, lr=0.1, backend="async_shard_map")
+
+
+def test_run_parallel_sgd_requires_time_source():
+    params, axes, loss_fn, grad_fn, batches = _setup()
+    with pytest.raises(ValueError, match="time_model"):
+        run_parallel_sgd(loss_fn, grad_fn, params, axes, batches(4, 4),
+                         n_workers=3, backups=1, tau=2, rounds=2, lr=0.1)
+    with pytest.raises(ValueError, match="time_model"):
+        run_parallel_sgd_on_device(grad_fn, params, axes, batches(4, 4),
+                                   n_workers=3, backups=1, tau=2, rounds=2,
+                                   lr=0.1, backend="async_einsum")
+
+
+# ---------------------------------------------------------------------------
+# masked_compute_theta (traced) vs masked_theta (host oracle)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_masked_compute_theta_matches_host_oracle(strategy):
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        w = int(rng.integers(2, 9))
+        losses = rng.uniform(0.05, 5.0, w).astype(np.float32)
+        n_active = int(rng.integers(1, w + 1))
+        active = np.zeros(w, bool)
+        active[rng.choice(w, n_active, replace=False)] = True
+        host = masked_theta(losses, active, 2.0, strategy)
+        dev = np.asarray(jax.jit(
+            functools.partial(masked_compute_theta, strategy=strategy,
+                              a_tilde=2.0))(jnp.asarray(losses),
+                                            jnp.asarray(active)))
+        np.testing.assert_allclose(dev, host, atol=1e-6,
+                                   err_msg=f"{strategy} trial {trial}")
+        assert (dev[~active] == 0.0).all()
+        np.testing.assert_allclose(dev.sum(), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_masked_theta_all_but_one_inactive(strategy):
+    """Degenerate p=1 round: the lone active worker takes all the weight and
+    nothing divides by zero (host and traced paths alike)."""
+    losses = np.array([3.0, 0.5, 2.0, 1.0], np.float32)
+    active = np.array([False, False, True, False])
+    host = masked_theta(losses, active, 1.0, strategy)
+    dev = np.asarray(masked_compute_theta(jnp.asarray(losses),
+                                          jnp.asarray(active), 1.0, strategy))
+    for theta in (host, dev):
+        assert np.isfinite(theta).all()
+        np.testing.assert_allclose(theta, [0.0, 0.0, 1.0, 0.0], atol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_masked_theta_duplicate_losses(strategy):
+    """Ties must not divide by zero, and 'best' must break them identically
+    in both paths (first active minimum)."""
+    losses = np.array([2.0, 0.5, 0.5, 0.5, 2.0], np.float32)
+    active = np.array([True, False, True, True, True])
+    host = masked_theta(losses, active, 1.0, strategy)
+    dev = np.asarray(masked_compute_theta(jnp.asarray(losses),
+                                          jnp.asarray(active), 1.0, strategy))
+    np.testing.assert_allclose(dev, host, atol=1e-6)
+    assert np.isfinite(host).all() and np.isfinite(dev).all()
+    np.testing.assert_allclose(host.sum(), 1.0, rtol=1e-5)
+    if strategy == "best":                  # tie-break: first active minimum
+        assert dev.argmax() == 2
+
+
+def test_masked_compute_theta_all_active_equals_compute_theta():
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    active = jnp.ones((4,), bool)
+    for strategy in STRATEGIES:
+        np.testing.assert_allclose(
+            np.asarray(masked_compute_theta(h, active, 1.7, strategy)),
+            np.asarray(compute_theta(h, strategy, 1.7)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Aggregate-level: async backends vs manual late-join / sync degeneration
+# ---------------------------------------------------------------------------
+
+def _stacked_fixture(w, seed=0):
+    k = jax.random.key(seed)
+    params = {"blk": {"w": jax.random.normal(k, (w, 6, 5))},
+              "head": jax.random.normal(jax.random.fold_in(k, 1), (w, 33)),
+              "experts": {"up": jnp.ones((3, 2))}}
+    axes = {"blk": {"w": ("worker", None, None)},
+            "head": ("worker", None),
+            "experts": {"up": ("experts", None)}}
+    return params, axes
+
+
+def test_async_einsum_matches_manual_late_join():
+    w, beta = 4, 0.9
+    params, axes = _stacked_fixture(w)
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    active = jnp.array([True, False, True, True])
+    theta = masked_compute_theta(h, active, 2.0, "boltzmann")
+    out = B.aggregate_with("async_einsum", params, axes, theta, beta,
+                           ctx=B.AggregationContext(active=active))
+    # manual: Eq. 10 FMA for active workers, aggregate m for stragglers
+    for key_ in ("head",):
+        x = params[key_].astype(jnp.float32)
+        m = jnp.tensordot(theta, x, axes=1)
+        fma = (1 - beta) * x + beta * m[None]
+        ref = jnp.where(active[:, None], fma, m[None])
+        np.testing.assert_allclose(np.asarray(out[key_]), np.asarray(ref),
+                                   atol=1e-6)
+    # non-worker leaves pass through untouched
+    np.testing.assert_array_equal(np.asarray(out["experts"]["up"]),
+                                  np.asarray(params["experts"]["up"]))
+
+
+@pytest.mark.parametrize("name,sync_name", [
+    ("async_einsum", "einsum"),
+    ("async_shard_map", "shard_map"),
+    ("async_rs_ag", "rs_ag"),
+])
+def test_ctx_active_none_degenerates_to_sync(name, sync_name):
+    """With no mask (ctx.active=None) the async family must equal its
+    synchronous counterpart: everyone aggregates, nobody late-joins."""
+    w = 4 * len(jax.devices())
+    params, axes = _stacked_fixture(w)
+    theta = jax.nn.softmax(jnp.arange(w, dtype=jnp.float32) / w)
+    ctx = B.AggregationContext(mesh=_mesh())
+    out = B.aggregate_with(name, params, axes, theta, 0.9, ctx=ctx)
+    ref = B.aggregate_with(sync_name, params, axes, theta, 0.9, ctx=ctx)
+    assert _max_leaf_err(out, ref) < 1e-5
+
+
+def test_weighted_aggregate_async_unknown_schedule():
+    params, axes = _stacked_fixture(2)
+    with pytest.raises(ValueError, match="unknown async schedule"):
+        weighted_aggregate_async(params, axes, jnp.array([0.5, 0.5]), None,
+                                 0.9, schedule="nope")
+
+
+# ---------------------------------------------------------------------------
+# The parity harness: same schedule into both paths, leaf-for-leaf params
+# ---------------------------------------------------------------------------
+
+def _parity_case(strategy, backend, mesh, n_workers, backups, rounds=4,
+                 tau=2, seed=0, atol=1e-5):
+    params, axes, loss_fn, grad_fn, batches = _setup(seed)
+    w = n_workers + backups
+    tm = StepTimeModel(w, sigma=0.3, straggle_p=0.2, straggle_mult=10,
+                       seed=3)
+    sched = make_schedule(tm, rounds=rounds, tau=tau, n_workers=n_workers,
+                          backups=backups)
+    assert not sched.active.all(), "schedule must actually drop stragglers"
+    host = run_parallel_sgd(loss_fn, grad_fn, params, axes,
+                            batches(w, tau * 4), n_workers=n_workers,
+                            backups=backups, tau=tau, rounds=rounds, lr=0.05,
+                            schedule=sched, strategy=strategy)
+    dev = run_parallel_sgd_on_device(
+        grad_fn, params, axes, batches(w, tau * 4), n_workers=n_workers,
+        backups=backups, tau=tau, rounds=rounds, lr=0.05, schedule=sched,
+        strategy=strategy, backend=backend,
+        ctx=B.AggregationContext(mesh=mesh))
+    assert dev.wall == host.wall
+    assert dev.dropped_rounds == host.dropped_rounds
+    np.testing.assert_allclose(dev.losses, host.losses, atol=atol)
+    err = _max_leaf_err(host.params, dev.params)
+    assert err < atol, (strategy, backend, err)
+
+
+@pytest.mark.parametrize("backend", ("async_einsum",) + MESH_BACKENDS)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_on_device_matches_host_sim(strategy, backend):
+    """The headline parity: same injected straggler schedule, every strategy,
+    every async backend — parameters match the host oracle leaf-for-leaf.
+    Worker width is 4x the device count, so the mesh backends also exercise
+    w/p > 1 local copies whenever this runs (1 device or 8)."""
+    d = len(jax.devices())
+    _parity_case(strategy, backend, _mesh(), n_workers=3 * d, backups=d)
+
+
+def test_on_device_matches_host_sim_pod_mesh():
+    """n_pods > 1: the worker axis spans ("pod", "data") and the collectives
+    reduce over both mesh axes."""
+    d = len(jax.devices())
+    if d < 2:
+        pytest.skip("needs >= 2 devices for a pod mesh (CI async job / "
+                    "subprocess grid cover it)")
+    mesh = jax.make_mesh((2, d // 2), ("pod", "data"))
+    for strategy in ("boltzmann", "best"):
+        _parity_case(strategy, "async_shard_map", mesh,
+                     n_workers=3 * d, backups=d)
+        _parity_case(strategy, "async_rs_ag", mesh,
+                     n_workers=3 * d, backups=d)
+
+
+def test_synchronous_schedule_all_active():
+    tm = StepTimeModel(6, sigma=0.3, straggle_p=0.3, seed=0)
+    sched = make_schedule(tm, rounds=5, tau=3, n_workers=4, backups=2,
+                          synchronous=True)
+    assert sched.active.all()
+    async_sched = make_schedule(StepTimeModel(6, sigma=0.3, straggle_p=0.3,
+                                              seed=0),
+                                rounds=5, tau=3, n_workers=4, backups=2)
+    # same sampled times: the p-th arrival can never gate later than the max
+    assert (async_sched.round_wall <= sched.round_wall + 1e-12).all()
+    assert (async_sched.active.sum(axis=1) == 4).all()
+
+
+# ---------------------------------------------------------------------------
+# Train-step / Trainer integration (async_mode="on_device")
+# ---------------------------------------------------------------------------
+
+def _trainer_setup(w, tau, async_mode="on_device", backend="", rule="wasgd"):
+    from repro.configs import TrainConfig, WASGDConfig
+    from repro.data import make_classification
+    from repro.models import cnn
+    from repro.models.param import build
+    from repro.train import Trainer
+
+    X, y = make_classification(0, 512, d=8, n_classes=3)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=8, d_hidden=16, n_classes=3), jax.random.key(0))
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(cnn.mlp_apply(p, b["x"]), b["y"]), {}
+
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(
+        tau=tau, async_mode=async_mode, backend=backend))
+    tr = Trainer(loss_fn, params, axes, tcfg, w, rule=rule,
+                 mesh=_mesh() if backend in ("shard_map", "rs_ag",
+                                             *MESH_BACKENDS) else None)
+
+    def batches():
+        rng = np.random.default_rng(0)
+        n = tau * w * 4
+        while True:
+            idx = rng.integers(0, len(X), size=n)
+            yield {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return tr, batches
+
+
+def test_trainer_on_device_async_masks_stragglers():
+    d = len(jax.devices())
+    p, b, tau = 3 * d, d, 2
+    w = p + b
+    tr, batches = _trainer_setup(w, tau)
+    sched = make_schedule(StepTimeModel(w, sigma=0.3, straggle_p=0.3,
+                                        seed=1),
+                          rounds=5, tau=tau, n_workers=p, backups=b)
+    out = tr.run(batches(), 5, straggler_schedule=sched)
+    assert np.isfinite(out["final_loss"])
+    for r, rec in enumerate(tr.history):
+        theta = np.asarray(rec["theta"])
+        active = sched.active[r]
+        np.testing.assert_array_equal(np.asarray(rec["active"]),
+                                      active.astype(np.float32))
+        assert (theta[~active] == 0.0).all()     # stragglers: exactly 0
+        np.testing.assert_allclose(theta.sum(), 1.0, rtol=1e-5)
+
+
+def test_trainer_on_device_async_mesh_backend():
+    d = len(jax.devices())
+    w = 4 * d
+    tr, batches = _trainer_setup(w, tau=2, backend="shard_map")
+    sched = make_schedule(StepTimeModel(w, sigma=0.3, straggle_p=0.3,
+                                        seed=2),
+                          rounds=3, tau=2, n_workers=3 * d, backups=d)
+    out = tr.run(batches(), 3, straggler_schedule=sched)
+    assert np.isfinite(out["final_loss"])
+
+
+def test_trainer_rejects_schedule_without_on_device_mode():
+    tr, batches = _trainer_setup(4, tau=2, async_mode="host_sim")
+    with pytest.raises(ValueError, match="async_mode"):
+        tr.run(batches(), 2, straggler_schedule=np.ones((2, 4), bool))
+
+
+def test_trainer_rejects_schedule_for_non_wasgd_rule():
+    """A baseline rule never reads the mask out of comm_state — injecting a
+    schedule there must fail loud, not run a synchronous baseline silently
+    labeled as a straggler experiment."""
+    tr, batches = _trainer_setup(4, tau=2, rule="spsgd")
+    with pytest.raises(ValueError, match="only consumed by the wasgd"):
+        tr.run(batches(), 2, straggler_schedule=np.ones((2, 4), bool))
+
+
+def test_trainer_rejects_schedule_shorter_than_run():
+    tr, batches = _trainer_setup(4, tau=2)
+    with pytest.raises(ValueError, match="covers 2 rounds"):
+        tr.run(batches(), 5, straggler_schedule=np.ones((2, 4), bool))
+
+
+def test_async_rule_all_active_equals_sync_rule():
+    """With everyone active the Alg. 4 rule degenerates to the synchronous
+    Eq. 10 rule: masked theta == compute_theta and the late-join is a no-op."""
+    from repro.configs.base import WASGDConfig
+    from repro.train.step import async_wasgd_rule, wasgd_rule
+
+    w = 4
+    params, axes = _stacked_fixture(w)
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    sync = wasgd_rule(WASGDConfig())(params, axes, h, ())[0]
+    active = jnp.ones((w,), bool)
+    wcfg = WASGDConfig(async_mode="on_device")
+    asy = async_wasgd_rule(wcfg)(params, axes, h, active)[0]
+    assert _max_leaf_err(sync, asy) < 1e-6
+
+
+def test_async_rule_rejects_anneal_schedule():
+    from repro.configs.base import WASGDConfig
+    from repro.train.step import async_wasgd_rule
+    with pytest.raises(ValueError, match="anneal"):
+        async_wasgd_rule(WASGDConfig(async_mode="on_device",
+                                     a_schedule="anneal"))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance grid: 8-device host mesh (subprocess, like test_dryrun_small)
+# ---------------------------------------------------------------------------
+
+GRID_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import functools
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import backends as B
+    from repro.core.async_sim import StepTimeModel, make_schedule, run_parallel_sgd
+    from repro.core.async_device import run_parallel_sgd_on_device
+    from repro.data import make_classification
+    from repro.models import cnn
+    from repro.models.param import build
+
+    assert len(jax.devices()) == 8
+
+    X, y = make_classification(0, 256, d=8, n_classes=3)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=8, d_hidden=16, n_classes=3), jax.random.key(0))
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(cnn.mlp_apply(p, b["x"]), b["y"]), {}
+
+    def grad_fn(ps, batch):
+        one = lambda p, b: loss_fn(p, b)[0]
+        losses = jax.vmap(one)(ps, batch)
+        grads = jax.grad(lambda q: jax.vmap(one)(q, batch).sum())(ps)
+        return losses, grads
+    grad_fn = jax.jit(grad_fn)
+
+    def batches(w, n):
+        rng = np.random.default_rng(0)
+        while True:
+            idx = rng.integers(0, len(X), size=(w, n))
+            yield {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    def leaf_err(a, b):
+        errs = jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)
+        return max(jax.tree.leaves(errs))
+
+    grids = [
+        # (label, mesh, p, b): 8-way worker mesh, w/p>1 copies, pod mesh
+        ("flat8",  jax.make_mesh((8,), ("data",)),          6, 2),
+        ("copies", jax.make_mesh((8,), ("data",)),         12, 4),
+        ("pods",   jax.make_mesh((2, 4), ("pod", "data")),  6, 2),
+    ]
+    for label, mesh, p, b in grids:
+        w = p + b
+        tm = StepTimeModel(w, sigma=0.3, straggle_p=0.2, straggle_mult=10,
+                           seed=3)
+        sched = make_schedule(tm, rounds=4, tau=2, n_workers=p, backups=b)
+        assert not sched.active.all()
+        for strategy in ("boltzmann", "inverse", "equal", "best"):
+            host = run_parallel_sgd(
+                loss_fn, grad_fn, params, axes, batches(w, 8), n_workers=p,
+                backups=b, tau=2, rounds=4, lr=0.05, schedule=sched,
+                strategy=strategy)
+            for backend in ("async_shard_map", "async_rs_ag"):
+                dev = run_parallel_sgd_on_device(
+                    grad_fn, params, axes, batches(w, 8), n_workers=p,
+                    backups=b, tau=2, rounds=4, lr=0.05, schedule=sched,
+                    strategy=strategy, backend=backend,
+                    ctx=B.AggregationContext(mesh=mesh))
+                err = leaf_err(host.params, dev.params)
+                assert err < 1e-5, (label, strategy, backend, err)
+                np.testing.assert_allclose(dev.losses, host.losses,
+                                           atol=1e-5)
+        print("GRID", label, "ok")
+    print("RESULT ok")
+""")
+
+
+def test_parity_grid_on_8_device_mesh():
+    """Acceptance grid: on-device Alg. 4 == host simulation leaf-for-leaf
+    (atol 1e-5) for {boltzmann, inverse, equal, best} x {shard_map, rs_ag}
+    on an 8-device host mesh, incl. w/p>1 and pod-mesh cases. Subprocess so
+    the forced device count never leaks into other tests."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", GRID_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "RESULT ok" in out.stdout

@@ -32,6 +32,17 @@ def test_estimation_error_range():
     assert abs(float(estimation_error(t1, t2)) - 1.0) < 1e-6
 
 
+def test_judge_scores_finite_for_constant_h():
+    """Degenerate round where every worker lands the same loss energy: the
+    stdv clamp must keep the z-scores finite (0/sqrt(1e-30) -> 0, not NaN) —
+    the async Alg. 4 path hits this whenever a single worker is active or
+    losses tie exactly."""
+    for h in (jnp.full((6,), 2.5), jnp.zeros((4,)), jnp.full((1,), 7.0)):
+        s = np.asarray(judge_scores(h))
+        assert np.isfinite(s).all()
+        np.testing.assert_allclose(s, 0.0, atol=1e-6)
+
+
 def test_judge_scores_standardized():
     h = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0])
     s = np.asarray(judge_scores(h))

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.weights import (best_weights, boltzmann_weights,
+from repro.core.weights import (STRATEGIES, best_weights, boltzmann_weights,
                                 compute_theta, equal_weights, inverse_weights,
                                 normalize_energy, omega)
 
@@ -96,3 +96,63 @@ def test_hyp_larger_a_concentrates(a1, a2):
     h = jnp.array([1.0, 2.0, 3.0, 5.0])
     assert float(omega(boltzmann_weights(h, a2))) >= \
         float(omega(boltzmann_weights(h, a1))) - 1e-7
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    h=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=12),
+    a=st.floats(0.1, 20.0),
+)
+def test_hyp_all_strategies_are_distributions(h, a):
+    """Every weight-evaluating function returns a distribution: theta >= 0,
+    sum(theta) == 1, finite."""
+    hv = jnp.array(h)
+    for strategy in STRATEGIES:
+        th = np.asarray(compute_theta(hv, strategy, a))
+        assert np.isfinite(th).all(), strategy
+        assert np.all(th >= 0), strategy
+        np.testing.assert_allclose(th.sum(), 1.0, rtol=1e-4,
+                                   err_msg=strategy)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    h=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=12, unique=True),
+    a=st.floats(0.1, 20.0),
+    perm_seed=st.integers(0, 2**31 - 1),
+)
+def test_hyp_permutation_equivariance(h, a, perm_seed):
+    """Relabeling the workers relabels the weights the same way:
+    theta(h[perm]) == theta(h)[perm] for all four strategies. (Unique
+    energies: 'best' breaks ties by position, which no permutation-
+    equivariant rule can.)"""
+    hv = jnp.array(h)
+    perm = np.random.default_rng(perm_seed).permutation(len(h))
+    for strategy in STRATEGIES:
+        th = np.asarray(compute_theta(hv, strategy, a))
+        th_perm = np.asarray(compute_theta(hv[perm], strategy, a))
+        np.testing.assert_allclose(th_perm, th[perm], rtol=1e-4, atol=1e-6,
+                                   err_msg=strategy)
+
+
+@settings(max_examples=30, deadline=None)
+@given(h=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=12))
+def test_hyp_property1_a_to_zero_equal(h):
+    """Property 1, a -> 0 limit: Boltzmann weights degenerate to equal."""
+    th = np.asarray(boltzmann_weights(jnp.array(h), 1e-8))
+    np.testing.assert_allclose(th, np.full(len(h), 1.0 / len(h)), atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    h=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=12, unique=True),
+)
+def test_hyp_property1_a_to_inf_one_hot_on_min(h):
+    """Property 1, a -> inf limit: one-hot on the minimum energy."""
+    hn = np.asarray(h) / np.sum(h)
+    gaps = np.diff(np.sort(hn))
+    if gaps.min() < 1e-4:       # normalized near-tie: the limit needs a
+        return                  # larger a than f32 softmax can resolve
+    th = np.asarray(boltzmann_weights(jnp.array(h), 1e8))
+    np.testing.assert_allclose(th, np.asarray(best_weights(jnp.array(h))),
+                               atol=1e-5)
