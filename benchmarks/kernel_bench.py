@@ -65,6 +65,7 @@ def run(fast: bool = False):
 
     run_extra(fast=fast)
     run_backends(fast=fast)
+    run_backend_matrix(fast=fast)
     run_async(fast=fast)
 
 
@@ -92,6 +93,67 @@ def run_backends(fast: bool = False):
         reps = 2 if name == "pallas_wagg" else 5
         emit(f"agg_backend_{name}", _time(fn, x, theta, n=reps),
              f"shape={p}x{n}")
+
+
+def run_backend_matrix(fast: bool = False,
+                       out_path: str = "results/BENCH_backend_matrix.json"):
+    """The two-axis sweep: every ``schedule x codec`` spec (plus the
+    ``overlap=`` variant of multi-phase schedules) over a shared
+    worker-stacked leaf, emitted as ``BENCH_backend_matrix.json`` — the
+    table ``backend="auto"`` (core/backends.py:select_auto_spec) reads its
+    measurements from. Interpret-mode / host-device numbers are indicative
+    only; the record shape (spec, bytes, mesh size, us) is the artifact."""
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import backends as B
+
+    p, n = 8, (1 << 18 if fast else 1 << 20)
+    x = jax.random.normal(jax.random.key(3), (p, n), jnp.float32)
+    theta = jax.nn.softmax(jnp.arange(p, dtype=jnp.float32))
+    axes = {"w": ("worker", None)}
+    devs = jax.devices()
+    mesh_devs = devs if p % len(devs) == 0 else devs[:1]
+    mesh = Mesh(np.array(mesh_devs), ("data",))
+    ctx = B.AggregationContext(mesh=mesh, n_pods=2)
+    total_bytes = int(x.size * x.dtype.itemsize)
+
+    records = []
+    for spec in B.available_specs():
+        sched, codec = spec.split(":")
+        n_phases = getattr(B.get_backend(spec).schedule, "n_phases", 1)
+        for overlap in ((False, True) if n_phases > 1 else (False,)):
+            if overlap:
+                # a small independent reduction riding between the phases;
+                # the thunk's result must be RETURNED (and so blocked on) —
+                # dropping it would let XLA dead-code-eliminate the thunk
+                # and the row would time the non-overlap program.
+                def fn(xx, t, s=spec):
+                    out, extra = B.aggregate_with(
+                        s, {"w": xx}, axes, t, 0.9, ctx=ctx,
+                        overlap=lambda: (t * t).sum())
+                    return out["w"], extra
+                fn = jax.jit(fn)
+            else:
+                fn = jax.jit(lambda xx, t, s=spec: B.aggregate_with(
+                    s, {"w": xx}, axes, t, 0.9, ctx=ctx)["w"])
+            # pallas interpret mode is orders slower: fewer reps
+            reps = 2 if sched == "pallas_wagg" else 5
+            us = _time(fn, x, theta, n=reps)
+            records.append({
+                "spec": spec, "schedule": sched, "codec": codec,
+                "overlap": overlap, "us_per_call": round(us, 1),
+                "total_bytes": total_bytes, "workers": p,
+                "mesh_devices": len(mesh_devs),
+                "host_devices": len(devs)})
+            emit(f"agg_matrix_{spec}{'+ov' if overlap else ''}", us,
+                 f"shape={p}x{n}")
+
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"bench": "backend_matrix", "records": records}, f,
+                  indent=2)
+    emit("backend_matrix_json", 0.0, out_path)
+    return records
 
 
 def run_async(fast: bool = False, out_path: str = "results/BENCH_async.json"):

@@ -224,13 +224,22 @@ class WASGDConfig:
     hierarchical: bool = False        # beyond-paper: pod-local then cross-pod 2-hop
     n_pods: int = 1                   # pod count for the hierarchical 2-hop
     sharded_aggregate: bool = False   # beyond-paper: reduce-scatter + local axpy + all-gather
-    backend: str = ""                 # aggregation backend name (core/backends.py:
-                                      # einsum | quantized | hierarchical |
-                                      # shard_map | rs_ag | pallas_wagg |
-                                      # async_einsum | async_shard_map |
-                                      # async_rs_ag).
-                                      # "" derives it from the legacy booleans
-                                      # above (backend_name_from_config).
+    backend: str = ""                 # two-axis aggregation spec
+                                      # (core/backends.py): a composed
+                                      # "<schedule>:<codec>" string —
+                                      # schedules einsum | hierarchical |
+                                      # shard_map | rs_ag | pallas_wagg,
+                                      # codecs f32 | bf16 | int8 | int4 —
+                                      # e.g. "rs_ag:int8"; a bare schedule
+                                      # (codec derived from comm_dtype); a
+                                      # legacy alias (quantized,
+                                      # async_shard_map, ...); or "auto"
+                                      # (select_auto_spec: pick per worker-
+                                      # leaf bytes + mesh from recorded
+                                      # kernel_bench measurements).
+                                      # "" composes it from the legacy
+                                      # booleans above
+                                      # (backend_name_from_config).
     async_mode: str = "host_sim"      # Alg. 4 execution: "host_sim" keeps the
                                       # p-of-(p+b) regime in the numpy event
                                       # simulation (core/async_sim.py);

@@ -1,5 +1,6 @@
 from repro.core.aggregate import (
     aggregate_leaf,
+    fma_late_join,
     map_worker_leaves,
     replicate_workers,
     strip_worker_axis,
@@ -12,10 +13,19 @@ from repro.core.backends import (
     aggregate_from_config,
     aggregate_with,
     available_backends,
+    available_codecs,
+    available_schedules,
+    available_specs,
     backend_name_from_config,
+    canonical_spec,
     context_from_config,
     get_backend,
+    get_codec,
     register_backend,
+    register_codec,
+    register_schedule,
+    resolve_spec,
+    select_auto_spec,
 )
 from repro.core.async_device import (
     ASYNC_BACKENDS,
@@ -41,12 +51,16 @@ from repro.core.weights import (
 )
 
 __all__ = [
-    "aggregate_leaf", "map_worker_leaves", "replicate_workers",
+    "aggregate_leaf", "fma_late_join", "map_worker_leaves",
+    "replicate_workers",
     "strip_worker_axis", "take_worker", "weighted_aggregate",
     "worker_in_axes", "AggregationContext", "aggregate_from_config",
     "aggregate_with",
-    "available_backends", "backend_name_from_config", "context_from_config",
-    "get_backend", "register_backend",
+    "available_backends", "available_codecs", "available_schedules",
+    "available_specs", "backend_name_from_config", "canonical_spec",
+    "context_from_config",
+    "get_backend", "get_codec", "register_backend", "register_codec",
+    "register_schedule", "resolve_spec", "select_auto_spec",
     "ASYNC_BACKENDS", "async_backend_name", "build_async_round",
     "run_parallel_sgd_on_device", "weighted_aggregate_async",
     "StragglerSchedule", "make_schedule",

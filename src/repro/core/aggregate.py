@@ -39,6 +39,21 @@ def _axes_is_leaf(x):
                                         for a in x)
 
 
+def fma_late_join(x: jax.Array, m: jax.Array, beta,
+                  active: Optional[jax.Array] = None) -> jax.Array:
+    """The worker-local half of Eq. 10: ``(1-beta) x + beta m``, plus the
+    Alg. 4 late-join — inactive workers adopt the aggregate ``m`` (their
+    theta is 0, so ``m`` already excludes them). ``active=None`` (the
+    synchronous path) places no mask in the program at all. Shared by every
+    schedule's ``finalize`` (core/backends.py) and the fused shard_map
+    entry points (core/shardmap_agg.py)."""
+    out = (1.0 - beta) * x.astype(jnp.float32) + beta * m[None]
+    if active is not None:
+        mask = active.reshape(active.shape + (1,) * (x.ndim - 1))
+        out = jnp.where(mask, out, jnp.broadcast_to(m[None], out.shape))
+    return out.astype(x.dtype)
+
+
 def aggregate_leaf(x: jax.Array, theta: jax.Array, beta: float | jax.Array,
                    quantize: bool = False, comm_dtype=jnp.float32,
                    n_pods: int = 1) -> jax.Array:

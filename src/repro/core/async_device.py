@@ -7,33 +7,37 @@ is a traced ``(w,)`` boolean mask:
 
     local tau steps -> loss energies -> masked Boltzmann theta
         (``weights.masked_compute_theta``: stragglers' theta is exactly 0)
-    -> Eq. 10 aggregate over the ACTIVE workers, placed as explicit
-       collectives under ``shard_map`` (all-reduce or rs_ag schedule)
+    -> Eq. 10 aggregate over the ACTIVE workers, through any composed
+       ``schedule:codec`` spec of the two-axis API (core/backends.py)
     -> straggler late-join: inactive workers adopt the aggregate
        m = sum_j theta_j x_j when they arrive (Alg. 4 line 20).
 
-Because the stragglers' theta is zero they contribute nothing to the psum,
-so exclusion needs no gather/compaction — the whole round stays SPMD and
-the mask can change every round without recompilation.
+Because the stragglers' theta is zero they contribute nothing to the
+reduce, so exclusion needs no gather/compaction — the whole round stays
+SPMD and the mask can change every round without recompilation.
 
-The registry names:
+Under the two-axis API the async family is NOT a separate set of backends
+anymore: every composed spec applies the late-join mask in its ``finalize``
+when ``ctx.active`` is set (``None`` = all-active, degenerating to the
+synchronous update). The legacy names stay as registry aliases —
 
-``async_einsum``     meshless reference (pjit tensordot + late-join) — the
-                     in-registry twin of the host simulation's update.
-``async_shard_map``  masked psum + late-join in one ``shard_map`` program.
-``async_rs_ag``      reduce-scatter + local FMA + all-gather with the ring
-                     payload pinned to ``ctx.comm_dtype``, + late-join.
+``async_einsum``     -> ``einsum``        (meshless reference; the
+                                          in-registry twin of the host sim)
+``async_shard_map``  -> ``shard_map:f32`` (masked psum under shard_map)
+``async_rs_ag``      -> ``rs_ag``         (masked reduce-scatter + FMA +
+                                          all-gather, ring payload from the
+                                          codec / ``ctx.comm_dtype``)
 
-The activity mask rides in ``AggregationContext.active`` (``None`` means
-everyone is active, which degenerates to the synchronous backends). The host
-simulation stays the semantic oracle: ``tests/test_async_device.py`` injects
-the same ``StragglerSchedule`` into both paths and requires leaf-for-leaf
-parity across all weight strategies and both mesh schedules.
+— and ``async_backend_name`` now maps ANY resolvable spec to its Alg. 4
+form, so the async regime composes with the payload axis
+(``"hierarchical:int8"`` under a straggler mask is a valid round). Only
+``pallas_wagg`` has no masked path. The host simulation stays the semantic
+oracle: ``tests/test_async_device.py`` injects the same
+``StragglerSchedule`` into both paths and requires leaf-for-leaf parity.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Dict, Optional
 
 import numpy as np
@@ -41,32 +45,49 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backends
-from repro.core import shardmap_agg as smagg
-from repro.core.aggregate import _axes_is_leaf, is_worker_leaf
+from repro.core.aggregate import _axes_is_leaf
 from repro.core.async_sim import (AsyncResult, StepTimeModel,
                                   StragglerSchedule, make_schedule)
 from repro.core.weights import masked_compute_theta
 
 ASYNC_BACKENDS = ("async_einsum", "async_shard_map", "async_rs_ag")
 
-# sync backend -> its Alg. 4 (masked + late-join) counterpart
+# legacy sync backend -> its Alg. 4 (masked + late-join) alias
 _ASYNC_OF = {"einsum": "async_einsum", "shard_map": "async_shard_map",
              "rs_ag": "async_rs_ag"}
 
 
 def async_backend_name(name: str) -> str:
-    """Map a (possibly synchronous) backend name to its async counterpart."""
+    """Map a (possibly synchronous) backend name/spec to its Alg. 4 form.
+
+    Legacy names keep their ``async_*`` aliases; any other resolvable
+    ``schedule[:codec]`` spec is already mask-capable (the composed
+    ``finalize`` applies the late-join whenever ``ctx.active`` is set), so
+    it maps to its own canonical spec — e.g. ``"quantized"`` ->
+    ``"einsum:int8"``, ``"hierarchical:int8"`` -> itself. ``pallas_wagg``
+    is the one schedule with no masked path.
+    """
     if name in ASYNC_BACKENDS:
         return name
     if name in _ASYNC_OF:
         return _ASYNC_OF[name]
-    raise ValueError(
-        f"aggregation backend {name!r} has no async (Alg. 4) counterpart; "
-        f"use one of {sorted(_ASYNC_OF)} or {sorted(ASYNC_BACKENDS)}")
+    try:
+        sched, codec = backends.resolve_spec(name)
+    except KeyError:
+        raise ValueError(
+            f"aggregation backend {name!r} has no async (Alg. 4) "
+            f"counterpart; use a composed 'schedule:codec' spec, one of "
+            f"{sorted(_ASYNC_OF)}, or {sorted(ASYNC_BACKENDS)}")
+    if not getattr(backends._SCHEDULES[sched], "supports_mask", True):
+        raise ValueError(
+            f"aggregation schedule {sched!r} has no async (Alg. 4) "
+            f"counterpart (no masked/late-join path); use the "
+            f"einsum/shard_map/rs_ag schedules")
+    return backends.canonical_spec(name)
 
 
 # ---------------------------------------------------------------------------
-# Masked Eq. 10 + late-join leaves
+# Masked Eq. 10 + late-join over a tree (compat entry point)
 # ---------------------------------------------------------------------------
 
 def _resolve_active(theta: jax.Array, active: Optional[jax.Array]):
@@ -75,19 +96,9 @@ def _resolve_active(theta: jax.Array, active: Optional[jax.Array]):
     return active.astype(bool)
 
 
-def aggregate_leaf_async_einsum(x: jax.Array, theta: jax.Array,
-                                active: jax.Array, beta,
-                                comm_dtype=jnp.float32) -> jax.Array:
-    """Meshless reference: pjit tensordot aggregate + late-join ``where`` —
-    the same update the host event simulation applies per round."""
-    xf = x.astype(jnp.float32)
-    theta = theta.astype(jnp.float32)
-    m = jnp.tensordot(theta.astype(comm_dtype), xf.astype(comm_dtype),
-                      axes=1).astype(jnp.float32)
-    fma = (1.0 - beta) * xf + beta * m[None]
-    mask = active.reshape((-1,) + (1,) * (x.ndim - 1))
-    out = jnp.where(mask, fma, jnp.broadcast_to(m[None], fma.shape))
-    return out.astype(x.dtype)
+# schedule keyword of the pre-two-axis API -> composed backend name
+_SCHEDULE_NAMES = {"einsum": "einsum", "all_reduce": "shard_map:f32",
+                   "rs_ag": "rs_ag"}
 
 
 def weighted_aggregate_async(params: Dict, axes: Dict, theta: jax.Array,
@@ -97,56 +108,21 @@ def weighted_aggregate_async(params: Dict, axes: Dict, theta: jax.Array,
     """Apply the masked Eq. 10 + late-join to all worker leaves.
 
     ``schedule``: "einsum" (meshless), "all_reduce" (masked psum under
-    shard_map) or "rs_ag" (reduce-scatter + FMA + all-gather). The mesh
-    schedules are the SAME collective leaves as the synchronous
-    ``shard_map``/``rs_ag`` backends (core/shardmap_agg.py) with the
-    late-join mask passed through — stragglers carry theta == 0, so the
-    collectives already exclude them, and inactive workers adopt the
-    aggregate m (analytically equal to sum_j theta_j [(1-beta)x_j + beta*m]).
+    shard_map) or "rs_ag" (reduce-scatter + FMA + all-gather). Thin compat
+    wrapper over the composed backends — the collectives are the SAME
+    leaves as the synchronous path with the late-join mask riding
+    ``ctx.active``: stragglers carry theta == 0, so the reduce already
+    excludes them, and inactive workers adopt the aggregate m (analytically
+    equal to sum_j theta_j [(1-beta)x_j + beta*m]).
     """
-    active = _resolve_active(theta, active)
-    if schedule == "einsum":
-        leaf = functools.partial(aggregate_leaf_async_einsum,
-                                 comm_dtype=comm_dtype)
-    elif schedule == "all_reduce":
-        leaf = lambda x, t, act, b: smagg.aggregate_leaf_shard_map(
-            x, t, b, mesh, active=act)
-    elif schedule == "rs_ag":
-        leaf = lambda x, t, act, b: smagg.aggregate_leaf_rs_ag(
-            x, t, b, mesh, comm_dtype=comm_dtype, active=act)
-    else:
-        raise ValueError(f"unknown async schedule {schedule!r}")
-
-    def visit(x, ax):
-        if is_worker_leaf(ax):
-            return leaf(x, theta, active, beta)
-        return x
-
-    return jax.tree.map(visit, params, axes, is_leaf=_axes_is_leaf)
-
-
-# ---------------------------------------------------------------------------
-# Registry entries
-# ---------------------------------------------------------------------------
-
-@backends.register_backend("async_einsum")
-def _async_einsum(params, axes, theta, beta, ctx):
-    return weighted_aggregate_async(params, axes, theta, ctx.active, beta,
-                                    schedule="einsum",
-                                    comm_dtype=ctx.comm_dtype)
-
-
-@backends.register_backend("async_shard_map", needs_mesh=True)
-def _async_shard_map(params, axes, theta, beta, ctx):
-    return weighted_aggregate_async(params, axes, theta, ctx.active, beta,
-                                    mesh=ctx.mesh, schedule="all_reduce")
-
-
-@backends.register_backend("async_rs_ag", needs_mesh=True)
-def _async_rs_ag(params, axes, theta, beta, ctx):
-    return weighted_aggregate_async(params, axes, theta, ctx.active, beta,
-                                    mesh=ctx.mesh, schedule="rs_ag",
-                                    comm_dtype=ctx.comm_dtype)
+    if schedule not in _SCHEDULE_NAMES:
+        raise ValueError(f"unknown async schedule {schedule!r}; "
+                         f"known: {sorted(_SCHEDULE_NAMES)}")
+    ctx = backends.AggregationContext(
+        mesh=mesh, comm_dtype=comm_dtype,
+        active=_resolve_active(theta, active))
+    return backends.aggregate_with(_SCHEDULE_NAMES[schedule], params, axes,
+                                   theta, beta, ctx=ctx)
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +140,8 @@ def build_async_round(grad_fn: Callable, axes: Dict, *, lr: float,
     One jitted program per p-of-(p+b) round: the local steps, the masked
     Boltzmann theta, the Eq. 10 aggregate, and the straggler late-join all
     trace together — ``active`` is a ``(w,)`` bool input, so a new straggler
-    set per round costs no recompilation.
+    set per round costs no recompilation. ``backend`` accepts any composed
+    ``schedule:codec`` spec (or a legacy ``async_*`` alias).
 
     ``grad_fn(params_stacked, batch) -> (losses (w,), grads_stacked)`` —
     the same contract as ``async_sim.run_parallel_sgd``.
@@ -205,10 +182,10 @@ def run_parallel_sgd_on_device(grad_fn: Callable, params0: Dict, axes: Dict,
     """On-device drop-in for ``async_sim.run_parallel_sgd``.
 
     Same scheduling semantics (inject the same ``schedule`` for parity),
-    but every round executes as one jitted SPMD program through the
-    ``async_*`` backend family. ``AsyncResult.params`` is the final
-    worker-stacked parameter tree the parity harness compares leaf-for-leaf
-    against the host simulation's.
+    but every round executes as one jitted SPMD program through a composed
+    aggregation spec. ``AsyncResult.params`` is the final worker-stacked
+    parameter tree the parity harness compares leaf-for-leaf against the
+    host simulation's.
     """
     if schedule is None:
         if time_model is None:

@@ -1,116 +1,143 @@
-"""Aggregation backend registry: one pluggable seam for the Eq. 10 step.
+"""Two-axis aggregation API: collective *schedule* x payload *codec*.
 
 The paper's contribution is a single communication rule,
 
     x_i  <-  (1 - beta) * x_i  +  beta * sum_j theta_j * x_j        (Eq. 10)
 
-but the repo grows several *implementations* of it — different lowerings,
-payload dtypes, and schedules. This module is the seam they all plug into,
-in the spirit of ``configs/registry.py``: every implementation is an
-``AggregatorBackend`` registered under a string name, selected end-to-end by
-``WASGDConfig.backend`` (``core/wasgd.py:communicate``, ``train/step.py``,
-``core/async_sim.py``, benchmarks, examples).
+but how fast it runs is the product of two orthogonal choices: where the
+collectives go (the **schedule**) and what bytes they carry (the **codec**).
+This module keeps one registry per axis and composes them on demand —
+``WASGDConfig.backend`` accepts a spec string
 
-Registered backends
-===================
+    "<schedule>:<codec>"        e.g. "rs_ag:int8", "hierarchical:bf16"
+
+or a bare ``"<schedule>"`` (codec derived from ``ctx.comm_dtype``, i.e. the
+legacy ``WASGDConfig.comm_dtype`` knob keeps working), or ``"auto"``
+(``select_auto_spec``: pick the spec per (total worker-leaf bytes, mesh
+size) from recorded ``benchmarks/kernel_bench.py`` measurements, with a
+size heuristic as fallback).
+
+Schedules (the placement axis)
+==============================
+
+Every schedule is *phased* — ``prepare -> reduce phase(s) -> finalize`` —
+and the phases of all worker leaves are sequenced together, so a
+multi-phase schedule exposes a seam BETWEEN its collectives. The optional
+``overlap=`` hook (a nullary compute thunk) runs exactly there: for
+``rs_ag`` the thunk's ops land between the reduce-scatter and the
+all-gather, so independent compute (the next round's first forward, metric
+reductions, ...) can hide the second collective. The thunk never feeds the
+aggregate, so the produced params are identical with or without it.
 
 ``einsum``        The reference. pjit tensordot over the worker axis; XLA
-                  derives the theta-weighted all-reduce. Honors
-                  ``ctx.comm_dtype`` (bf16 halves ring bytes).
-``quantized``     int8 aggregation payload with a per-leaf symmetric scale
-                  (~4x fewer collective bytes; quantization error stays
-                  local). ``ctx.comm_dtype`` is ignored — the payload is
-                  already int8.
-``hierarchical``  2-hop reduction: pod-local partial reduce, then a tiny
-                  cross-pod reduce so the DCN hop carries pre-reduced
-                  partials. Uses ``ctx.n_pods`` and ``ctx.comm_dtype``.
-``shard_map``     Explicit ``lax.psum`` under ``shard_map`` — the form to
-                  reach for when collective scheduling matters. Requires
-                  ``ctx.mesh``.
-``rs_ag``         reduce-scatter + local FMA + all-gather schedule. Same
-                  ring bytes as one all-reduce, but the payload dtype is
-                  pinned to ``ctx.comm_dtype`` (XLA can't re-associate it
-                  away) and the phases can overlap with neighboring compute.
-                  Requires ``ctx.mesh``.
+                  derives the theta-weighted all-reduce. 1 reduce phase.
+``hierarchical``  2-hop: pod-local reduce (phase 1, carries the codec
+                  payload), tiny cross-pod reduce (phase 2, always f32).
+                  Uses ``ctx.n_pods``; fails loud on a degenerate pod count.
+``shard_map``     Explicit ``lax.psum`` under ``shard_map``. 1 reduce
+                  phase. Requires ``ctx.mesh``.
+``rs_ag``         reduce-scatter (phase 1) + all-gather (phase 2) + local
+                  FMA. Same ring bytes as one all-reduce, payload pinned to
+                  the codec's wire dtype, and the two phases straddle the
+                  ``overlap=`` thunk. Requires ``ctx.mesh``.
 ``pallas_wagg``   Fused Pallas TPU kernel for the local FMA
                   (``kernels/wagg``): one VMEM pass instead of three HBM
-                  round trips. Interpret mode on CPU.
+                  round trips. f32 only; interpret mode on CPU.
 
-``async_einsum`` / ``async_shard_map`` / ``async_rs_ag``
-                  Alg. 4 (p-of-(p+b)) counterparts registered by
-                  ``core/async_device.py``: theta is masked (stragglers get
-                  exactly 0) and inactive workers late-join the aggregate.
-                  The activity mask rides in ``ctx.active``; ``None`` means
-                  all-active, degenerating to the synchronous update.
+Codecs (the payload axis) live in ``core/codecs.py``: ``f32``, ``bf16``,
+``int8`` (the old ``quantized`` backend), ``int4`` (stochastic rounding).
+Each documents a per-element ``error_bound`` the composition-grid test
+holds every pair to.
 
-Composition rules
+Alias table (old name -> spec)
+==============================
+
+    einsum           einsum        (codec from ctx.comm_dtype)
+    quantized        einsum:int8
+    hierarchical     hierarchical  (codec from ctx.comm_dtype)
+    shard_map        shard_map:f32
+    rs_ag            rs_ag         (codec from ctx.comm_dtype)
+    pallas_wagg      pallas_wagg:f32
+    async_einsum     einsum        -- the Alg. 4 mask is not a separate
+    async_shard_map  shard_map:f32    backend anymore: EVERY composed spec
+    async_rs_ag      rs_ag            honors ``ctx.active`` in its finalize
+                                      (stragglers late-join the aggregate),
+                                      so the async family composes with any
+                                      codec (e.g. "hierarchical:int8" under
+                                      a straggler mask).
+
+Legacy boolean knobs also compose now: ``quantize_comm=True`` +
+``sharded_aggregate=True`` resolves to ``"rs_ag:int8"`` instead of silently
+dropping the mesh schedule, and ``hierarchical=True`` with ``n_pods=1``
+raises instead of silently running the flat einsum path
+(``backend_name_from_config``).
+
+Adding a schedule
 =================
 
-The backend name picks the *aggregation rule / schedule*; orthogonal knobs
-ride in the ``AggregationContext`` so they compose instead of shadowing each
-other:
+    from repro.core.backends import register_schedule
 
-* ``ctx.comm_dtype``  — payload dtype for the worker-axis collective
-  (``einsum``, ``hierarchical``, ``rs_ag``).
-* ``ctx.n_pods``      — pod count for the ``hierarchical`` 2-hop.
-* ``ctx.mesh``        — physical mesh, required by the ``shard_map`` /
-  ``rs_ag`` backends (they place explicit collectives).
+    @register_schedule
+    class MySchedule:
+        name = "my_sched"
+        needs_mesh = False
+        n_phases = 1
+        def prepare(self, x, theta, codec, ctx): ...
+        def reduce_phase(self, i, state, theta, codec, ctx): ...
+        def finalize(self, state, x, theta, beta, codec, ctx): ...
 
-``backend_name_from_config`` derives the name from the legacy boolean knobs
-(``quantize_comm`` -> ``quantized``, ``hierarchical`` -> ``hierarchical``,
-``sharded_aggregate`` -> ``rs_ag``) when ``WASGDConfig.backend`` is unset,
-so existing configs select the same computation. One deliberate behavior
-change: ``sharded_aggregate=True`` used to be silently ignored outside
-``train/step.py``; it now routes to ``rs_ag``, which needs a mesh — pass
-``mesh=`` through ``communicate``/``wasgd_rule``/``Trainer``.
-
-Adding a backend
-================
-
-    from repro.core.backends import register_backend
-
-    @register_backend("my_sched")
-    def _my_sched(params, axes, theta, beta, ctx):
-        ...return the updated params tree...
-
-Then set ``WASGDConfig(backend="my_sched")`` — it is immediately selectable
-through ``communicate``/``train/step.py`` and picked up by the shared
-numerical-parity test (``tests/test_backends.py``) and the
-``benchmarks/kernel_bench.py`` backend sweep. Backends that place explicit
-collectives should pass ``needs_mesh=True`` so a missing ``ctx.mesh`` fails
-with a clear error at trace time.
+Every ``"my_sched:<codec>"`` spec becomes selectable through
+``WASGDConfig.backend`` and is picked up by the composition-grid parity
+test (``tests/test_composition_grid.py``) and the
+``benchmarks/kernel_bench.py`` matrix sweep. ``register_backend`` remains
+for monolithic one-off backends (a plain
+``fn(params, axes, theta, beta, ctx)``) that do not decompose into the two
+axes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+import json
+import math
+import os
+import warnings
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, \
+    runtime_checkable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import aggregate as agg
+from repro.core import codecs as codecs_mod
 from repro.core import shardmap_agg as smagg
+from repro.core.aggregate import fma_late_join
+from repro.core.codecs import (PayloadCodec, available_codecs,
+                               codec_for_dtype, get_codec, register_codec)
 
 
 # ---------------------------------------------------------------------------
-# Context + protocol
+# Context + protocols
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class AggregationContext:
-    """Orthogonal knobs every backend receives (and may ignore).
+    """Orthogonal knobs every schedule/codec receives (and may ignore).
 
-    ``mesh``       physical mesh for backends that place explicit collectives.
-    ``comm_dtype`` payload dtype riding the worker-axis collective.
+    ``mesh``       physical mesh for schedules that place explicit collectives.
+    ``comm_dtype`` payload dtype for specs that leave the codec axis open
+                   (``f32``/``bf16`` -> the matching codec).
     ``n_pods``     pod count for the hierarchical 2-hop.
-    ``active``     (w,) bool activity mask for the ``async_*`` family
-                   (may be a tracer); ``None`` = all workers active.
+    ``active``     (w,) bool activity mask for Alg. 4 (may be a tracer);
+                   ``None`` = all workers active (no mask in the program).
+    ``key``        optional PRNG key for stochastic codecs (``int4``);
+                   ``None`` = a fixed fold-in (deterministic).
     """
     mesh: Optional[Mesh] = None
     comm_dtype: Any = jnp.float32
     n_pods: int = 1
     active: Optional[jax.Array] = None
+    key: Optional[jax.Array] = None
 
 
 DEFAULT_CONTEXT = AggregationContext()
@@ -127,9 +154,36 @@ class AggregatorBackend(Protocol):
         ...
 
 
+@runtime_checkable
+class AggregationSchedule(Protocol):
+    """The placement axis: where the worker-axis collectives go.
+
+    ``n_phases`` reduce phases run in sequence over ALL worker leaves; the
+    ``overlap=`` thunk (ComposedBackend.aggregate) runs after phase 0, i.e.
+    between the two collectives of a 2-phase schedule. ``codecs`` (optional
+    tuple) restricts the payload axis; ``None`` means every registered
+    codec composes.
+    """
+    name: str
+    needs_mesh: bool
+    n_phases: int
+
+    def prepare(self, x: jax.Array, theta: jax.Array, codec: PayloadCodec,
+                ctx: AggregationContext) -> Dict:
+        ...
+
+    def reduce_phase(self, i: int, state: Dict, theta: jax.Array,
+                     codec: PayloadCodec, ctx: AggregationContext) -> Dict:
+        ...
+
+    def finalize(self, state: Dict, x: jax.Array, theta: jax.Array, beta,
+                 codec: PayloadCodec, ctx: AggregationContext) -> jax.Array:
+        ...
+
+
 class _FnBackend:
     """Adapter turning a plain ``fn(params, axes, theta, beta, ctx)`` into an
-    ``AggregatorBackend``."""
+    ``AggregatorBackend`` (the monolithic escape hatch)."""
 
     def __init__(self, name: str, fn: Callable, needs_mesh: bool = False):
         self.name = name
@@ -150,22 +204,216 @@ class _FnBackend:
 
 
 # ---------------------------------------------------------------------------
-# Registry
+# Built-in schedules
 # ---------------------------------------------------------------------------
 
-_REGISTRY: Dict[str, AggregatorBackend] = {}
+class _EinsumSchedule:
+    """Reference: pjit tensordot; XLA derives the theta-weighted all-reduce."""
+    name = "einsum"
+    needs_mesh = False
+    n_phases = 1
+    codecs = None
+    supports_mask = True
+
+    def prepare(self, x, theta, codec, ctx):
+        payload, aux = codec.encode(x, ctx)
+        return {"payload": payload, "aux": aux}
+
+    def reduce_phase(self, i, state, theta, codec, ctx):
+        rd = codec.reduce_dtype
+        m = jnp.tensordot(theta.astype(rd), state["payload"].astype(rd),
+                          axes=1).astype(jnp.float32)
+        return {"m": m, "aux": state["aux"]}
+
+    def finalize(self, state, x, theta, beta, codec, ctx):
+        m = codec.decode_reduced(state["m"], state["aux"])
+        return fma_late_join(x, m, beta, ctx.active)
+
+
+class _HierarchicalSchedule:
+    """2-hop: pod-local reduce (phase 1, codec payload), cross-pod reduce
+    (phase 2, f32) — the DCN hop carries pre-reduced partials. With a
+    quantizing codec the pod-local hop carries the integer payload and only
+    the tiny cross-pod hop rides f32."""
+    name = "hierarchical"
+    needs_mesh = False
+    n_phases = 2
+    codecs = None
+    supports_mask = True
+
+    def validate(self, theta, ctx):
+        # Fail clear instead of silently taking the flat einsum path: the old
+        # n_pods guard swallowed a misconfigured 2-hop and ran a different
+        # computation without warning.
+        w = theta.shape[0]
+        if ctx.n_pods < 2 or w % ctx.n_pods:
+            raise ValueError(
+                f"'hierarchical' schedule needs ctx.n_pods >= 2 dividing the "
+                f"worker count (got n_pods={ctx.n_pods}, workers={w}); set "
+                f"WASGDConfig.n_pods or use the 'einsum' schedule")
+
+    def prepare(self, x, theta, codec, ctx):
+        payload, aux = codec.encode(x, ctx)
+        w = payload.shape[0]
+        xr = payload.reshape(ctx.n_pods, w // ctx.n_pods, *payload.shape[1:])
+        return {"xr": xr, "aux": aux}
+
+    def reduce_phase(self, i, state, theta, codec, ctx):
+        if i == 0:                                   # pod-local hop
+            rd = codec.reduce_dtype
+            w = theta.shape[0]
+            tr = theta.reshape(ctx.n_pods, w // ctx.n_pods)
+            partial = jnp.einsum("pw...,pw->p...", state["xr"].astype(rd),
+                                 tr.astype(rd))
+            return {"partial": partial, "aux": state["aux"]}
+        m = state["partial"].astype(jnp.float32).sum(axis=0)   # cross-pod hop
+        return {"m": m, "aux": state["aux"]}
+
+    def finalize(self, state, x, theta, beta, codec, ctx):
+        m = codec.decode_reduced(state["m"], state["aux"])
+        return fma_late_join(x, m, beta, ctx.active)
+
+
+class _ShardMapSchedule:
+    """Explicit ``lax.psum`` under shard_map — the form to reach for when
+    collective placement matters. One reduce phase."""
+    name = "shard_map"
+    needs_mesh = True
+    n_phases = 1
+    codecs = None
+    supports_mask = True
+
+    def prepare(self, x, theta, codec, ctx):
+        payload, aux = codec.encode(x, ctx)
+        return {"payload": payload, "aux": aux}
+
+    def reduce_phase(self, i, state, theta, codec, ctx):
+        m = smagg.all_reduce_m_phase(state["payload"], theta, ctx.mesh,
+                                     reduce_dtype=codec.reduce_dtype)
+        return {"m": m, "aux": state["aux"]}
+
+    def finalize(self, state, x, theta, beta, codec, ctx):
+        m = codec.decode_reduced(state["m"], state["aux"])
+        return fma_late_join(x, m, beta, ctx.active)
+
+
+class _RsAgSchedule:
+    """reduce-scatter (phase 1) + all-gather (phase 2) + local FMA. Same
+    ring bytes as one all-reduce, but the payload dtype is pinned and the
+    ``overlap=`` thunk runs between the two collectives.
+
+    Dtype codecs pin the *ring partial* (the legacy ``comm_dtype`` cast on
+    the scattered operand); quantizing codecs encode the *operand* and let
+    the partial ride in ``reduce_dtype`` — partial sums of integer payloads
+    are fractional, so re-quantizing them per hop would compound error.
+    """
+    name = "rs_ag"
+    needs_mesh = True
+    n_phases = 2
+    codecs = None
+    supports_mask = True
+
+    def prepare(self, x, theta, codec, ctx):
+        p = smagg.mesh_worker_shards(ctx.mesh)
+        if codec.quantizing:
+            payload, aux = codec.encode(x, ctx)
+            wire = codec.reduce_dtype
+        else:
+            payload, aux = x, None
+            wire = codec.wire_dtype
+        flat, n = smagg.flatten_pad(payload, p)
+        return {"flat": flat, "aux": aux, "n": n, "wire": wire}
+
+    def reduce_phase(self, i, state, theta, codec, ctx):
+        if i == 0:
+            m_scat = smagg.reduce_scatter_phase(state["flat"], theta,
+                                                ctx.mesh,
+                                                wire_dtype=state["wire"])
+            return {**state, "m_scat": m_scat}
+        m = smagg.all_gather_phase(state["m_scat"], ctx.mesh)
+        return {**state, "m": m}
+
+    def finalize(self, state, x, theta, beta, codec, ctx):
+        m = codec.decode_reduced(state["m"], state["aux"])
+        flat_x, n = smagg.flatten_pad(x, smagg.mesh_worker_shards(ctx.mesh))
+        out = fma_late_join(flat_x, m, beta, ctx.active)
+        return out[:, :n].reshape(x.shape)
+
+
+class _PallasWaggSchedule:
+    """Fused Pallas TPU kernel for the local FMA (kernels/wagg): aggregation
+    and FMA in one VMEM pass. f32 only; no Alg. 4 mask path."""
+    name = "pallas_wagg"
+    needs_mesh = False
+    n_phases = 1
+    codecs = ("f32",)
+    supports_mask = False          # the fused kernel has no late-join path
+
+    def validate(self, theta, ctx):
+        if ctx.active is not None:
+            raise ValueError(
+                "'pallas_wagg' has no Alg. 4 (masked/late-join) path; use "
+                "the einsum/shard_map/rs_ag schedules for async rounds")
+
+    def prepare(self, x, theta, codec, ctx):
+        return {}
+
+    def reduce_phase(self, i, state, theta, codec, ctx):
+        return state
+
+    def finalize(self, state, x, theta, beta, codec, ctx):
+        from repro.kernels.wagg.ops import wagg_leaf   # lazy: kernels optional
+        return wagg_leaf(x, theta, beta)
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+_SCHEDULES: Dict[str, AggregationSchedule] = {}
+_REGISTRY: Dict[str, AggregatorBackend] = {}     # monolithic one-off backends
+_COMPOSED: Dict[str, "ComposedBackend"] = {}     # resolved spec cache
+
+# old name -> (schedule, codec-or-None). None = derive from ctx.comm_dtype,
+# which is exactly how the legacy backends honored WASGDConfig.comm_dtype.
+_ALIASES: Dict[str, Tuple[str, Optional[str]]] = {
+    "einsum": ("einsum", None),
+    "quantized": ("einsum", "int8"),
+    "hierarchical": ("hierarchical", None),
+    "shard_map": ("shard_map", "f32"),
+    "rs_ag": ("rs_ag", None),
+    "pallas_wagg": ("pallas_wagg", "f32"),
+    # Alg. 4 family: same schedules — every composed spec honors ctx.active.
+    "async_einsum": ("einsum", None),
+    "async_shard_map": ("shard_map", "f32"),
+    "async_rs_ag": ("rs_ag", None),
+}
+
+
+def register_schedule(schedule, *, overwrite: bool = False):
+    """Register an ``AggregationSchedule`` (instance or class) by its name."""
+    obj = schedule() if isinstance(schedule, type) else schedule
+    if obj.name in _SCHEDULES and not overwrite:
+        raise ValueError(f"aggregation schedule {obj.name!r} already "
+                         f"registered; pass overwrite=True to replace")
+    _SCHEDULES[obj.name] = obj
+    _COMPOSED.clear()
+    return schedule
 
 
 def register_backend(name: str, fn: Optional[Callable] = None, *,
                      needs_mesh: bool = False, overwrite: bool = False):
-    """Register an aggregation backend under ``name``.
+    """Register a monolithic aggregation backend under ``name``.
 
-    Usable as a decorator (``@register_backend("einsum")``) over a function
-    ``fn(params, axes, theta, beta, ctx)``, or called directly with an object
-    already satisfying the ``AggregatorBackend`` protocol.
+    Usable as a decorator (``@register_backend("my_backend")``) over a
+    function ``fn(params, axes, theta, beta, ctx)``, or called directly with
+    an object already satisfying the ``AggregatorBackend`` protocol. For
+    anything that decomposes into placement x payload, prefer
+    ``register_schedule`` / ``register_codec`` so it composes.
     """
     def _register(obj):
-        if name in _REGISTRY and not overwrite:
+        taken = name in _REGISTRY or name in _ALIASES or name in _SCHEDULES
+        if taken and not overwrite:
             raise ValueError(f"aggregation backend {name!r} already "
                              f"registered; pass overwrite=True to replace")
         if hasattr(obj, "aggregate"):
@@ -188,40 +436,202 @@ def register_backend(name: str, fn: Optional[Callable] = None, *,
     return _register
 
 
+register_schedule(_EinsumSchedule())
+register_schedule(_HierarchicalSchedule())
+register_schedule(_ShardMapSchedule())
+register_schedule(_RsAgSchedule())
+register_schedule(_PallasWaggSchedule())
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution + the composed backend
+# ---------------------------------------------------------------------------
+
+def resolve_spec(name: str) -> Tuple[str, Optional[str]]:
+    """``alias | schedule | schedule:codec`` -> (schedule, codec-or-None).
+
+    ``None`` codec means "derive from ctx.comm_dtype at aggregate time".
+    Raises ``KeyError`` with the known names on anything unresolvable.
+    """
+    if name in _ALIASES:
+        return _ALIASES[name]
+    if ":" in name:
+        sched, codec = name.split(":", 1)
+        if sched not in _SCHEDULES:
+            raise KeyError(
+                f"unknown aggregation schedule {sched!r} in spec {name!r}; "
+                f"known schedules: {sorted(_SCHEDULES)}")
+        if codec not in available_codecs():
+            raise KeyError(
+                f"unknown payload codec {codec!r} in spec {name!r}; "
+                f"known codecs: {list(available_codecs())}")
+        return sched, codec
+    if name in _SCHEDULES:
+        return name, None
+    raise KeyError(
+        f"unknown aggregation backend {name!r}; known names: "
+        f"{sorted(set(_ALIASES) | set(_REGISTRY))}, or compose a "
+        f"'<schedule>:<codec>' spec from schedules {sorted(_SCHEDULES)} "
+        f"x codecs {list(available_codecs())}")
+
+
+def canonical_spec(name: str) -> str:
+    """Normalize an alias/spec to ``schedule[:codec]`` form."""
+    sched, codec = resolve_spec(name)
+    return sched if codec is None else f"{sched}:{codec}"
+
+
+class ComposedBackend:
+    """schedule x codec, exposed through the ``AggregatorBackend`` protocol.
+
+    ``aggregate`` runs each reduce phase across ALL worker leaves before the
+    next one, and fires the ``overlap=`` thunk after phase 0 — between the
+    two collectives of a 2-phase schedule (rs_ag: after every leaf's
+    reduce-scatter, before any all-gather). With ``overlap=`` the return
+    value is ``(params, overlap_result)``; the thunk cannot feed the
+    aggregate, so params are identical either way.
+    """
+
+    def __init__(self, schedule: AggregationSchedule,
+                 codec_name: Optional[str], name: str):
+        self.schedule = schedule
+        self.codec_name = codec_name
+        self.name = name
+        self.needs_mesh = schedule.needs_mesh
+
+    def _codec(self, ctx: AggregationContext) -> PayloadCodec:
+        codec = (get_codec(self.codec_name) if self.codec_name
+                 else codec_for_dtype(ctx.comm_dtype))
+        supported = getattr(self.schedule, "codecs", None)
+        if supported is not None and codec.name not in supported:
+            raise ValueError(
+                f"schedule {self.schedule.name!r} composes only with codecs "
+                f"{list(supported)}, not {codec.name!r} "
+                f"(spec {self.name!r})")
+        return codec
+
+    def aggregate(self, params, axes, theta, beta, *,
+                  ctx: AggregationContext = DEFAULT_CONTEXT, overlap=None):
+        if self.needs_mesh and ctx.mesh is None:
+            raise ValueError(
+                f"aggregation backend {self.name!r} places explicit "
+                f"collectives and needs ctx.mesh (pass mesh= through "
+                f"communicate/wasgd_rule, or use the 'einsum' family)")
+        codec = self._codec(ctx)
+        validate = getattr(self.schedule, "validate", None)
+        if validate is not None:
+            validate(theta, ctx)
+
+        theta = theta.astype(jnp.float32)
+        leaves_ax, treedef = jax.tree_util.tree_flatten(
+            axes, is_leaf=agg._axes_is_leaf)
+        leaves_x = treedef.flatten_up_to(params)
+        idx = [i for i, ax in enumerate(leaves_ax) if agg.is_worker_leaf(ax)]
+
+        sched = self.schedule
+        states = {i: sched.prepare(leaves_x[i], theta, codec, ctx)
+                  for i in idx}
+        overlap_out = None
+        for phase in range(sched.n_phases):
+            states = {i: sched.reduce_phase(phase, st, theta, codec, ctx)
+                      for i, st in states.items()}
+            if phase == 0 and overlap is not None:
+                overlap_out = overlap()
+        out = list(leaves_x)
+        for i in idx:
+            out[i] = sched.finalize(states[i], leaves_x[i], theta, beta,
+                                    codec, ctx)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        if overlap is None:
+            return tree
+        return tree, overlap_out
+
+    def __repr__(self):
+        return f"ComposedBackend({self.name!r})"
+
+
 def get_backend(name: str) -> AggregatorBackend:
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown aggregation backend {name!r}; "
-                       f"known: {sorted(_REGISTRY)}")
-    return _REGISTRY[name]
+    if name in _REGISTRY:                 # monolithic one-offs win their name
+        return _REGISTRY[name]
+    if name == "auto":
+        raise KeyError(
+            "backend 'auto' is resolved per parameter tree; go through "
+            "aggregate_from_config, or call select_auto_spec(params, axes, "
+            "mesh) and get_backend the result")
+    if name not in _COMPOSED:
+        sched_name, codec_name = resolve_spec(name)
+        _COMPOSED[name] = ComposedBackend(_SCHEDULES[sched_name], codec_name,
+                                          name)
+    return _COMPOSED[name]
 
 
 def available_backends() -> Tuple[str, ...]:
-    return tuple(sorted(_REGISTRY))
+    """Selectable *names* (aliases + monolithic registrations). The full
+    composable grid is ``available_specs()``."""
+    return tuple(sorted(set(_ALIASES) | set(_REGISTRY)))
+
+
+def available_schedules() -> Tuple[str, ...]:
+    return tuple(sorted(_SCHEDULES))
+
+
+def available_specs() -> Tuple[str, ...]:
+    """Every composable ``schedule:codec`` spec (the composition grid)."""
+    out = []
+    for s in sorted(_SCHEDULES):
+        supported = getattr(_SCHEDULES[s], "codecs", None)
+        for c in available_codecs():
+            if supported is None or c in supported:
+                out.append(f"{s}:{c}")
+    return tuple(out)
 
 
 def aggregate_with(name: str, params: Dict, axes: Dict, theta: jax.Array,
-                   beta, *, ctx: AggregationContext = DEFAULT_CONTEXT) -> Dict:
-    """One-shot convenience: ``get_backend(name).aggregate(...)``."""
-    return get_backend(name).aggregate(params, axes, theta, beta, ctx=ctx)
+                   beta, *, ctx: AggregationContext = DEFAULT_CONTEXT,
+                   overlap: Optional[Callable] = None) -> Dict:
+    """One-shot convenience: ``get_backend(name).aggregate(...)``.
+
+    With ``overlap=`` (a nullary compute thunk) the return value is
+    ``(params, overlap_result)`` and the thunk's ops are placed between the
+    schedule's collective phases (monolithic backends run it after their
+    single aggregate call).
+    """
+    backend = get_backend(name)
+    if overlap is None:
+        return backend.aggregate(params, axes, theta, beta, ctx=ctx)
+    if isinstance(backend, ComposedBackend):
+        return backend.aggregate(params, axes, theta, beta, ctx=ctx,
+                                 overlap=overlap)
+    out = backend.aggregate(params, axes, theta, beta, ctx=ctx)
+    return out, overlap()
 
 
 def aggregate_from_config(wcfg, params: Dict, axes: Dict, theta: jax.Array,
                           *, beta=None, mesh: Optional[Mesh] = None,
-                          leaf_fn=None) -> Dict:
+                          leaf_fn=None,
+                          overlap: Optional[Callable] = None) -> Dict:
     """Apply Eq. 10 with the backend + context a ``WASGDConfig`` selects.
 
-    The single config→backend resolution shared by ``communicate`` and
-    ``train/step.py:wasgd_rule`` — every knob (``backend``/legacy booleans,
-    ``comm_dtype``, ``n_pods``, ``mesh``) reaches the computation through
-    here. ``beta`` defaults to ``wcfg.beta``; ``leaf_fn`` is the legacy
-    escape hatch that bypasses the registry.
+    The single config->backend resolution shared by ``communicate`` and
+    ``train/step.py:wasgd_rule`` — every knob (``backend`` spec/legacy
+    booleans, ``comm_dtype``, ``n_pods``, ``mesh``) reaches the computation
+    through here. ``backend="auto"`` resolves per parameter tree
+    (``select_auto_spec``). ``beta`` defaults to ``wcfg.beta``; ``leaf_fn``
+    is the legacy escape hatch that bypasses the registry; ``overlap`` is
+    the compute thunk threaded between collective phases (returns
+    ``(params, overlap_result)`` when set).
     """
     beta = wcfg.beta if beta is None else beta
     if leaf_fn is not None:
-        return agg.weighted_aggregate(params, axes, theta, beta,
-                                      leaf_fn=leaf_fn)
-    return aggregate_with(backend_name_from_config(wcfg), params, axes,
-                          theta, beta, ctx=context_from_config(wcfg, mesh))
+        out = agg.weighted_aggregate(params, axes, theta, beta,
+                                     leaf_fn=leaf_fn)
+        return out if overlap is None else (out, overlap())
+    name = backend_name_from_config(wcfg)
+    if name == "auto":
+        name = select_auto_spec(params, axes, mesh, n_pods=wcfg.n_pods)
+    return aggregate_with(name, params, axes, theta, beta,
+                          ctx=context_from_config(wcfg, mesh),
+                          overlap=overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -229,22 +639,41 @@ def aggregate_from_config(wcfg, params: Dict, axes: Dict, theta: jax.Array,
 # ---------------------------------------------------------------------------
 
 def backend_name_from_config(wcfg) -> str:
-    """Resolve ``WASGDConfig`` to a backend name.
+    """Resolve ``WASGDConfig`` to a backend name or composed spec.
 
-    An explicit ``wcfg.backend`` wins; otherwise the legacy boolean knobs
-    derive it (mutual priority: quantized > hierarchical > rs_ag > einsum,
-    matching the old if/elif sprawl in ``core/aggregate.py``).
+    An explicit ``wcfg.backend`` wins. Otherwise the legacy boolean knobs
+    COMPOSE instead of shadowing each other: the booleans pick the schedule
+    (``hierarchical`` > ``sharded_aggregate`` > einsum, the old priority)
+    and ``quantize_comm`` picks the int8 codec on top — so
+    ``quantize_comm=True, sharded_aggregate=True`` is ``"rs_ag:int8"``, not
+    a silently-dropped mesh schedule. Degenerate combinations fail loud:
+    ``hierarchical=True`` with ``n_pods < 2`` used to fall through to the
+    flat einsum path without a word; it now raises.
     """
     explicit = getattr(wcfg, "backend", "")
     if explicit:
         return explicit
+    sched = "einsum"
+    if wcfg.hierarchical:
+        if wcfg.n_pods < 2:
+            raise ValueError(
+                "WASGDConfig(hierarchical=True) with n_pods < 2 is a "
+                "degenerate 2-hop (the old resolver silently ran the flat "
+                "einsum path instead); set n_pods >= 2 dividing the worker "
+                "count, or drop hierarchical=True")
+        if wcfg.sharded_aggregate:
+            warnings.warn(
+                "hierarchical=True and sharded_aggregate=True name two "
+                "different schedules; taking 'hierarchical' (the legacy "
+                "priority) — set WASGDConfig.backend to an explicit "
+                "'<schedule>:<codec>' spec to silence this",
+                stacklevel=2)
+        sched = "hierarchical"
+    elif wcfg.sharded_aggregate:
+        sched = "rs_ag"
     if wcfg.quantize_comm:
-        return "quantized"
-    if wcfg.hierarchical and wcfg.n_pods > 1:
-        return "hierarchical"
-    if wcfg.sharded_aggregate:
-        return "rs_ag"
-    return "einsum"
+        return f"{sched}:int8"
+    return sched
 
 
 def context_from_config(wcfg, mesh: Optional[Mesh] = None
@@ -255,60 +684,143 @@ def context_from_config(wcfg, mesh: Optional[Mesh] = None
 
 
 # ---------------------------------------------------------------------------
-# Built-in backends
+# backend="auto": measurement-driven spec selection
 # ---------------------------------------------------------------------------
 
-@register_backend("einsum")
-def _einsum(params, axes, theta, beta, ctx):
-    return agg.weighted_aggregate(params, axes, theta, beta,
-                                  comm_dtype=ctx.comm_dtype)
+AUTO_BENCH_PATH = os.path.join("results", "BENCH_backend_matrix.json")
+
+# Nearest-measurement cutoff (log-space distance over bytes x mesh-size).
+# ~3.0 = a ~20x mismatch in the (bytes * devices) product: beyond that a
+# recorded point says nothing about this workload and the size heuristic is
+# more trustworthy than an extrapolated measurement.
+AUTO_MAX_LOG_DIST = 3.0
+
+_AUTO_TABLE_CACHE: Dict = {}
 
 
-@register_backend("quantized")
-def _quantized(params, axes, theta, beta, ctx):
-    return agg.weighted_aggregate(params, axes, theta, beta, quantize=True)
+def _load_auto_table(path: str):
+    try:
+        mtime = os.stat(path).st_mtime_ns
+    except OSError:
+        return None
+    key = (os.path.abspath(path), mtime)
+    if key not in _AUTO_TABLE_CACHE:
+        _AUTO_TABLE_CACHE.clear()
+        try:
+            with open(path) as f:
+                _AUTO_TABLE_CACHE[key] = json.load(f).get("records", [])
+        except (OSError, ValueError):
+            _AUTO_TABLE_CACHE[key] = None
+    return _AUTO_TABLE_CACHE[key]
 
 
-@register_backend("hierarchical")
-def _hierarchical(params, axes, theta, beta, ctx):
-    # Fail clear (like needs_mesh) instead of silently taking the flat
-    # einsum path: aggregate_leaf's n_pods guard would otherwise swallow a
-    # misconfigured 2-hop and run a different computation without warning.
-    w = theta.shape[0]
-    if ctx.n_pods < 2 or w % ctx.n_pods:
-        raise ValueError(
-            f"'hierarchical' backend needs ctx.n_pods >= 2 dividing the "
-            f"worker count (got n_pods={ctx.n_pods}, workers={w}); set "
-            f"WASGDConfig.n_pods or use the 'einsum' backend")
-    return agg.weighted_aggregate(params, axes, theta, beta,
-                                  comm_dtype=ctx.comm_dtype,
-                                  n_pods=ctx.n_pods)
+def worker_leaf_bytes(params: Dict, axes: Dict) -> int:
+    """Total bytes of the worker-stacked leaves — the collective payload the
+    auto-selector sizes the schedule against."""
+    leaves_ax, treedef = jax.tree_util.tree_flatten(
+        axes, is_leaf=agg._axes_is_leaf)
+    leaves_x = treedef.flatten_up_to(params)
+    return sum(x.size * jnp.dtype(x.dtype).itemsize
+               for x, ax in zip(leaves_x, leaves_ax)
+               if agg.is_worker_leaf(ax))
 
 
-@register_backend("shard_map", needs_mesh=True)
-def _shard_map(params, axes, theta, beta, ctx):
-    return smagg.weighted_aggregate_shard_map(params, axes, theta, beta,
-                                              ctx.mesh,
-                                              schedule="all_reduce")
+def _worker_dim(params: Dict, axes: Dict) -> Optional[int]:
+    """Worker count w from the first worker-stacked leaf (None if none)."""
+    leaves_ax, treedef = jax.tree_util.tree_flatten(
+        axes, is_leaf=agg._axes_is_leaf)
+    leaves_x = treedef.flatten_up_to(params)
+    for x, ax in zip(leaves_x, leaves_ax):
+        if agg.is_worker_leaf(ax):
+            return int(x.shape[0])
+    return None
 
 
-@register_backend("rs_ag", needs_mesh=True)
-def _rs_ag(params, axes, theta, beta, ctx):
-    return smagg.weighted_aggregate_shard_map(params, axes, theta, beta,
-                                              ctx.mesh, schedule="rs_ag",
-                                              comm_dtype=ctx.comm_dtype)
+def _spec_runnable(sched_name: str, mesh: Optional[Mesh], n_pods: int,
+                   w: Optional[int], require_mask: bool) -> bool:
+    """Can this schedule run in the caller's context? The auto-selector must
+    never hand back a spec that fails at trace time: mesh schedules need a
+    mesh whose worker shards divide w, hierarchical needs pods, and async
+    rounds need a masked (late-join) path."""
+    sched = _SCHEDULES[sched_name]
+    if require_mask and not getattr(sched, "supports_mask", True):
+        return False
+    if sched_name == "hierarchical" and (
+            n_pods < 2 or (w is not None and w % n_pods)):
+        return False
+    if sched.needs_mesh:
+        if mesh is None:
+            return False
+        if w is not None and w % smagg.mesh_worker_shards(mesh):
+            return False
+    return True
 
 
-@register_backend("pallas_wagg")
-def _pallas_wagg(params, axes, theta, beta, ctx):
-    from repro.kernels.wagg.ops import wagg_leaf   # lazy: kernels are optional
-    return agg.weighted_aggregate(params, axes, theta, beta,
-                                  leaf_fn=wagg_leaf)
+def select_auto_spec(params: Dict, axes: Dict,
+                     mesh: Optional[Mesh] = None,
+                     table_path: Optional[str] = None,
+                     n_pods: int = 1,
+                     require_mask: bool = False) -> str:
+    """``backend="auto"``: pick a ``schedule:codec`` spec for this tree.
+
+    Prefers recorded measurements (``benchmarks/kernel_bench.py:
+    run_backend_matrix`` -> ``AUTO_BENCH_PATH``): among non-overlap rows
+    whose (payload bytes, mesh size) point is nearest in log-space to this
+    tree's, take the fastest spec that can RUN here (``_spec_runnable``:
+    mesh schedules need a mesh whose worker shards divide w,
+    ``hierarchical`` needs ``n_pods >= 2``, and ``require_mask=True`` — the
+    Alg. 4 rounds — excludes schedules without a late-join path). Falls
+    back to a size heuristic: small trees are latency-bound (one fused f32
+    all-reduce); large trees are bandwidth-bound (halve the ring bytes; on
+    a real mesh, expose the rs_ag phases for overlap). Selection is static
+    per shapes, so a jitted round resolves it once at trace time.
+    """
+    table_path = AUTO_BENCH_PATH if table_path is None else table_path
+    total = worker_leaf_bytes(params, axes)
+    w = _worker_dim(params, axes)
+    n_dev = mesh.size if mesh is not None else 1
+    records = _load_auto_table(table_path)
+    if records:
+        cands = []
+        for r in records:
+            spec, us = r.get("spec"), r.get("us_per_call")
+            if not spec or us is None or r.get("overlap"):
+                continue
+            try:
+                sched_name, _ = resolve_spec(spec)
+            except KeyError:
+                continue
+            if not _spec_runnable(sched_name, mesh, n_pods, w, require_mask):
+                continue
+            dist = (abs(math.log(max(r.get("total_bytes", 1), 1))
+                        - math.log(max(total, 1)))
+                    + abs(math.log(max(r.get("mesh_devices", 1), 1))
+                          - math.log(max(n_dev, 1))))
+            if dist > AUTO_MAX_LOG_DIST:
+                # a measurement ~20x away in (bytes x mesh) says nothing
+                # about this workload; prefer the heuristic over
+                # extrapolating a single far-off point.
+                continue
+            cands.append((dist, float(us), spec))
+        if cands:
+            nearest = min(c[0] for c in cands)
+            return min((c for c in cands if c[0] <= nearest + 1e-9),
+                       key=lambda c: c[1])[2]
+    if total < (1 << 22):
+        return "einsum:f32"
+    if mesh is not None and mesh.size > 1 \
+            and _spec_runnable("rs_ag", mesh, n_pods, w, require_mask):
+        return "rs_ag:bf16"
+    return "einsum:bf16"
 
 
 __all__ = [
-    "AggregationContext", "AggregatorBackend", "DEFAULT_CONTEXT",
+    "AggregationContext", "AggregationSchedule", "AggregatorBackend",
+    "ComposedBackend", "DEFAULT_CONTEXT", "AUTO_BENCH_PATH",
     "aggregate_from_config", "aggregate_with", "available_backends",
-    "backend_name_from_config", "context_from_config", "get_backend",
-    "register_backend",
+    "available_codecs", "available_schedules", "available_specs",
+    "backend_name_from_config", "canonical_spec", "context_from_config",
+    "get_backend", "get_codec", "register_backend", "register_codec",
+    "register_schedule", "resolve_spec", "select_auto_spec",
+    "worker_leaf_bytes",
 ]

@@ -1,0 +1,243 @@
+"""Payload codecs — the *encoding* axis of the two-axis aggregation API.
+
+The Eq. 10 aggregate ``m = sum_j theta_j x_j`` is one computation, but the
+bytes that ride the worker-axis collective are a free choice. A
+``PayloadCodec`` owns exactly that choice, per worker-stacked leaf:
+
+    payload, aux = codec.encode(x, ctx)      # what rides the wire
+    m_hat        = <schedule reduces theta-weighted payload>
+    m            = codec.decode_reduced(m_hat, aux)   # back to f32
+
+The *schedule* (``core/backends.py``) decides where the collectives go; the
+codec decides what they carry. ``WASGDConfig.backend = "schedule:codec"``
+composes the two (e.g. ``"rs_ag:int8"``, ``"hierarchical:bf16"``).
+
+Registered codecs
+=================
+
+``f32``    Identity payload. The reference the parity grid compares against.
+``bf16``   bfloat16 payload: the weighted reduce runs in bf16, halving ring
+           bytes. This is what ``ctx.comm_dtype="bfloat16"`` used to select;
+           specs without an explicit codec still derive it from there.
+``int8``   Symmetric per-leaf int8 quantization (scale = max|x|/127, riding
+           in ``aux``), decoded after the reduce — the old ``quantized``
+           backend, now composable with any schedule (the pod-local hop of
+           ``hierarchical:int8`` carries int8, the cross-pod hop f32).
+``int4``   int4-range stochastic rounding (scale = max|x|/7, unbiased
+           ``floor(x/scale + u)`` with u ~ U[0,1)). ~8x fewer operand bytes;
+           noise is zero-mean so the Eq. 10 contraction averages it away.
+
+Error contract
+==============
+
+``codec.error_bound(x, theta, beta)`` returns a per-element bound on
+``|out - out_f32|`` for one Eq. 10 application — the documented tolerance
+the composition-grid test (``tests/test_composition_grid.py``) holds every
+``schedule:codec`` pair to:
+
+* ``f32``  — float noise only.
+* ``bf16`` — operand + accumulation rounding, linear-in-w worst case.
+* ``int8`` — deterministic rounding: per-element quantization error is at
+  most ``scale/2``, so the aggregate errs by at most ``beta * scale/2``.
+* ``int4`` — stochastic rounding: per-element error strictly below one step
+  ``scale``, so the aggregate errs by less than ``beta * scale``.
+
+Quantizing codecs (``int8``/``int4``) mark ``quantizing=True``: schedules
+that cast a locally-reduced *partial* onto the wire (``rs_ag``) encode the
+operand instead and let the partial ride in ``reduce_dtype`` — partial sums
+of integer payloads are fractional, so re-quantizing them per-hop would
+compound error silently.
+
+Adding a codec
+==============
+
+    from repro.core.codecs import register_codec
+
+    @register_codec
+    class MyCodec:
+        name = "fp8ish"
+        ...
+
+It becomes selectable in every ``"schedule:fp8ish"`` spec and is picked up
+by the composition-grid parity test automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class PayloadCodec(Protocol):
+    """Encoding of the worker-axis collective payload for one leaf."""
+
+    name: str
+    wire_dtype: Any          # dtype of the encoded payload on the wire
+    reduce_dtype: Any        # dtype the theta-weighted reduce runs in
+    quantizing: bool         # True: encode/decode are not a plain dtype cast
+
+    def encode(self, x: jax.Array, ctx=None) -> Tuple[jax.Array, Any]:
+        """leaf -> (payload, aux). ``aux`` carries decode state (scales)."""
+        ...
+
+    def decode_reduced(self, m: jax.Array, aux) -> jax.Array:
+        """Reduced payload -> f32 aggregate m."""
+        ...
+
+    def error_bound(self, x: jax.Array, theta: jax.Array, beta) -> jax.Array:
+        """Per-element bound on |out - out_f32| for one Eq. 10 step."""
+        ...
+
+
+class _DtypeCodec:
+    """Pure dtype-cast codec (f32 / bf16): payload = x.astype(dtype)."""
+
+    quantizing = False
+
+    def __init__(self, name: str, dtype):
+        self.name = name
+        self.wire_dtype = dtype
+        self.reduce_dtype = dtype
+
+    def encode(self, x, ctx=None):
+        return x.astype(self.wire_dtype), None
+
+    def decode_reduced(self, m, aux):
+        return m.astype(jnp.float32)
+
+    def error_bound(self, x, theta, beta):
+        if self.wire_dtype == jnp.float32:
+            return jnp.float32(1e-5)
+        # operand rounding (2^-9 relative each) + bf16 accumulation over the
+        # worker axis: linear-in-w worst case, plus float noise.
+        w = theta.shape[0]
+        return (beta * (w + 4) * 2.0 ** -8
+                * jnp.max(jnp.abs(x)).astype(jnp.float32) + 1e-5)
+
+    def __repr__(self):
+        return f"PayloadCodec({self.name!r})"
+
+
+class _Int8Codec:
+    """Symmetric per-leaf int8: q = round(x/scale), scale = max|x|/127."""
+
+    name = "int8"
+    wire_dtype = jnp.int8
+    reduce_dtype = jnp.float32
+    quantizing = True
+
+    def encode(self, x, ctx=None):
+        scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        return q.astype(jnp.int8), scale
+
+    def decode_reduced(self, m, aux):
+        return m.astype(jnp.float32) * aux
+
+    def error_bound(self, x, theta, beta):
+        scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+        # deterministic rounding: per-element error <= scale/2; the aggregate
+        # is a theta-convex combination, so the bound survives the reduce.
+        return (beta * scale / 2).astype(jnp.float32) + 1e-5
+
+    def __repr__(self):
+        return f"PayloadCodec({self.name!r})"
+
+
+class _Int4StochasticCodec:
+    """int4-range payload with unbiased stochastic rounding.
+
+    q = clip(floor(x/scale + u), -7, 7) with u ~ U[0,1) — E[q] = x/scale, so
+    quantization noise is zero-mean and the theta-weighted aggregate averages
+    it away instead of accumulating bias round over round. The uniform draw
+    comes from ``ctx.key`` when the caller threads one; either way the leaf
+    CONTENT is mixed into the key (an xor-fold of the payload bits), so the
+    noise pattern changes whenever the parameters do — fresh pseudo-noise
+    every training round without any key plumbing through the jitted round,
+    and distinct noise for same-shaped leaves. Encoding is deterministic per
+    (key, leaf value), which is what the parity tests want.
+    """
+
+    name = "int4"
+    wire_dtype = jnp.int8            # int4-valued, carried in an int8 array
+    reduce_dtype = jnp.float32
+    quantizing = True
+
+    def encode(self, x, ctx=None):
+        scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 7.0
+        key = getattr(ctx, "key", None) if ctx is not None else None
+        if key is None:
+            key = jax.random.key(0x144)
+        # mix the payload bits into the key: the draw decorrelates round
+        # over round as the parameters change (a frozen key would repeat
+        # the identical noise pattern every round, turning the zero-mean
+        # error into correlated drift) and differs across same-shaped
+        # leaves.
+        bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32),
+                                            jnp.uint32)
+        seed = jax.lax.reduce(bits.ravel(), jnp.uint32(0),
+                              jax.lax.bitwise_xor, (0,))
+        key = jax.random.fold_in(jax.random.fold_in(key, x.size), seed)
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        q = jnp.clip(jnp.floor(x.astype(jnp.float32) / scale + u), -7, 7)
+        return q.astype(jnp.int8), scale
+
+    def decode_reduced(self, m, aux):
+        return m.astype(jnp.float32) * aux
+
+    def error_bound(self, x, theta, beta):
+        scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 7.0
+        # stochastic rounding: |q*scale - x| < scale strictly (one step).
+        return (beta * scale).astype(jnp.float32) + 1e-5
+
+    def __repr__(self):
+        return f"PayloadCodec({self.name!r})"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_CODECS: Dict[str, PayloadCodec] = {}
+
+
+def register_codec(codec: PayloadCodec, *, overwrite: bool = False):
+    """Register a codec instance (or class — it is instantiated) by name."""
+    obj = codec() if isinstance(codec, type) else codec
+    if obj.name in _CODECS and not overwrite:
+        raise ValueError(f"payload codec {obj.name!r} already registered; "
+                         f"pass overwrite=True to replace")
+    _CODECS[obj.name] = obj
+    return codec
+
+
+def get_codec(name: str) -> PayloadCodec:
+    if name not in _CODECS:
+        raise KeyError(f"unknown payload codec {name!r}; "
+                       f"known: {sorted(_CODECS)}")
+    return _CODECS[name]
+
+
+def available_codecs() -> Tuple[str, ...]:
+    return tuple(sorted(_CODECS))
+
+
+def codec_for_dtype(dtype) -> PayloadCodec:
+    """ctx.comm_dtype -> codec, for specs that leave the codec axis open
+    (the legacy aliases: ``einsum``/``hierarchical``/``rs_ag`` keep honoring
+    ``WASGDConfig.comm_dtype`` exactly as before)."""
+    if jnp.dtype(dtype) == jnp.dtype(jnp.bfloat16):
+        return get_codec("bf16")
+    return get_codec("f32")
+
+
+register_codec(_DtypeCodec("f32", jnp.float32))
+register_codec(_DtypeCodec("bf16", jnp.bfloat16))
+register_codec(_Int8Codec())
+register_codec(_Int4StochasticCodec())
+
+
+__all__ = ["PayloadCodec", "available_codecs", "codec_for_dtype",
+           "get_codec", "register_codec"]

@@ -34,11 +34,13 @@ def communicate(params: Dict, axes: Dict, h: jax.Array, wcfg: WASGDConfig,
     subsumed by SPMD: ``h`` is already globally consistent (tiny all-gather)
     and the weighted sum lowers to one all-reduce over the worker axis.
 
-    The aggregation backend comes from ``wcfg.backend`` (or is derived from
+    The aggregation spec comes from ``wcfg.backend`` — a two-axis
+    ``"schedule:codec"`` composition, a legacy alias, or ``"auto"``
+    (measurement-driven selection per parameter tree) — or is composed from
     the legacy ``quantize_comm``/``hierarchical``/``sharded_aggregate``
-    booleans), with ``comm_dtype``/``n_pods``/``mesh`` riding in the backend
-    context — every config knob reaches the computation. ``leaf_fn`` remains
-    as a legacy escape hatch that bypasses the registry.
+    booleans, with ``comm_dtype``/``n_pods``/``mesh`` riding in the backend
+    context (core/backends.py) — every config knob reaches the computation.
+    ``leaf_fn`` remains as a legacy escape hatch that bypasses the registry.
     """
     theta = compute_theta(h, wcfg.strategy, wcfg.a_tilde)
     new_params = backends.aggregate_from_config(wcfg, params, axes, theta,

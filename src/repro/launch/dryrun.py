@@ -164,6 +164,11 @@ def main():
     ap.add_argument("--sharded-ce", action="store_true")
     ap.add_argument("--windowed-qblock", action="store_true")
     ap.add_argument("--comm-dtype", default="float32")
+    ap.add_argument("--backend", default="",
+                    help="aggregation spec '<schedule>:<codec>' (e.g. "
+                         "'rs_ag:int8'), a legacy alias, or 'auto'; empty "
+                         "composes it from the legacy boolean flags "
+                         "(core/backends.py)")
     ap.add_argument("--expert-sharding", default=None,
                     choices=["ep_data", "worker"])
     ap.add_argument("--dp-workers", action="store_true",
@@ -191,7 +196,7 @@ def main():
 
     from repro.configs.base import WASGDConfig
     tcfg = TrainConfig(wasgd=WASGDConfig(
-        tau=args.tau, comm_dtype=args.comm_dtype,
+        tau=args.tau, comm_dtype=args.comm_dtype, backend=args.backend,
         hierarchical=args.hierarchical, n_pods=2 if args.hierarchical else 1,
         async_mode=args.async_mode))
     cfg_overrides = {}

@@ -40,26 +40,40 @@ LossFn = Callable[[Dict, Dict], Tuple[jax.Array, Dict]]
 # Communication rules
 # ---------------------------------------------------------------------------
 
-def wasgd_rule(wcfg: WASGDConfig, leaf_fn=None, mesh=None):
-    """Eq. 10 communication rule, routed through the aggregation backend
-    registry (core/backends.py). The backend comes from ``wcfg.backend`` or
-    is derived from the legacy boolean knobs; ``comm_dtype``/``n_pods``/
+def wasgd_rule(wcfg: WASGDConfig, leaf_fn=None, mesh=None, overlap=None):
+    """Eq. 10 communication rule, routed through the two-axis aggregation
+    API (core/backends.py). The ``schedule:codec`` spec comes from
+    ``wcfg.backend`` (``"auto"`` resolves per parameter tree at trace time)
+    or is composed from the legacy boolean knobs; ``comm_dtype``/``n_pods``/
     ``mesh`` ride in the backend context. ``leaf_fn`` is the legacy escape
-    hatch that bypasses the registry."""
+    hatch that bypasses the registry.
+
+    ``overlap`` is an optional nullary compute thunk: its ops are placed
+    between the schedule's collective phases (for ``rs_ag``, between the
+    reduce-scatter and the all-gather) so independent work — the next
+    round's first forward, metric reductions — can hide the second
+    collective. Its result rides out in ``metrics["overlap"]`` and never
+    feeds the aggregate, so params are identical with or without it."""
     if leaf_fn is None:
         # fail fast at build time, not at the first jitted step: unknown
-        # backend names, missing meshes, and a degenerate n_pods are all
-        # config errors.
+        # backend names/specs, missing meshes, and a degenerate n_pods are
+        # all config errors. "auto" is the one name resolved per tree.
         name = backends.backend_name_from_config(wcfg)
-        backend = backends.get_backend(name)
-        if getattr(backend, "needs_mesh", False) and mesh is None:
-            raise ValueError(
-                f"aggregation backend {backend.name!r} needs a mesh; pass "
-                f"mesh= through Trainer/build_train_step/wasgd_rule")
-        if name == "hierarchical" and wcfg.n_pods < 2:
-            raise ValueError(
-                "'hierarchical' aggregation backend needs "
-                f"WASGDConfig.n_pods >= 2 (got {wcfg.n_pods})")
+        if name != "auto":
+            backend = backends.get_backend(name)
+            if getattr(backend, "needs_mesh", False) and mesh is None:
+                raise ValueError(
+                    f"aggregation backend {backend.name!r} needs a mesh; "
+                    f"pass mesh= through Trainer/build_train_step/"
+                    f"wasgd_rule")
+            try:
+                sched = backends.resolve_spec(name)[0]
+            except KeyError:
+                sched = None                     # monolithic registration
+            if sched == "hierarchical" and wcfg.n_pods < 2:
+                raise ValueError(
+                    "'hierarchical' aggregation schedule needs "
+                    f"WASGDConfig.n_pods >= 2 (got {wcfg.n_pods})")
 
     def rule(params, axes, h, comm_state):
         if wcfg.a_schedule == "anneal":
@@ -72,42 +86,60 @@ def wasgd_rule(wcfg: WASGDConfig, leaf_fn=None, mesh=None):
         else:
             a_eff = wcfg.a_tilde
         theta = compute_theta(h, wcfg.strategy, a_eff)
-        new_params = backends.aggregate_from_config(
-            wcfg, params, axes, theta, mesh=mesh, leaf_fn=leaf_fn)
-        return new_params, comm_state, theta, {}
+        res = backends.aggregate_from_config(
+            wcfg, params, axes, theta, mesh=mesh, leaf_fn=leaf_fn,
+            overlap=overlap)
+        if overlap is not None:
+            new_params, overlap_out = res
+            return new_params, comm_state, theta, {"overlap": overlap_out}
+        return res, comm_state, theta, {}
     return rule
 
 
-def async_wasgd_rule(wcfg: WASGDConfig, mesh=None):
+def async_wasgd_rule(wcfg: WASGDConfig, mesh=None, overlap=None):
     """Alg. 4 (p-of-(p+b)) communication rule for ``async_mode="on_device"``.
 
     ``comm_state`` carries the round's ``(w,)`` boolean activity mask (the
     host loop injects a fresh mask per round — ``Trainer.run``'s
     ``straggler_schedule``); theta is masked so stragglers get exactly 0,
-    and the aggregation + straggler late-join run through the ``async_*``
-    backend family (core/async_device.py) as part of the jitted round.
+    and the aggregation + straggler late-join run through any composed
+    ``schedule:codec`` spec (every spec honors ``ctx.active``; see
+    core/async_device.py) as part of the jitted round. ``overlap`` is the
+    same compute-thunk hook as ``wasgd_rule``'s.
     """
     if wcfg.a_schedule == "anneal":
         raise ValueError(
             "async_mode='on_device' uses comm_state for the activity mask; "
             "the 'anneal' a_schedule (which also rides comm_state) is not "
             "supported in the same run")
-    name = async_device.async_backend_name(
-        backends.backend_name_from_config(wcfg))
-    backend = backends.get_backend(name)
-    if getattr(backend, "needs_mesh", False) and mesh is None:
-        raise ValueError(
-            f"aggregation backend {backend.name!r} needs a mesh; pass "
-            f"mesh= through Trainer/build_train_step/async_wasgd_rule")
+    name = backends.backend_name_from_config(wcfg)
+    if name != "auto":
+        name = async_device.async_backend_name(name)
+        backend = backends.get_backend(name)
+        if getattr(backend, "needs_mesh", False) and mesh is None:
+            raise ValueError(
+                f"aggregation backend {backend.name!r} needs a mesh; pass "
+                f"mesh= through Trainer/build_train_step/async_wasgd_rule")
 
     def rule(params, axes, h, comm_state):
         active = comm_state                        # (w,) bool mask
         theta = masked_compute_theta(h, active, wcfg.a_tilde, wcfg.strategy)
         ctx = dataclasses.replace(
             backends.context_from_config(wcfg, mesh), active=active)
-        new_params = backend.aggregate(params, axes, theta, wcfg.beta,
-                                       ctx=ctx)
+        nm = name
+        if nm == "auto":                           # resolve per tree, traced
+            nm = async_device.async_backend_name(
+                backends.select_auto_spec(params, axes, mesh,
+                                          n_pods=wcfg.n_pods,
+                                          require_mask=True))
         metrics = {"active": active.astype(jnp.float32)}
+        if overlap is not None:
+            new_params, overlap_out = backends.aggregate_with(
+                nm, params, axes, theta, wcfg.beta, ctx=ctx, overlap=overlap)
+            metrics["overlap"] = overlap_out
+        else:
+            new_params = backends.aggregate_with(nm, params, axes, theta,
+                                                 wcfg.beta, ctx=ctx)
         return new_params, comm_state, theta, metrics
     return rule
 
@@ -154,19 +186,24 @@ def no_comm_rule():
 def build_train_step(loss_fn: LossFn, optimizer: Optimizer, axes: Dict,
                      wcfg: WASGDConfig, n_workers: int,
                      rule: Optional[Callable] = None,
-                     donate: bool = True, mesh=None) -> Callable:
+                     donate: bool = True, mesh=None,
+                     overlap: Optional[Callable] = None) -> Callable:
     """Build ``train_step(state, batch) -> (state, metrics)`` for one round.
 
     ``mesh`` reaches the aggregation-backend context when the default
-    ``wasgd_rule`` is built here (required by the shard_map/rs_ag backends).
-    ``wcfg.async_mode="on_device"`` swaps in the Alg. 4 masked rule
-    (``async_wasgd_rule``): the round's straggler mask rides in
-    ``state.comm_state``.
+    ``wasgd_rule`` is built here (required by the shard_map/rs_ag
+    schedules). ``wcfg.async_mode="on_device"`` swaps in the Alg. 4 masked
+    rule (``async_wasgd_rule``): the round's straggler mask rides in
+    ``state.comm_state``. ``overlap`` (a nullary compute thunk returning an
+    array) is threaded into the default rule so its ops straddle the
+    schedule's collective phases — with ``rs_ag`` it lands between the
+    reduce-scatter and the all-gather; the result comes back in
+    ``metrics["overlap"]`` and the params are identical either way.
     """
     if rule is None:
-        rule = (async_wasgd_rule(wcfg, mesh=mesh)
+        rule = (async_wasgd_rule(wcfg, mesh=mesh, overlap=overlap)
                 if wcfg.async_mode == "on_device"
-                else wasgd_rule(wcfg, mesh=mesh))
+                else wasgd_rule(wcfg, mesh=mesh, overlap=overlap))
     in_axes_params = agg.worker_in_axes(axes)
     tau = wcfg.tau
     mask = record_mask(tau, wcfg.m_estimate, wcfg.record_chunks)

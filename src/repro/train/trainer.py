@@ -25,22 +25,26 @@ from repro.train.step import build_train_step, init_comm_state, wasgd_rule
 from repro.train import step as step_mod
 
 
-def _wasgd_rule_for(tcfg, mesh=None):
+def _wasgd_rule_for(tcfg, mesh=None, overlap=None):
     """Sync Eq. 10 rule, or the Alg. 4 masked rule when the config selects
-    ``async_mode="on_device"`` (the mask rides in ``state.comm_state``)."""
+    ``async_mode="on_device"`` (the mask rides in ``state.comm_state``).
+    ``overlap`` is the compute thunk threaded between the aggregation
+    schedule's collective phases (train/step.py)."""
     if tcfg.wasgd.async_mode == "on_device":
-        return step_mod.async_wasgd_rule(tcfg.wasgd, mesh=mesh)
-    return step_mod.wasgd_rule(tcfg.wasgd, mesh=mesh)
+        return step_mod.async_wasgd_rule(tcfg.wasgd, mesh=mesh,
+                                         overlap=overlap)
+    return step_mod.wasgd_rule(tcfg.wasgd, mesh=mesh, overlap=overlap)
 
 
 RULES = {
     "wasgd": _wasgd_rule_for,
     "wasgd+": _wasgd_rule_for,
-    "spsgd": lambda tcfg, mesh=None: step_mod.spsgd_rule(),
-    "easgd": lambda tcfg, mesh=None: step_mod.easgd_rule(alpha=0.9 / 16),
-    "omwu": lambda tcfg, mesh=None: step_mod.mwu_rule(),
-    "mmwu": lambda tcfg, mesh=None: step_mod.mwu_rule(),
-    "seq": lambda tcfg, mesh=None: step_mod.no_comm_rule(),
+    "spsgd": lambda tcfg, mesh=None, overlap=None: step_mod.spsgd_rule(),
+    "easgd": lambda tcfg, mesh=None, overlap=None:
+        step_mod.easgd_rule(alpha=0.9 / 16),
+    "omwu": lambda tcfg, mesh=None, overlap=None: step_mod.mwu_rule(),
+    "mmwu": lambda tcfg, mesh=None, overlap=None: step_mod.mwu_rule(),
+    "seq": lambda tcfg, mesh=None, overlap=None: step_mod.no_comm_rule(),
 }
 
 
@@ -48,10 +52,14 @@ class Trainer:
     def __init__(self, loss_fn, params: Dict, axes: Dict, tcfg: TrainConfig,
                  n_workers: int, rule: str = "wasgd",
                  replicate: bool = True, jit: bool = True,
-                 easgd_alpha: Optional[float] = None, mesh=None):
+                 easgd_alpha: Optional[float] = None, mesh=None,
+                 overlap=None):
         """``mesh`` feeds the aggregation-backend context — required when
-        ``tcfg.wasgd`` selects a backend that places explicit collectives
-        (``shard_map``/``rs_ag``, incl. legacy ``sharded_aggregate=True``)."""
+        ``tcfg.wasgd`` selects a schedule that places explicit collectives
+        (``shard_map``/``rs_ag``, incl. legacy ``sharded_aggregate=True``).
+        ``overlap`` (nullary compute thunk returning an array) rides between
+        the schedule's collective phases; its per-round result lands in
+        ``history[r]["overlap"]``."""
         self.tcfg = tcfg
         self.n_workers = n_workers
         self.rule_name = rule
@@ -71,7 +79,7 @@ class Trainer:
         if rule == "easgd" and easgd_alpha is not None:
             rule_fn = step_mod.easgd_rule(easgd_alpha)
         else:
-            rule_fn = RULES[rule](tcfg, mesh=mesh)
+            rule_fn = RULES[rule](tcfg, mesh=mesh, overlap=overlap)
         self._step = build_train_step(loss_fn, self.optimizer, axes,
                                       tcfg.wasgd, n_workers, rule=rule_fn)
         if jit:

@@ -87,8 +87,15 @@ def test_async_backend_name_mapping():
     assert async_backend_name("rs_ag") == "async_rs_ag"
     for name in ASYNC_BACKENDS:                  # idempotent on async names
         assert async_backend_name(name) == name
+    # under the two-axis API every composed spec is mask-capable, so the
+    # async regime composes with the payload axis —
+    assert async_backend_name("quantized") == "einsum:int8"
+    assert async_backend_name("hierarchical:int8") == "hierarchical:int8"
+    # — except the fused pallas kernel, which has no masked/late-join path.
     with pytest.raises(ValueError, match="no async"):
-        async_backend_name("quantized")
+        async_backend_name("pallas_wagg")
+    with pytest.raises(ValueError, match="no async"):
+        async_backend_name("does_not_exist")
 
 
 def test_async_mesh_backends_raise_without_mesh():

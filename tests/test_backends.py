@@ -96,13 +96,56 @@ def test_aggregate_from_config_matches_explicit_backend():
 
 @pytest.mark.parametrize("cfg,expected", [
     (WASGDConfig(), "einsum"),
-    (WASGDConfig(quantize_comm=True), "quantized"),
+    (WASGDConfig(quantize_comm=True), "einsum:int8"),
     (WASGDConfig(hierarchical=True, n_pods=2), "hierarchical"),
     (WASGDConfig(sharded_aggregate=True), "rs_ag"),
     (WASGDConfig(backend="pallas_wagg", quantize_comm=True), "pallas_wagg"),
+    # legacy booleans COMPOSE now instead of shadowing each other
+    (WASGDConfig(quantize_comm=True, sharded_aggregate=True), "rs_ag:int8"),
+    (WASGDConfig(quantize_comm=True, hierarchical=True, n_pods=2),
+     "hierarchical:int8"),
 ])
 def test_backend_name_from_config(cfg, expected):
     assert B.backend_name_from_config(cfg) == expected
+
+
+def test_backend_name_from_config_degenerate_pods_raises():
+    """hierarchical=True with n_pods=1 used to fall through to the flat
+    einsum path without a word — it must fail loud now."""
+    with pytest.raises(ValueError, match="n_pods"):
+        B.backend_name_from_config(WASGDConfig(hierarchical=True))
+
+
+def test_backend_name_from_config_conflicting_schedules_warn():
+    wcfg = WASGDConfig(hierarchical=True, n_pods=2, sharded_aggregate=True)
+    with pytest.warns(UserWarning, match="two different schedules"):
+        assert B.backend_name_from_config(wcfg) == "hierarchical"
+
+
+def test_resolve_spec_and_aliases():
+    assert B.resolve_spec("quantized") == ("einsum", "int8")
+    assert B.resolve_spec("rs_ag:int8") == ("rs_ag", "int8")
+    assert B.resolve_spec("hierarchical") == ("hierarchical", None)
+    assert B.canonical_spec("quantized") == "einsum:int8"
+    assert B.canonical_spec("async_rs_ag") == "rs_ag"
+    with pytest.raises(KeyError, match="unknown aggregation schedule"):
+        B.resolve_spec("nope:int8")
+    with pytest.raises(KeyError, match="unknown payload codec"):
+        B.resolve_spec("einsum:fp7")
+
+
+def test_quantized_alias_matches_composed_spec():
+    params, axes, theta = _fixture()
+    alias = B.aggregate_with("quantized", params, axes, theta, BETA)
+    spec = B.aggregate_with("einsum:int8", params, axes, theta, BETA)
+    np.testing.assert_array_equal(np.asarray(alias["head"]),
+                                  np.asarray(spec["head"]))
+
+
+def test_pallas_wagg_rejects_non_f32_codec():
+    params, axes, theta = _fixture()
+    with pytest.raises(ValueError, match="composes only with codecs"):
+        B.aggregate_with("pallas_wagg:int8", params, axes, theta, BETA)
 
 
 # ---------------------------------------------------------------------------

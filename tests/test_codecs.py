@@ -1,0 +1,138 @@
+"""Payload codecs (core/codecs.py): registry mechanics, round-trip error
+bounds (int8 deterministic, int4 stochastic rounding), and unbiasedness of
+the stochastic rounding."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import codecs as C
+
+
+def _leaf(seed=0, shape=(4, 257)):
+    return jax.random.normal(jax.random.key(seed), shape, jnp.float32)
+
+
+def test_expected_codecs_registered():
+    assert set(C.available_codecs()) >= {"f32", "bf16", "int8", "int4"}
+
+
+def test_get_codec_unknown_raises():
+    with pytest.raises(KeyError, match="unknown payload codec"):
+        C.get_codec("fp7")
+
+
+def test_register_codec_duplicate_raises():
+    class Dup:
+        name = "f32"
+    with pytest.raises(ValueError, match="already registered"):
+        C.register_codec(Dup())
+
+
+def test_codec_for_dtype():
+    assert C.codec_for_dtype(jnp.float32).name == "f32"
+    assert C.codec_for_dtype(jnp.bfloat16).name == "bf16"
+    assert C.codec_for_dtype("float32").name == "f32"
+
+
+def test_f32_codec_is_identity():
+    x = _leaf()
+    codec = C.get_codec("f32")
+    payload, aux = codec.encode(x)
+    np.testing.assert_array_equal(np.asarray(payload), np.asarray(x))
+    assert aux is None
+
+
+def test_int8_round_trip_bound():
+    """Deterministic symmetric quantization: per-element round-trip error is
+    at most scale/2 = max|x| / 254."""
+    x = _leaf(1)
+    codec = C.get_codec("int8")
+    payload, scale = codec.encode(x)
+    assert payload.dtype == jnp.int8
+    rt = payload.astype(jnp.float32) * scale
+    step = float(jnp.abs(x).max()) / 127.0
+    assert float(jnp.abs(rt - x).max()) <= step / 2 + 1e-6
+    np.testing.assert_allclose(float(scale), step, rtol=1e-6)
+
+
+def test_int4_round_trip_bound():
+    """Stochastic rounding stays strictly within one quantization step
+    (scale = max|x|/7), for any key."""
+    x = _leaf(2)
+    codec = C.get_codec("int4")
+    step = float(jnp.abs(x).max()) / 7.0
+    for seed in range(4):
+        class Ctx:
+            key = jax.random.key(seed)
+        payload, scale = codec.encode(x, Ctx())
+        assert payload.dtype == jnp.int8
+        q = np.asarray(payload)
+        assert q.min() >= -7 and q.max() <= 7
+        rt = q.astype(np.float32) * float(scale)
+        assert np.abs(rt - np.asarray(x)).max() < step + 1e-6
+
+
+def test_int4_encode_deterministic_without_key():
+    x = _leaf(3)
+    codec = C.get_codec("int4")
+    p1, _ = codec.encode(x)
+    p2, _ = codec.encode(x)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_int4_noise_decorrelates_with_leaf_content():
+    """The draw is keyed on the payload bits: as the parameters change round
+    over round the noise pattern must change too (a frozen pattern would
+    turn the zero-mean error into correlated drift), and two same-shaped
+    leaves with different values must not share noise."""
+    codec = C.get_codec("int4")
+    x1 = _leaf(6, shape=(4, 64))
+    x2 = x1 + 0.01 * _leaf(7, shape=(4, 64))
+    q1, s1 = codec.encode(x1)
+    q2, s2 = codec.encode(x2)
+    # residual-vs-grid position of the noise: if the uniform draws were the
+    # same, q*scale - x would be (near-)identical; require them to differ
+    # in a nontrivial fraction of elements
+    r1 = np.asarray(q1, np.float32) * float(s1) - np.asarray(x1)
+    r2 = np.asarray(q2, np.float32) * float(s2) - np.asarray(x2)
+    assert np.abs(r1 - r2).max() > float(s1) / 4
+
+
+def test_int4_stochastic_rounding_is_unbiased():
+    """E[floor(x/scale + u)] = x/scale: averaging the round-trip over many
+    independent keys must converge to x (the bias of deterministic int4
+    rounding would not)."""
+    x = _leaf(4, shape=(2, 64))
+    codec = C.get_codec("int4")
+    n_draws = 512
+    acc = np.zeros(x.shape, np.float64)
+
+    class Ctx:
+        key = None
+
+    for seed in range(n_draws):
+        Ctx.key = jax.random.key(seed)
+        payload, scale = codec.encode(x, Ctx())
+        acc += np.asarray(payload, np.float64) * float(scale)
+    mean = acc / n_draws
+    step = float(jnp.abs(x).max()) / 7.0
+    # u ~ U[0,1): per-draw variance <= step^2/4; 6-sigma statistical margin
+    tol = 6 * (step / 2) / np.sqrt(n_draws)
+    assert np.abs(mean - np.asarray(x)).max() < tol
+
+
+@pytest.mark.parametrize("name", ["f32", "bf16", "int8", "int4"])
+def test_error_bound_holds_for_einsum_aggregate(name):
+    """The documented per-codec bound must cover one Eq. 10 application —
+    the same contract the composition-grid test holds every schedule to."""
+    from repro.core import backends as B
+    w, beta = 4, 0.9
+    x = _leaf(5, shape=(w, 6, 5))
+    params, axes = {"w": x}, {"w": ("worker", None, None)}
+    theta = jax.nn.softmax(jnp.arange(w, dtype=jnp.float32))
+    codec = C.get_codec(name)
+    ref = B.aggregate_with("einsum:f32", params, axes, theta, beta)["w"]
+    out = B.aggregate_with(f"einsum:{name}", params, axes, theta, beta)["w"]
+    err = float(jnp.abs(out - ref).max())
+    assert err <= float(codec.error_bound(x, theta, beta)), (name, err)

@@ -1,0 +1,362 @@
+"""The two-axis composition grid: every registered ``schedule x codec`` pair
+(sync AND under an Alg. 4 straggler mask) must match the ``einsum:f32``
+reference within the codec's documented ``error_bound``; ``rs_ag`` with the
+``overlap=`` hook engaged must produce leaf-for-leaf IDENTICAL params to the
+non-overlapped path; and ``backend="auto"`` must resolve to a runnable spec
+from recorded measurements or the size heuristic.
+
+Adapts to however many host devices exist (1 under plain tier-1; the CI
+"backends or async or composition or codecs" job forces 8, which gives the
+mesh schedules real collectives and w/p > 1 local copies)."""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs.base import WASGDConfig
+from repro.core import backends as B
+from repro.core import communicate
+from repro.core.codecs import get_codec
+from repro.core.weights import masked_compute_theta
+from repro.train.step import async_wasgd_rule, wasgd_rule
+
+BETA = 0.9
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()), ("data",))
+
+
+def _w():
+    return 4 * len(jax.devices())
+
+
+def _fixture(seed=0):
+    w = _w()
+    k = jax.random.key(seed)
+    # "head" is 33-wide: odd on purpose, to exercise the rs_ag padding path.
+    params = {"blk": {"w": jax.random.normal(k, (w, 6, 5))},
+              "head": jax.random.normal(jax.random.fold_in(k, 1), (w, 33)),
+              "experts": {"up": jnp.ones((3, 2))}}
+    axes = {"blk": {"w": ("worker", None, None)},
+            "head": ("worker", None),
+            "experts": {"up": ("experts", None)}}
+    theta = jax.nn.softmax(jax.random.normal(jax.random.fold_in(k, 2), (w,)))
+    return params, axes, theta
+
+
+def _assert_within_bound(out, ref, params, axes, theta, codec_name,
+                         beta=BETA, ctx_label=""):
+    codec = get_codec(codec_name)
+    for key_ in (("blk", "w"), ("head",)):
+        x = params[key_[0]][key_[1]] if len(key_) == 2 else params[key_[0]]
+        o = out[key_[0]][key_[1]] if len(key_) == 2 else out[key_[0]]
+        r = ref[key_[0]][key_[1]] if len(key_) == 2 else ref[key_[0]]
+        tol = float(codec.error_bound(x, theta, beta))
+        err = float(jnp.abs(o.astype(jnp.float32)
+                            - r.astype(jnp.float32)).max())
+        assert err <= tol, (ctx_label, key_, err, tol)
+    # non-worker leaves pass through untouched for every composition
+    np.testing.assert_array_equal(np.asarray(out["experts"]["up"]),
+                                  np.asarray(params["experts"]["up"]))
+
+
+def test_grid_covers_required_specs():
+    specs = set(B.available_specs())
+    for sched in ("einsum", "hierarchical", "rs_ag", "shard_map"):
+        for codec in ("f32", "bf16", "int8", "int4"):
+            assert f"{sched}:{codec}" in specs
+    assert "pallas_wagg:f32" in specs
+
+
+@pytest.mark.parametrize("spec", B.available_specs())
+def test_sync_composition_grid(spec):
+    """Every schedule x codec vs the einsum:f32 reference, within the
+    codec's documented error bound."""
+    params, axes, theta = _fixture()
+    ctx = B.AggregationContext(mesh=_mesh(), n_pods=2)
+    ref = B.aggregate_with("einsum:f32", params, axes, theta, BETA, ctx=ctx)
+    out = B.aggregate_with(spec, params, axes, theta, BETA, ctx=ctx)
+    _assert_within_bound(out, ref, params, axes, theta, spec.split(":")[1],
+                         ctx_label=spec)
+
+
+@pytest.mark.parametrize("spec", [s for s in B.available_specs()
+                                  if not s.startswith("pallas_wagg")])
+def test_async_composition_grid(spec):
+    """The same grid under an Alg. 4 straggler mask: stragglers carry
+    theta == 0 and late-join the aggregate, for EVERY composed spec (the
+    async family is not a separate backend set anymore). The late-join rows
+    adopt m wholesale, so the bound is taken at beta=1."""
+    params, axes, _ = _fixture()
+    w = _w()
+    rng = np.random.default_rng(0)
+    active_np = np.ones(w, bool)
+    active_np[rng.choice(w, max(1, w // 4), replace=False)] = False
+    active = jnp.asarray(active_np)
+    h = jnp.asarray(rng.uniform(0.1, 2.0, w).astype(np.float32))
+    theta = masked_compute_theta(h, active, 1.0, "boltzmann")
+    ctx = B.AggregationContext(mesh=_mesh(), n_pods=2, active=active)
+    ref = B.aggregate_with("einsum:f32", params, axes, theta, BETA, ctx=ctx)
+    out = B.aggregate_with(spec, params, axes, theta, BETA, ctx=ctx)
+    _assert_within_bound(out, ref, params, axes, theta, spec.split(":")[1],
+                         beta=1.0, ctx_label=f"async:{spec}")
+
+
+def test_pallas_wagg_rejects_active_mask():
+    params, axes, theta = _fixture()
+    ctx = B.AggregationContext(active=jnp.ones((_w(),), bool))
+    with pytest.raises(ValueError, match="no Alg. 4"):
+        B.aggregate_with("pallas_wagg", params, axes, theta, BETA, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# Overlap hook: identical params, thunk ops between the collective phases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["rs_ag:f32", "rs_ag:bf16", "rs_ag:int8",
+                                  "hierarchical:int8"])
+def test_overlap_params_identical(spec):
+    """The overlap thunk's ops straddle the reduce phases but never feed the
+    aggregate: params must be leaf-for-leaf IDENTICAL (bitwise), and the
+    thunk's result must come back."""
+    params, axes, theta = _fixture()
+    ctx = B.AggregationContext(mesh=_mesh(), n_pods=2)
+    probe = jnp.arange(8.0)
+
+    base = B.aggregate_with(spec, params, axes, theta, BETA, ctx=ctx)
+    out, ov = B.aggregate_with(spec, params, axes, theta, BETA, ctx=ctx,
+                               overlap=lambda: (probe * 2.0).sum())
+    assert float(ov) == float((probe * 2.0).sum())
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                         np.asarray(b))),
+                        base, out)
+    assert all(jax.tree.leaves(same)), spec
+
+
+def test_overlap_identical_under_jit():
+    params, axes, theta = _fixture()
+    ctx = B.AggregationContext(mesh=_mesh(), n_pods=2)
+
+    @jax.jit
+    def with_overlap(p, t):
+        out, ov = B.aggregate_with("rs_ag", p, axes, t, BETA, ctx=ctx,
+                                   overlap=lambda: t.max())
+        return out, ov
+
+    @jax.jit
+    def without(p, t):
+        return B.aggregate_with("rs_ag", p, axes, t, BETA, ctx=ctx)
+
+    out, ov = with_overlap(params, theta)
+    base = without(params, theta)
+    assert float(ov) == float(theta.max())
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                         np.asarray(b))),
+                        base, out)
+    assert all(jax.tree.leaves(same))
+
+
+def test_wasgd_rule_threads_overlap():
+    """train/step.py: the rule built with overlap= returns identical params
+    and surfaces the thunk result in metrics["overlap"]."""
+    params, axes, theta = _fixture()
+    h = jnp.asarray(np.linspace(0.1, 2.0, _w()).astype(np.float32))
+    wcfg = WASGDConfig(backend="rs_ag")
+    mesh = _mesh()
+    plain = wasgd_rule(wcfg, mesh=mesh)
+    hooked = wasgd_rule(wcfg, mesh=mesh, overlap=lambda: jnp.float32(7.0))
+    p0, _, _, m0 = jax.jit(lambda p, e: plain(p, axes, e, ()))(params, h)
+    p1, _, _, m1 = jax.jit(lambda p, e: hooked(p, axes, e, ()))(params, h)
+    assert m0 == {} and float(m1["overlap"]) == 7.0
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                         np.asarray(b))),
+                        p0, p1)
+    assert all(jax.tree.leaves(same))
+
+
+def test_async_wasgd_rule_threads_overlap():
+    params, axes, _ = _fixture()
+    w = _w()
+    h = jnp.asarray(np.linspace(0.1, 2.0, w).astype(np.float32))
+    active = jnp.asarray(np.arange(w) % 4 != 1)
+    wcfg = WASGDConfig(backend="rs_ag", async_mode="on_device")
+    mesh = _mesh()
+    plain = async_wasgd_rule(wcfg, mesh=mesh)
+    hooked = async_wasgd_rule(wcfg, mesh=mesh,
+                              overlap=lambda: jnp.float32(11.0))
+    p0, _, _, m0 = jax.jit(lambda p, e, a: plain(p, axes, e, a))(
+        params, h, active)
+    p1, _, _, m1 = jax.jit(lambda p, e, a: hooked(p, axes, e, a))(
+        params, h, active)
+    assert float(m1["overlap"]) == 11.0
+    np.testing.assert_array_equal(np.asarray(m0["active"]),
+                                  np.asarray(m1["active"]))
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                         np.asarray(b))),
+                        p0, p1)
+    assert all(jax.tree.leaves(same))
+
+
+# ---------------------------------------------------------------------------
+# Legacy boolean composition end-to-end + backend="auto"
+# ---------------------------------------------------------------------------
+
+def test_legacy_booleans_compose_through_communicate():
+    """quantize_comm + sharded_aggregate used to silently drop the mesh
+    schedule; it must now run rs_ag:int8 — int8-close to the reference and
+    equal to the explicit spec."""
+    params, axes, _ = _fixture()
+    h = jnp.asarray(np.linspace(0.1, 2.0, _w()).astype(np.float32))
+    wcfg = WASGDConfig(quantize_comm=True, sharded_aggregate=True)
+    out = communicate(params, axes, h, wcfg, mesh=_mesh())
+    explicit = communicate(params, axes, h,
+                           WASGDConfig(backend="rs_ag:int8"), mesh=_mesh())
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                         np.asarray(b))),
+                        out.params, explicit.params)
+    assert all(jax.tree.leaves(same))
+    ref = communicate(params, axes, h, WASGDConfig())
+    err = float(jnp.abs(out.params["head"] - ref.params["head"]).max())
+    assert 0 < err < float(get_codec("int8").error_bound(
+        params["head"], out.theta, BETA))
+
+
+def test_auto_heuristic_small_tree_is_einsum_f32():
+    params, axes, _ = _fixture()
+    assert B.select_auto_spec(params, axes, None,
+                              table_path="/nonexistent") == "einsum:f32"
+
+
+def test_auto_heuristic_large_tree():
+    big = {"w": jnp.zeros((4, 1 << 19), jnp.float32)}   # 8 MiB > threshold
+    axes = {"w": ("worker", None)}
+    assert B.select_auto_spec(big, axes, None,
+                              table_path="/nonexistent") == "einsum:bf16"
+    assert B.select_auto_spec(big, axes, _mesh(),
+                              table_path="/nonexistent") in (
+        "rs_ag:bf16", "einsum:bf16")   # rs_ag only on a real (>1 dev) mesh
+
+
+def test_auto_reads_bench_table(tmp_path):
+    """With a recorded BENCH_backend_matrix.json, auto picks the fastest
+    non-overlap spec at the nearest (bytes, mesh) point."""
+    params, axes, _ = _fixture()
+    nbytes = B.worker_leaf_bytes(params, axes)
+    table = {"bench": "backend_matrix", "records": [
+        {"spec": "hierarchical:int8", "us_per_call": 10.0, "overlap": False,
+         "total_bytes": nbytes, "mesh_devices": 1},
+        {"spec": "einsum:f32", "us_per_call": 50.0, "overlap": False,
+         "total_bytes": nbytes, "mesh_devices": 1},
+        # overlap rows and far-away sizes must not win
+        {"spec": "einsum:bf16", "us_per_call": 1.0, "overlap": True,
+         "total_bytes": nbytes, "mesh_devices": 1},
+        {"spec": "rs_ag:f32", "us_per_call": 1.0, "overlap": False,
+         "total_bytes": nbytes * 10000, "mesh_devices": 1},
+    ]}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(table))
+    assert B.select_auto_spec(params, axes, None, table_path=str(path),
+                              n_pods=2) == "hierarchical:int8"
+    # mesh-needing specs are skipped when no mesh is available
+    table["records"][0]["spec"] = "rs_ag:bf16"
+    path.write_text(json.dumps(table))
+    assert B.select_auto_spec(params, axes, None, table_path=str(path),
+                              n_pods=2) == "einsum:f32"
+
+
+def test_auto_skips_hierarchical_without_pods(tmp_path):
+    """A recorded hierarchical winner must not be selected into a config
+    with n_pods=1 (it would fail the schedule's loud pod validation)."""
+    params, axes, _ = _fixture()
+    nbytes = B.worker_leaf_bytes(params, axes)
+    table = {"records": [
+        {"spec": "hierarchical:int8", "us_per_call": 1.0, "overlap": False,
+         "total_bytes": nbytes, "mesh_devices": 1},
+        {"spec": "einsum:int8", "us_per_call": 5.0, "overlap": False,
+         "total_bytes": nbytes, "mesh_devices": 1},
+    ]}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(table))
+    assert B.select_auto_spec(params, axes, None, table_path=str(path),
+                              n_pods=2) == "hierarchical:int8"
+    assert B.select_auto_spec(params, axes, None, table_path=str(path),
+                              n_pods=1) == "einsum:int8"
+
+
+def test_auto_ignores_far_off_measurements(tmp_path):
+    """A recorded point ~20x away in (bytes x mesh) must not override the
+    size heuristic — nearest-neighbor lookup has a distance cutoff."""
+    params, axes, _ = _fixture()
+    nbytes = B.worker_leaf_bytes(params, axes)
+    table = {"records": [
+        {"spec": "einsum:int4", "us_per_call": 1.0, "overlap": False,
+         "total_bytes": nbytes * 100000, "mesh_devices": 1},
+    ]}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(table))
+    # small tree, lone far-off row -> heuristic, not the recorded winner
+    assert B.select_auto_spec(params, axes, None,
+                              table_path=str(path)) == "einsum:f32"
+
+
+def test_auto_never_picks_maskless_schedule_for_async(tmp_path):
+    """A table where pallas_wagg wins must not crash the Alg. 4 rule:
+    require_mask=True excludes schedules without a late-join path."""
+    params, axes, _ = _fixture()
+    nbytes = B.worker_leaf_bytes(params, axes)
+    table = {"records": [
+        {"spec": "pallas_wagg:f32", "us_per_call": 1.0, "overlap": False,
+         "total_bytes": nbytes, "mesh_devices": 1},
+        {"spec": "einsum:f32", "us_per_call": 5.0, "overlap": False,
+         "total_bytes": nbytes, "mesh_devices": 1},
+    ]}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(table))
+    assert B.select_auto_spec(params, axes, None,
+                              table_path=str(path)) == "pallas_wagg:f32"
+    assert B.select_auto_spec(params, axes, None, table_path=str(path),
+                              require_mask=True) == "einsum:f32"
+
+
+def test_auto_skips_mesh_schedule_when_workers_dont_divide():
+    """4 workers on an 8-shard mesh cannot run a shard_map/rs_ag schedule;
+    the heuristic must fall back to the einsum family instead of handing
+    back a spec that fails at trace time."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device to make worker count non-divisible")
+    w = len(jax.devices()) // 2          # never divides the full mesh
+    big = {"w": jnp.zeros((w, 1 << 21), jnp.float32)}    # > 4 MiB
+    axes = {"w": ("worker", None)}
+    spec = B.select_auto_spec(big, axes, _mesh(), table_path="/nonexistent")
+    assert spec == "einsum:bf16"
+
+
+def test_auto_backend_end_to_end_through_rule(monkeypatch):
+    params, axes, _ = _fixture()
+    h = jnp.asarray(np.linspace(0.1, 2.0, _w()).astype(np.float32))
+    # pin the heuristic path: the committed bench table's timings must not
+    # decide which spec this test exercises
+    monkeypatch.setattr(B, "AUTO_BENCH_PATH", "/nonexistent")
+    rule = wasgd_rule(WASGDConfig(backend="auto"))
+    new_params, _, theta, _ = jax.jit(
+        lambda p, e: rule(p, axes, e, ()))(params, h)
+    ref = B.aggregate_with("einsum:f32", params, axes, theta, BETA)
+    err = float(jnp.abs(new_params["head"] - ref["head"]).max())
+    assert err < 1e-5        # small tree resolves to einsum:f32
+
+
+def test_auto_backend_with_recorded_table_runs():
+    """With the repo's committed BENCH_backend_matrix.json (when present),
+    backend="auto" must still resolve to a runnable spec end-to-end."""
+    params, axes, _ = _fixture()
+    h = jnp.asarray(np.linspace(0.1, 2.0, _w()).astype(np.float32))
+    rule = wasgd_rule(WASGDConfig(backend="auto"))
+    new_params, _, theta, _ = rule(params, axes, h, ())
+    ref = B.aggregate_with("einsum:f32", params, axes, theta, BETA)
+    # whatever spec won, it stays within the loosest codec bound (int4)
+    tol = float(get_codec("int4").error_bound(params["head"], theta, 1.0))
+    assert float(jnp.abs(new_params["head"] - ref["head"]).max()) <= tol
