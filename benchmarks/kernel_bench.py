@@ -16,6 +16,12 @@ from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from repro.kernels.rmsnorm.rmsnorm import rmsnorm
 from repro.kernels.wagg import wagg, wagg_ref
 
+# Output artifacts anchored to the repo's results/ dir, not the process cwd
+# — the auto-selector (core/backends.py:AUTO_BENCH_PATH) resolves the same
+# absolute location, so a table recorded here is found from any cwd.
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results")
+
 
 def _time(fn, *args, n=20):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
@@ -67,6 +73,7 @@ def run(fast: bool = False):
     run_backends(fast=fast)
     run_backend_matrix(fast=fast)
     run_async(fast=fast)
+    run_pipeline(fast=fast)
 
 
 def run_backends(fast: bool = False):
@@ -95,8 +102,7 @@ def run_backends(fast: bool = False):
              f"shape={p}x{n}")
 
 
-def run_backend_matrix(fast: bool = False,
-                       out_path: str = "results/BENCH_backend_matrix.json"):
+def run_backend_matrix(fast: bool = False, out_path: str = None):
     """The two-axis sweep: every ``schedule x codec`` spec (plus the
     ``overlap=`` variant of multi-phase schedules) over a shared
     worker-stacked leaf, emitted as ``BENCH_backend_matrix.json`` — the
@@ -107,6 +113,8 @@ def run_backend_matrix(fast: bool = False,
     from jax.sharding import Mesh
     from repro.core import backends as B
 
+    if out_path is None:
+        out_path = os.path.join(RESULTS_DIR, "BENCH_backend_matrix.json")
     p, n = 8, (1 << 18 if fast else 1 << 20)
     x = jax.random.normal(jax.random.key(3), (p, n), jnp.float32)
     theta = jax.nn.softmax(jnp.arange(p, dtype=jnp.float32))
@@ -156,7 +164,7 @@ def run_backend_matrix(fast: bool = False,
     return records
 
 
-def run_async(fast: bool = False, out_path: str = "results/BENCH_async.json"):
+def run_async(fast: bool = False, out_path: str = None):
     """Alg. 4 round sweep: host-side event simulation vs the on-device
     ``async_*`` backends, same injected straggler schedule. Emits CSV rows
     AND writes ``BENCH_async.json`` so the async perf trajectory is recorded
@@ -171,6 +179,9 @@ def run_async(fast: bool = False, out_path: str = "results/BENCH_async.json"):
     from jax.sharding import Mesh
     from repro.core import backends as B
     from repro.core.async_device import run_parallel_sgd_on_device
+
+    if out_path is None:
+        out_path = os.path.join(RESULTS_DIR, "BENCH_async.json")
     from repro.core.async_sim import (StepTimeModel, make_schedule,
                                       run_parallel_sgd)
     from repro.data import make_classification
@@ -250,6 +261,115 @@ def run_async(fast: bool = False, out_path: str = "results/BENCH_async.json"):
     emit("async_bench_json", 0.0, out_path)
 
 
+def run_pipeline(fast: bool = False, out_path: str = None):
+    """Pipelined vs unpipelined WASGD round walltime per aggregation spec.
+
+    Builds the same smoke MLP round three ways per spec — unpipelined
+    (``pipeline=None``), ``"parity"`` and ``"speculative"`` — drives each
+    jitted step over steady-state rounds, and records the per-round
+    walltime delta in ``BENCH_pipeline.json``. Host-device collectives are
+    trivial, so single-host numbers are indicative only; the record shape
+    (spec x pipeline mode x us_per_round) is the artifact, and on a real
+    mesh the pipelined rows are where the seam hides the all-gather.
+    """
+    import functools
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.configs.base import WASGDConfig
+    from repro.core import replicate_workers
+    from repro.data import make_classification
+    from repro.data.pipeline import first_microbatch
+    from repro.models import cnn
+    from repro.models.param import build
+    from repro.optim import make_optimizer
+    from repro.train.state import init_state
+    from repro.train.step import build_train_step, init_comm_state
+
+    if out_path is None:
+        out_path = os.path.join(RESULTS_DIR, "BENCH_pipeline.json")
+    p, tau, bl = (2, 2, 4) if fast else (4, 4, 8)
+    rounds = 3 if fast else 10
+    d_hidden = 32 if fast else 128
+    X, y = make_classification(0, 2048, d=16, n_classes=4)
+    params0, axes0 = build(functools.partial(
+        cnn.mlp_init, d_in=16, d_hidden=d_hidden, n_classes=4),
+        jax.random.key(0))
+    params0, axes = replicate_workers(params0, axes0, p)
+
+    def loss_fn(pp, bb):
+        return cnn.classification_loss(cnn.mlp_apply(pp, bb["x"]),
+                                       bb["y"]), {}
+
+    devs = jax.devices()
+    # shard the p worker copies over p real devices when the host has them
+    # (the CI multidevice smoke forces 8) — collapsing to 1 device would
+    # bench trivial collectives and record a meaningless pipelined delta.
+    if len(devs) >= p:
+        mesh_devs = devs[:p]
+    elif p % len(devs) == 0:
+        mesh_devs = devs
+    else:
+        mesh_devs = devs[:1]
+    mesh = Mesh(np.array(mesh_devs), ("data",))
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(X), size=tau * p * bl)
+    batch = {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+    next_first = jax.device_put(first_microbatch(
+        {"x": X[idx], "y": y[idx]}, p, tau))
+    total_bytes = sum(int(np.asarray(v).nbytes) for v in batch.values())
+
+    records = []
+    for spec in ("einsum:f32", "rs_ag:f32", "rs_ag:bf16"):
+        for mode in (None, "parity", "speculative"):
+            wcfg = WASGDConfig(tau=tau, backend=spec)
+            opt = make_optimizer("sgd", 0.05, 0.0, 0.0)
+            step = build_train_step(loss_fn, opt, axes, wcfg, p,
+                                    mesh=mesh, pipeline=mode)
+            state = init_state(params0, opt.init(params0), p,
+                               init_comm_state("wasgd", params0, axes, p,
+                                               wcfg=wcfg))
+            if mode is None:
+                jstep = jax.jit(step)
+
+                def drive(state):
+                    for _ in range(rounds):
+                        state, metrics = jstep(state, batch)
+                    return state, metrics
+            else:
+                primer = jax.jit(step.primer)
+                jstep = jax.jit(step)
+                carry0 = primer(state.params, batch)
+
+                def drive(state, carry0=carry0, jstep=jstep):
+                    carry = carry0
+                    for _ in range(rounds):
+                        state, metrics, carry = jstep(state, batch,
+                                                      next_first, carry)
+                    return state, metrics
+
+            out_state, metrics = drive(state)          # warmup + compile
+            jax.block_until_ready(out_state.params)
+            t0 = time.time()
+            out_state, metrics = drive(state)
+            jax.block_until_ready(out_state.params)
+            us = (time.time() - t0) / rounds * 1e6
+            label = mode or "off"
+            records.append({
+                "spec": spec, "pipeline": label,
+                "us_per_round": round(us, 1), "rounds": rounds,
+                "workers": p, "tau": tau, "b_local": bl,
+                "batch_bytes": total_bytes,
+                "mesh_devices": len(mesh_devs),
+                "host_devices": len(devs)})
+            emit(f"pipeline_{spec}_{label}", us, f"p{p} tau{tau}")
+
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"bench": "pipeline", "records": records}, f, indent=2)
+    emit("pipeline_bench_json", 0.0, out_path)
+    return records
+
+
 def run_extra(fast: bool = False):
     """fused_ce + ssd_chunk microbenchmarks (appended kernels)."""
     import jax
@@ -282,3 +402,24 @@ def run_extra(fast: bool = False):
          f"b{b}xnc{nc}xL{L}xnh{nh}")
     emit("kernel_ssd_chunk_ref_xla", _time(f_r, xs, dt, a, B, C, n=3),
          f"b{b}xnc{nc}xL{L}xnh{nh}")
+
+
+def main():
+    """CLI: ``python -m benchmarks.kernel_bench [sweep] [--fast]`` — run one
+    named sweep (``run_pipeline``, ``run_backend_matrix``, ...) or the whole
+    module (the CI smoke uses ``run_pipeline --fast`` to keep
+    ``BENCH_pipeline.json`` generatable)."""
+    import argparse
+    sweeps = {"run": run, "run_backends": run_backends,
+              "run_backend_matrix": run_backend_matrix,
+              "run_async": run_async, "run_pipeline": run_pipeline,
+              "run_extra": run_extra}
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("sweep", nargs="?", default="run", choices=sorted(sweeps))
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    sweeps[args.sweep](fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -86,6 +86,31 @@ def async_backend_name(name: str) -> str:
     return backends.canonical_spec(name)
 
 
+def validate_active_rounds(active: np.ndarray, rounds: Optional[int] = None):
+    """Reject straggler schedules containing an all-False round.
+
+    ``masked_compute_theta`` documents that an all-False mask yields NaNs
+    (the softmax of an all ``-inf`` row) rather than silently inventing
+    weights, and the driver's per-round loss (the mean over the active
+    workers) is the mean of an empty slice — NaN again. Both poison the
+    entire downstream loss history, so a schedule with an empty round is a
+    config error caught loudly HERE, at injection time, not a numerical
+    curiosity discovered rounds later. Used by
+    ``run_parallel_sgd_on_device`` and ``Trainer.run(straggler_schedule=)``.
+    """
+    active = np.asarray(active, bool)
+    if rounds is not None:
+        active = active[:rounds]
+    empty = np.flatnonzero(~active.any(axis=-1))
+    if empty.size:
+        raise ValueError(
+            f"straggler schedule has no active worker in round(s) "
+            f"{empty.tolist()}: an all-straggler round has no Alg. 4 "
+            f"aggregate to late-join (masked theta would be NaN and the "
+            f"round loss the mean of an empty slice); every round needs "
+            f">= 1 active worker")
+
+
 # ---------------------------------------------------------------------------
 # Masked Eq. 10 + late-join over a tree (compat entry point)
 # ---------------------------------------------------------------------------
@@ -193,6 +218,7 @@ def run_parallel_sgd_on_device(grad_fn: Callable, params0: Dict, axes: Dict,
         schedule = make_schedule(time_model, rounds=rounds, tau=tau,
                                  n_workers=n_workers, backups=backups,
                                  synchronous=synchronous)
+    validate_active_rounds(schedule.active, rounds=rounds)
     w = n_workers + backups
     params = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), params0)

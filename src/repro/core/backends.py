@@ -26,8 +26,11 @@ multi-phase schedule exposes a seam BETWEEN its collectives. The optional
 ``overlap=`` hook (a nullary compute thunk) runs exactly there: for
 ``rs_ag`` the thunk's ops land between the reduce-scatter and the
 all-gather, so independent compute (the next round's first forward, metric
-reductions, ...) can hide the second collective. The thunk never feeds the
-aggregate, so the produced params are identical with or without it.
+reductions, ...) can hide the second collective. The thunk may return any
+pytree — the pipelined train step (train/step.py) stages the next round's
+first microbatch plus its speculative Judge forward through the seam as a
+dict. The thunk never feeds the aggregate, so the produced params are
+identical with or without it.
 
 ``einsum``        The reference. pjit tensordot over the worker axis; XLA
                   derives the theta-weighted all-reduce. 1 reduce phase.
@@ -488,8 +491,9 @@ class ComposedBackend:
     next one, and fires the ``overlap=`` thunk after phase 0 — between the
     two collectives of a 2-phase schedule (rs_ag: after every leaf's
     reduce-scatter, before any all-gather). With ``overlap=`` the return
-    value is ``(params, overlap_result)``; the thunk cannot feed the
-    aggregate, so params are identical either way.
+    value is ``(params, overlap_result)`` — the thunk's result may be any
+    pytree (staged batches ride the seam, not just scalars); the thunk
+    cannot feed the aggregate, so params are identical either way.
     """
 
     def __init__(self, schedule: AggregationSchedule,
@@ -687,7 +691,24 @@ def context_from_config(wcfg, mesh: Optional[Mesh] = None
 # backend="auto": measurement-driven spec selection
 # ---------------------------------------------------------------------------
 
-AUTO_BENCH_PATH = os.path.join("results", "BENCH_backend_matrix.json")
+# Anchored to the repo root (this file lives at src/repro/core/), NOT the
+# process cwd: the old cwd-relative "results/..." default made
+# backend="auto" silently fall back to the size heuristic whenever the
+# process wasn't launched from the repo root. The REPRO_BENCH_TABLE env var
+# overrides the default per process (read at selection time, so deployments
+# can point at a table recorded on the target hardware).
+REPO_ROOT = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), os.pardir, os.pardir, os.pardir))
+AUTO_BENCH_PATH = os.path.join(REPO_ROOT, "results",
+                               "BENCH_backend_matrix.json")
+BENCH_TABLE_ENV = "REPRO_BENCH_TABLE"
+
+
+def _default_table_path() -> str:
+    return os.environ.get(BENCH_TABLE_ENV) or AUTO_BENCH_PATH
+
+
+_MISSING_TABLE_WARNED = set()
 
 # Nearest-measurement cutoff (log-space distance over bytes x mesh-size).
 # ~3.0 = a ~20x mismatch in the (bytes * devices) product: beyond that a
@@ -764,7 +785,9 @@ def select_auto_spec(params: Dict, axes: Dict,
     """``backend="auto"``: pick a ``schedule:codec`` spec for this tree.
 
     Prefers recorded measurements (``benchmarks/kernel_bench.py:
-    run_backend_matrix`` -> ``AUTO_BENCH_PATH``): among non-overlap rows
+    run_backend_matrix`` -> ``AUTO_BENCH_PATH``, anchored to the repo root;
+    override per process with the ``REPRO_BENCH_TABLE`` env var; a missing
+    table warns once per path): among non-overlap rows
     whose (payload bytes, mesh size) point is nearest in log-space to this
     tree's, take the fastest spec that can RUN here (``_spec_runnable``:
     mesh schedules need a mesh whose worker shards divide w,
@@ -775,11 +798,19 @@ def select_auto_spec(params: Dict, axes: Dict,
     a real mesh, expose the rs_ag phases for overlap). Selection is static
     per shapes, so a jitted round resolves it once at trace time.
     """
-    table_path = AUTO_BENCH_PATH if table_path is None else table_path
+    table_path = _default_table_path() if table_path is None else table_path
     total = worker_leaf_bytes(params, axes)
     w = _worker_dim(params, axes)
     n_dev = mesh.size if mesh is not None else 1
     records = _load_auto_table(table_path)
+    if records is None and table_path not in _MISSING_TABLE_WARNED:
+        _MISSING_TABLE_WARNED.add(table_path)
+        warnings.warn(
+            f"backend='auto': no bench table at {table_path}; falling back "
+            f"to the size heuristic. Record one with "
+            f"benchmarks/kernel_bench.py run_backend_matrix, or point the "
+            f"{BENCH_TABLE_ENV} env var at an existing table.",
+            stacklevel=2)
     if records:
         cands = []
         for r in records:
@@ -817,6 +848,7 @@ def select_auto_spec(params: Dict, axes: Dict,
 __all__ = [
     "AggregationContext", "AggregationSchedule", "AggregatorBackend",
     "ComposedBackend", "DEFAULT_CONTEXT", "AUTO_BENCH_PATH",
+    "BENCH_TABLE_ENV", "REPO_ROOT",
     "aggregate_from_config", "aggregate_with", "available_backends",
     "available_codecs", "available_schedules", "available_specs",
     "backend_name_from_config", "canonical_spec", "context_from_config",

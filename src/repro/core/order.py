@@ -9,6 +9,7 @@ bookkeeping is host-side pipeline state.
 """
 from __future__ import annotations
 
+import threading
 from typing import Tuple
 
 import numpy as np
@@ -40,21 +41,29 @@ class OrderState:
         self.scores = np.zeros((n_segments, n_workers), np.float64)
         self.keep_score = float(keep_score)
         self._rng = rng
+        # record_scores runs on the trainer thread while end_segment may run
+        # on the round prefetcher's staging thread (data/pipeline.py) — the
+        # lock keeps a decision's read-keep-mask-then-reset atomic against a
+        # concurrent score accumulation.
+        self._lock = threading.Lock()
 
     def order_for(self, segment: int, worker: int, length: int) -> np.ndarray:
         return permutation(self.seeds[segment, worker], length)
 
     def record_scores(self, segment: int, scores: np.ndarray):
         """Accumulate communication-time Judge scores for this segment."""
-        self.scores[segment] += np.asarray(scores)
+        with self._lock:
+            self.scores[segment] += np.asarray(scores)
 
     def end_segment(self, segment: int):
         """Alg. 2 OrderGen: keep seeds whose total score <= keep_score."""
-        keep = self.scores[segment] <= self.keep_score
-        n = (~keep).sum()
-        if n:
-            self.seeds[segment, ~keep] = self._rng.integers(0, 2**31 - 1, size=n)
-        self.scores[segment] = 0.0
+        with self._lock:
+            keep = self.scores[segment] <= self.keep_score
+            n = (~keep).sum()
+            if n:
+                self.seeds[segment, ~keep] = self._rng.integers(
+                    0, 2**31 - 1, size=n)
+            self.scores[segment] = 0.0
         return keep
 
 

@@ -1,4 +1,5 @@
-from repro.data.pipeline import OrderedDataset
+from repro.data.pipeline import (OrderedDataset, RoundPrefetcher,
+                                 first_microbatch)
 from repro.data.synthetic import (
     lm_batch,
     make_classification,
@@ -6,5 +7,5 @@ from repro.data.synthetic import (
     make_tokens,
 )
 
-__all__ = ["OrderedDataset", "lm_batch", "make_classification",
-           "make_images", "make_tokens"]
+__all__ = ["OrderedDataset", "RoundPrefetcher", "first_microbatch",
+           "lm_batch", "make_classification", "make_images", "make_tokens"]

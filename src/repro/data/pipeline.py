@@ -1,14 +1,23 @@
-"""Order-managed data pipeline (paper Alg. 1 lines 4-7 + OrderGen).
+"""Order-managed data pipeline (paper Alg. 1 lines 4-7 + OrderGen) and the
+round prefetcher that feeds the pipelined train step.
 
 Each worker traverses the full dataset in its own permutation order; the
 epoch is split into ``n_segments`` order segments whose seeds survive or get
 reshuffled based on Judge scores (core/order.OrderState). Batches are
 assembled worker-major with leading dim ``tau * p * b_local`` to match the
 train-step reshape contract.
+
+``RoundPrefetcher`` stages rounds on a background thread (double-buffered by
+default) so the host-side index/gather/reshape work for round ``r+1`` — and
+the slice of its first worker-major microbatch, which the pipelined train
+step feeds into the aggregation schedule's overlap seam — happens while
+round ``r`` runs on the devices.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+import queue
+import threading
+from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -18,7 +27,8 @@ from repro.core.order import OrderState
 class OrderedDataset:
     def __init__(self, data: Dict[str, np.ndarray], n_workers: int, tau: int,
                  b_local: int, n_segments: int = 1,
-                 order_state: Optional[OrderState] = None, seed: int = 0):
+                 order_state: Optional[OrderState] = None, seed: int = 0,
+                 boundary_delay: int = 0):
         self.data = data
         self.n = len(next(iter(data.values())))
         self.p = n_workers
@@ -30,20 +40,45 @@ class OrderedDataset:
         self.seg_len = self.n // n_segments
         self.rounds_per_segment = max(1, self.seg_len // self.per_round)
         self.rounds_per_epoch = self.rounds_per_segment * n_segments
+        # Rounds to wait after a segment boundary before committing that
+        # segment's OrderGen keep-or-reshuffle decision. 0 = decide the
+        # moment the traversal leaves the segment (Alg. 2 semantics). Under
+        # the round prefetcher the generator runs ahead of training by up to
+        # ``RoundPrefetcher.run_ahead()`` rounds (depth + 2, NOT just the
+        # depth), so a delay >= that keeps every round's Judge scores
+        # recorded before the decision fires. A deferred decision never
+        # fires mid-traversal of its own segment (see ``batches``).
+        self.boundary_delay = int(boundary_delay)
 
     def segment_of_round(self, r: int) -> int:
         return (r // self.rounds_per_segment) % self.n_segments
 
     def batches(self) -> Iterator[Dict[str, np.ndarray]]:
-        """Infinite iterator over rounds; reshuffles per OrderGen at segment
-        boundaries."""
+        """Infinite iterator over rounds; at EACH segment boundary the
+        segment just left is ended (``OrderState.end_segment``), so
+        OrderGen's keep-or-reshuffle decision (paper Alg. 2) fires per
+        segment mid-epoch — not once per epoch for all segments at once,
+        which left every segment's decision reading stale epoch-end scores.
+
+        A ``boundary_delay``-deferred decision whose due round lands inside
+        a NEW traversal of the same segment (n_segments=1, or a delay >=
+        rounds_per_segment) is held until that traversal's next boundary:
+        ``order_for`` re-derives the permutation from the seed every round,
+        so reshuffling mid-traversal would switch the sample order under an
+        epoch in progress (some samples seen twice, others skipped).
+        """
         r = 0
+        pending = []                     # (fire_at_round, segment) FIFO
         while True:
             seg = self.segment_of_round(r)
             within = r % self.rounds_per_segment
-            if within == 0 and r > 0 and seg == 0:
-                for s in range(self.n_segments):
-                    self.order.end_segment(s)
+            if within == 0 and r > 0:
+                pending.append((r + self.boundary_delay,
+                                self.segment_of_round(r - 1)))
+            while pending and pending[0][0] <= r:
+                if pending[0][1] == seg and within != 0:
+                    break                # never reshuffle mid-traversal
+                self.order.end_segment(pending.pop(0)[1])
             # per-worker sample indices for this round
             idx = np.empty((self.p, self.per_round), np.int64)
             for w in range(self.p):
@@ -58,3 +93,146 @@ class OrderedDataset:
             batch = {k: v[flat] for k, v in self.data.items()}
             yield batch
             r += 1
+
+
+# ---------------------------------------------------------------------------
+# Round prefetch: the host side of the pipelined train step
+# ---------------------------------------------------------------------------
+
+def first_microbatch(batch: Dict, n_workers: int, tau: int) -> Dict:
+    """Slice the first worker-major microbatch out of a round batch.
+
+    Every leaf has leading dim ``B = tau * p * b_local`` laid out
+    worker-major (the ``train/step.py`` reshape contract); the result has
+    leading dims ``(p, b_local)`` and is leaf-for-leaf the ``t = 0`` slice
+    the train step's ``reshape_batch`` produces — the pipelined round's
+    parity guarantee rests on this equality (tests/test_pipeline.py).
+    """
+    import jax
+
+    def f(x):
+        b = x.shape[0]
+        if b % (tau * n_workers):
+            raise ValueError(
+                f"batch dim {b} not divisible by tau*p = {tau}*{n_workers}")
+        bl = b // (tau * n_workers)
+        return np.asarray(x).reshape(n_workers, tau, bl, *x.shape[1:])[:, 0]
+
+    return jax.tree.map(f, batch)
+
+
+class _PrefetchError:
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+_END = object()
+
+
+class RoundPrefetcher:
+    """Double-buffered round staging for the pipelined train step.
+
+    Wraps a round-batch iterator and yields ``(batch_r, first_{r+1})``
+    tuples, where ``first_{r+1}`` is round ``r+1``'s first worker-major
+    microbatch (``first_microbatch``). A daemon thread pulls rounds ahead
+    (``depth`` staged rounds in flight), so the host-side index/gather/
+    reshape/transfer staging of the NEXT round overlaps the in-flight
+    device step instead of sitting on the critical path between rounds.
+
+    On a finite iterator the final tuple reuses the last round's own first
+    microbatch (there is no round ``r+1`` to stage); the pipelined step's
+    seam output for that round is simply never consumed.
+
+    NOTE: the upstream generator runs ahead of training by up to
+    ``run_ahead()`` = depth + 2 rounds (``depth`` staged items in the
+    queue, plus one blocked in the producer's ``put``, plus one held as the
+    consumer's pair lookahead), so generator side effects (OrderedDataset's
+    per-segment OrderGen decision) fire that much early; pass
+    ``OrderedDataset(boundary_delay=RoundPrefetcher.run_ahead(depth))`` to
+    re-align the decision with the recorded Judge scores.
+    """
+
+    DEFAULT_DEPTH = 2
+
+    @classmethod
+    def run_ahead(cls, depth: Optional[int] = None) -> int:
+        """Worst-case rounds the upstream generator leads training by."""
+        return (cls.DEFAULT_DEPTH if depth is None else depth) + 2
+
+    def __init__(self, batches: Iterator[Dict], n_workers: int, tau: int,
+                 depth: int = DEFAULT_DEPTH, to_device: bool = True):
+        self.n_workers = n_workers
+        self.tau = tau
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._stop = False
+        self._cur: Optional[Tuple] = None
+        self._done = False
+        self._to_device = to_device
+        self._batches = iter(batches)
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="round-prefetch")
+        self._thread.start()
+
+    def _stage(self, batch: Dict) -> Tuple[Dict, Dict]:
+        first = first_microbatch(batch, self.n_workers, self.tau)
+        if self._to_device:
+            import jax
+            batch = jax.device_put(batch)
+            first = jax.device_put(first)
+        return batch, first
+
+    def _put(self, item) -> bool:
+        while not self._stop:
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                pass
+        return False
+
+    def _worker(self):
+        try:
+            for batch in self._batches:
+                if self._stop or not self._put(self._stage(batch)):
+                    return
+            self._put(_END)
+        except BaseException as e:                 # propagate to the consumer
+            self._put(_PrefetchError(e))
+
+    def _get(self):
+        item = self._q.get()
+        if isinstance(item, _PrefetchError):
+            self._done = True
+            raise item.exc
+        return item
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Tuple[Dict, Dict]:
+        if self._done:
+            raise StopIteration
+        if self._cur is None:
+            head = self._get()
+            if head is _END:
+                self._done = True
+                raise StopIteration
+            self._cur = head
+        nxt = self._get()
+        batch, first = self._cur
+        if nxt is _END:
+            self._done = True
+            return batch, first                    # reuse own first microbatch
+        self._cur = nxt
+        return batch, nxt[1]
+
+    def close(self):
+        """Stop the staging thread and drain the buffer (safe to call
+        multiple times; the Trainer calls it when a pipelined run ends)."""
+        self._stop = True
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=1.0)

@@ -19,7 +19,7 @@ import numpy as np
 from repro.checkpoint import save
 from repro.configs import (TrainConfig, WASGDConfig, get_config,
                            get_smoke_config)
-from repro.data import OrderedDataset, make_tokens
+from repro.data import OrderedDataset, RoundPrefetcher, make_tokens
 from repro.models import init_params
 from repro.train import Trainer
 from repro.train.lm import make_lm_loss
@@ -43,6 +43,14 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--b-local", type=int, default=2)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--pipeline", default=None,
+                    choices=["parity", "speculative"],
+                    help="software-pipeline the round (train/step.py): "
+                         "prefetch round r+1 and feed its first microbatch "
+                         "into the aggregation schedule's phase-gap seam; "
+                         "'parity' is bitwise-identical to unpipelined, "
+                         "'speculative' also runs the next Judge forward on "
+                         "pre-aggregate params (wasgd/wasgd+ rules only)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -66,12 +74,13 @@ def main():
             size=(2048, cfg.n_media_tokens, cfg.d_model)).astype(np.float32)
 
     ds = OrderedDataset(data, args.workers, args.tau, args.b_local,
-                        n_segments=2)
+                        n_segments=2,
+                        boundary_delay=RoundPrefetcher.run_ahead()
+                        if args.pipeline else 0)
     params, axes = init_params(cfg, jax.random.key(0))
     trainer = Trainer(make_lm_loss(cfg), params, axes, tcfg, args.workers,
-                      rule=args.rule)
-    summary = trainer.run(ds.batches(), args.rounds, order_state=ds.order,
-                          segment_fn=ds.segment_of_round,
+                      rule=args.rule, pipeline=args.pipeline)
+    summary = trainer.run(ds, args.rounds,
                           log_every=max(1, args.rounds // 5))
     print(f"done: {summary}")
     if args.ckpt:

@@ -19,6 +19,7 @@ import numpy as np
 from repro.configs.base import TrainConfig, WASGDConfig
 from repro.core import replicate_workers
 from repro.core.order import OrderState
+from repro.data.pipeline import RoundPrefetcher
 from repro.optim import make_optimizer
 from repro.train.state import TrainState, init_state
 from repro.train.step import build_train_step, init_comm_state, wasgd_rule
@@ -53,16 +54,37 @@ class Trainer:
                  n_workers: int, rule: str = "wasgd",
                  replicate: bool = True, jit: bool = True,
                  easgd_alpha: Optional[float] = None, mesh=None,
-                 overlap=None):
+                 overlap=None, pipeline: Optional[str] = None):
         """``mesh`` feeds the aggregation-backend context — required when
         ``tcfg.wasgd`` selects a schedule that places explicit collectives
         (``shard_map``/``rs_ag``, incl. legacy ``sharded_aggregate=True``).
-        ``overlap`` (nullary compute thunk returning an array) rides between
-        the schedule's collective phases; its per-round result lands in
-        ``history[r]["overlap"]``."""
+        ``overlap`` (nullary compute thunk; may return any pytree) rides
+        between the schedule's collective phases; its per-round result lands
+        in ``history[r]["overlap"]``.
+
+        ``pipeline="parity" | "speculative"`` software-pipelines the round
+        (``train/step.py``): ``run`` wraps the batch iterator in a
+        double-buffered ``RoundPrefetcher`` so round ``r+1``'s host staging
+        and first worker-major microbatch ride the aggregation schedule's
+        phase-gap seam during round ``r``'s communication. ``"parity"`` is
+        bitwise-identical to the unpipelined trainer; ``"speculative"``
+        additionally runs the next round's Judge/energy forward on
+        pre-aggregate params (stale by one Eq. 10 step, measured per round
+        in ``history[r]["spec_dev"]`` / ``["spec_bound"]``). Only the
+        wasgd/wasgd+ rules thread the seam. NOTE: with an
+        ``OrderedDataset``, the prefetcher's generator runs up to
+        ``RoundPrefetcher.run_ahead()`` (= depth + 2, default 4) rounds
+        ahead, so pass ``boundary_delay=RoundPrefetcher.run_ahead()`` to
+        keep OrderGen's per-segment decision aligned with the recorded
+        Judge scores."""
         self.tcfg = tcfg
         self.n_workers = n_workers
         self.rule_name = rule
+        self.pipeline = pipeline
+        if pipeline is not None and rule not in ("wasgd", "wasgd+"):
+            raise ValueError(
+                f"pipeline={pipeline!r} threads the seam thunk through the "
+                f"wasgd/wasgd+ rules only (got rule={rule!r})")
         if replicate:
             params, axes = replicate_workers(
                 params, axes, n_workers,
@@ -81,9 +103,13 @@ class Trainer:
         else:
             rule_fn = RULES[rule](tcfg, mesh=mesh, overlap=overlap)
         self._step = build_train_step(loss_fn, self.optimizer, axes,
-                                      tcfg.wasgd, n_workers, rule=rule_fn)
+                                      tcfg.wasgd, n_workers, rule=rule_fn,
+                                      pipeline=pipeline)
+        self._primer = getattr(self._step, "primer", None)
         if jit:
             self._step = jax.jit(self._step, donate_argnums=(0,))
+            if self._primer is not None:
+                self._primer = jax.jit(self._primer)
         self.history: list = []
 
     def run(self, batches: Iterator[Dict], n_rounds: int,
@@ -93,11 +119,44 @@ class Trainer:
             checkpoint_every: int = 0,
             checkpoint_path: Optional[str] = None,
             straggler_schedule=None) -> Dict:
-        """``straggler_schedule`` (async_mode="on_device" only): a
+        """``batches`` is a round-batch iterator, or an ``OrderedDataset``
+        instance — passing the dataset itself lets a pipelined run VALIDATE
+        that its OrderGen decisions are deferred past the prefetcher's
+        run-ahead (``boundary_delay``), and defaults ``order_state`` /
+        ``segment_fn`` from the dataset.
+
+        ``straggler_schedule`` (async_mode="on_device" only): a
         ``StragglerSchedule`` or ``(rounds, w)`` bool array covering all
         ``n_rounds``; round ``r``'s activity mask is injected into
         ``state.comm_state`` before the step, so the jitted Alg. 4 round
         excludes that round's stragglers."""
+        from repro.data.pipeline import OrderedDataset
+        if isinstance(batches, OrderedDataset):
+            ds = batches
+            if self.pipeline is not None \
+                    and ds.boundary_delay < RoundPrefetcher.run_ahead():
+                raise ValueError(
+                    f"pipelined run: the prefetcher's generator runs up to "
+                    f"{RoundPrefetcher.run_ahead()} rounds ahead of score "
+                    f"recording, but this OrderedDataset commits OrderGen "
+                    f"decisions after boundary_delay={ds.boundary_delay} "
+                    f"rounds — its keep-or-reshuffle would read truncated "
+                    f"Judge scores; build it with boundary_delay="
+                    f"RoundPrefetcher.run_ahead()")
+            if order_state is None and segment_fn is None:
+                order_state, segment_fn = ds.order, ds.segment_of_round
+            batches = ds.batches()
+        elif self.pipeline is not None and order_state is not None:
+            import warnings
+            warnings.warn(
+                "pipelined run over a bare iterator with an order_state: "
+                "the Trainer cannot verify the generator defers its "
+                "OrderGen decisions past the prefetch run-ahead "
+                f"({RoundPrefetcher.run_ahead()} rounds); pass the "
+                "OrderedDataset itself (run(ds, ...)) or build it with "
+                "boundary_delay=RoundPrefetcher.run_ahead() to avoid "
+                "decisions that miss the final rounds' Judge scores",
+                stacklevel=2)
         active_rounds = None
         if straggler_schedule is not None:
             if self.tcfg.wasgd.async_mode != "on_device":
@@ -120,35 +179,57 @@ class Trainer:
                     f"but run() was asked for {n_rounds}; build the "
                     f"schedule with rounds={n_rounds} (silent reuse would "
                     f"correlate the exclusion statistics)")
+            from repro.core.async_device import validate_active_rounds
+            validate_active_rounds(active_rounds, rounds=n_rounds)
         t0 = time.time()
         mf = open(metrics_path, "a") if metrics_path else None
-        for r in range(n_rounds):
-            batch = next(batches)
-            if active_rounds is not None:
-                self.state = self.state._replace(
-                    comm_state=jnp.asarray(active_rounds[r]))
-            self.state, metrics = self._step(self.state, batch)
-            rec = {k: np.asarray(v) for k, v in metrics.items()}
-            rec["round"] = r
-            self.history.append(rec)
-            if order_state is not None:
-                seg = segment_fn(r) if segment_fn else 0
-                order_state.record_scores(seg, rec["scores"])
+        prefetch = None
+        if self.pipeline is not None and not isinstance(batches,
+                                                        RoundPrefetcher):
+            prefetch = RoundPrefetcher(batches, self.n_workers,
+                                       self.tcfg.wasgd.tau)
+            batches = prefetch
+        carry = None
+        try:
+            for r in range(n_rounds):
+                if self.pipeline is not None:
+                    batch, next_first = next(batches)
+                else:
+                    batch = next(batches)
+                if active_rounds is not None:
+                    self.state = self.state._replace(
+                        comm_state=jnp.asarray(active_rounds[r]))
+                if self.pipeline is not None:
+                    if carry is None:
+                        carry = self._primer(self.state.params, batch)
+                    self.state, metrics, carry = self._step(
+                        self.state, batch, next_first, carry)
+                else:
+                    self.state, metrics = self._step(self.state, batch)
+                rec = {k: np.asarray(v) for k, v in metrics.items()}
+                rec["round"] = r
+                self.history.append(rec)
+                if order_state is not None:
+                    seg = segment_fn(r) if segment_fn else 0
+                    order_state.record_scores(seg, rec["scores"])
+                if mf is not None:
+                    mf.write(json.dumps(
+                        {k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                         for k, v in rec.items()}) + "\n")
+                    mf.flush()
+                if checkpoint_every and checkpoint_path \
+                        and (r + 1) % checkpoint_every == 0:
+                    from repro.checkpoint import save
+                    save(os.path.join(checkpoint_path, f"round_{r+1}"),
+                         self.state.params, meta={"round": r + 1})
+                if log_every and (r + 1) % log_every == 0:
+                    print(f"round {r+1}/{n_rounds} loss={rec['loss']:.4f} "
+                          f"theta_entropy={rec['theta_entropy']:.3f}")
+        finally:
             if mf is not None:
-                mf.write(json.dumps(
-                    {k: (v.tolist() if isinstance(v, np.ndarray) else v)
-                     for k, v in rec.items()}) + "\n")
-                mf.flush()
-            if checkpoint_every and checkpoint_path \
-                    and (r + 1) % checkpoint_every == 0:
-                from repro.checkpoint import save
-                save(os.path.join(checkpoint_path, f"round_{r+1}"),
-                     self.state.params, meta={"round": r + 1})
-            if log_every and (r + 1) % log_every == 0:
-                print(f"round {r+1}/{n_rounds} loss={rec['loss']:.4f} "
-                      f"theta_entropy={rec['theta_entropy']:.3f}")
-        if mf is not None:
-            mf.close()
+                mf.close()
+            if prefetch is not None:
+                prefetch.close()
         return {"rounds": n_rounds, "wall": time.time() - t0,
                 "final_loss": float(self.history[-1]["loss"])}
 

@@ -25,7 +25,8 @@ from repro.core.async_device import (ASYNC_BACKENDS, async_backend_name,
                                      build_async_round,
                                      run_parallel_sgd_on_device,
                                      weighted_aggregate_async)
-from repro.core.async_sim import (StepTimeModel, make_schedule, masked_theta,
+from repro.core.async_sim import (StepTimeModel, StragglerSchedule,
+                                  make_schedule, masked_theta,
                                   run_parallel_sgd)
 from repro.core.weights import STRATEGIES, compute_theta, masked_compute_theta
 
@@ -512,3 +513,41 @@ def test_parity_grid_on_8_device_mesh():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "RESULT ok" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# All-straggler rounds: rejected loudly at schedule-injection time
+# ---------------------------------------------------------------------------
+
+def test_all_straggler_round_rejected_by_driver():
+    """Regression: an all-False round used to flow through to
+    ``losses_np[active].mean()`` — the mean of an empty slice — and quietly
+    poison ``AsyncResult.losses`` with NaN. The driver must reject the
+    schedule at injection time instead (masked_compute_theta's documented
+    NaN contract makes such a round meaningless on-device too)."""
+    from repro.core.async_device import validate_active_rounds
+
+    params, axes, _, grad_fn, batches = _setup()
+    w, rounds = 3, 4
+    active = np.ones((rounds, w), bool)
+    active[2] = False                                # one empty round
+    sched = StragglerSchedule(active=active,
+                              round_wall=np.ones(rounds))
+    with pytest.raises(ValueError, match="no active worker in round"):
+        run_parallel_sgd_on_device(
+            grad_fn, params, axes, batches(w, 4), n_workers=w, backups=0,
+            tau=2, rounds=rounds, lr=0.05, schedule=sched,
+            backend="async_einsum")
+    with pytest.raises(ValueError, match=r"round\(s\) \[2\]"):
+        validate_active_rounds(active)
+    # rounds beyond the driven range must not trip the check
+    validate_active_rounds(active, rounds=2)
+
+
+def test_trainer_rejects_all_straggler_round():
+    """Trainer.run(straggler_schedule=) is the other injection point."""
+    tr, batches = _trainer_setup(w=3, tau=2)
+    bad = np.ones((4, 3), bool)
+    bad[1] = False
+    with pytest.raises(ValueError, match="no active worker in round"):
+        tr.run(batches(), 4, straggler_schedule=bad)

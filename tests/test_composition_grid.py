@@ -360,3 +360,90 @@ def test_auto_backend_with_recorded_table_runs():
     # whatever spec won, it stays within the loosest codec bound (int4)
     tol = float(get_codec("int4").error_bound(params["head"], theta, 1.0))
     assert float(jnp.abs(new_params["head"] - ref["head"]).max()) <= tol
+
+
+def test_overlap_pytree_rides_seam():
+    """The seam thunk may return any pytree (the pipelined round stages
+    whole batches through it), and params stay bitwise-identical."""
+    params, axes, theta = _fixture()
+    ctx = B.AggregationContext(mesh=_mesh(), n_pods=2)
+    probe = {"first": {"x": jnp.arange(6.0).reshape(2, 3),
+                       "y": jnp.ones((4,), jnp.int32)},
+             "spec_losses": jnp.linspace(0.0, 1.0, 4)}
+    base = B.aggregate_with("rs_ag", params, axes, theta, BETA, ctx=ctx)
+    out, ov = B.aggregate_with("rs_ag", params, axes, theta, BETA, ctx=ctx,
+                               overlap=lambda: probe)
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                         np.asarray(b))),
+                        probe, ov)
+    assert all(jax.tree.leaves(same))
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                         np.asarray(b))),
+                        base, out)
+    assert all(jax.tree.leaves(same))
+
+
+def test_rule_accepts_call_time_overlap():
+    """wasgd_rule's built rule takes a per-call overlap= keyword (the
+    pipelined step threads a fresh seam closure every round); the call-time
+    thunk overrides the build-time one and params stay identical."""
+    params, axes, _ = _fixture()
+    h = jnp.asarray(np.linspace(0.1, 2.0, _w()).astype(np.float32))
+    rule = wasgd_rule(WASGDConfig(backend="rs_ag"), mesh=_mesh(),
+                      overlap=lambda: jnp.float32(1.0))
+    p0, _, _, m0 = jax.jit(lambda p, e: rule(p, axes, e, ()))(params, h)
+    p1, _, _, m1 = jax.jit(lambda p, e: rule(
+        p, axes, e, (), overlap=lambda: {"probe": e.max()}))(params, h)
+    assert float(m0["overlap"]) == 1.0
+    assert float(m1["overlap"]["probe"]) == float(h.max())
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                         np.asarray(b))),
+                        p0, p1)
+    assert all(jax.tree.leaves(same))
+
+
+# ---------------------------------------------------------------------------
+# backend="auto" table resolution (cwd-independent + env override + warn-once)
+# ---------------------------------------------------------------------------
+
+def test_auto_table_path_is_repo_anchored(tmp_path, monkeypatch):
+    """Regression: AUTO_BENCH_PATH was cwd-relative, so auto silently fell
+    back to the size heuristic unless the process was launched from the
+    repo root. It must be absolute, point into the repo's results/, and
+    resolve identically from any cwd."""
+    import os
+    assert os.path.isabs(B.AUTO_BENCH_PATH)
+    assert B.AUTO_BENCH_PATH.endswith(
+        os.path.join("results", "BENCH_backend_matrix.json"))
+    assert os.path.isdir(os.path.join(B.REPO_ROOT, "src"))
+    monkeypatch.chdir(tmp_path)                      # non-root cwd
+    monkeypatch.delenv(B.BENCH_TABLE_ENV, raising=False)
+    params, axes, _ = _fixture()
+    spec = B.select_auto_spec(params, axes, None)    # default table path
+    # with the committed table present this is a recorded winner; without
+    # it, the heuristic — either way a resolvable, runnable spec.
+    assert B.canonical_spec(spec)
+
+
+def test_auto_table_env_override_from_non_root_cwd(tmp_path, monkeypatch):
+    params, axes, _ = _fixture()
+    nbytes = B.worker_leaf_bytes(params, axes)
+    table = {"records": [
+        {"spec": "einsum:int8", "us_per_call": 1.0, "overlap": False,
+         "total_bytes": nbytes, "mesh_devices": 1}]}
+    p = tmp_path / "table.json"
+    p.write_text(json.dumps(table))
+    monkeypatch.setenv(B.BENCH_TABLE_ENV, str(p))
+    monkeypatch.chdir(tmp_path)
+    assert B.select_auto_spec(params, axes, None) == "einsum:int8"
+
+
+def test_auto_missing_table_warns_once(tmp_path):
+    import warnings as W
+    params, axes, _ = _fixture()
+    missing = str(tmp_path / "nope.json")
+    with pytest.warns(UserWarning, match="REPRO_BENCH_TABLE"):
+        B.select_auto_spec(params, axes, None, table_path=missing)
+    with W.catch_warnings():
+        W.simplefilter("error")                      # second call: silent
+        B.select_auto_spec(params, axes, None, table_path=missing)

@@ -1,0 +1,487 @@
+"""Pipelined WASGD rounds (train/step.py + data/pipeline.py).
+
+Three guarantees under test:
+
+* **parity** — ``pipeline="parity"`` produces params and per-round metrics
+  bitwise-identical to the unpipelined step, jitted, for sync AND
+  ``async_mode="on_device"`` rounds, across the composition grid's mesh
+  schedules, and end-to-end through ``Trainer.run``;
+* **speculative bound** — the seam forward's stale losses deviate from the
+  true next-round first-forward losses by exactly zero at ``beta = 0`` and,
+  for ``beta > 0``, stay within the stated mean-value bound the step
+  measures per round (``spec_dev <= slack * spec_bound``);
+* **prefetch correctness** — the first microbatch the host prefetcher
+  stages for round ``r+1`` (and the seam carries) is leaf-for-leaf the
+  slice the next round's ``reshape_batch`` consumes, and OrderGen's
+  keep-or-reshuffle decision fires at EACH segment boundary (mid-epoch),
+  not once per epoch.
+
+Adapts to however many host devices exist (1 under plain tier-1; the CI
+multidevice job forces 8, giving the rs_ag/shard_map specs real
+collectives)."""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import TrainConfig, WASGDConfig
+from repro.data import (OrderedDataset, RoundPrefetcher, first_microbatch,
+                        make_classification)
+from repro.data.pipeline import OrderedDataset as _OD
+from repro.models import cnn
+from repro.models.param import build
+from repro.optim import make_optimizer
+from repro.train import Trainer
+from repro.train.state import init_state
+from repro.train.step import build_train_step, init_comm_state
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()), ("data",))
+
+
+def _w():
+    d = len(jax.devices())
+    return 2 if d == 1 else d
+
+
+def _problem(seed=0):
+    X, y = make_classification(seed, 1024, d=16, n_classes=4)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=16, d_hidden=32, n_classes=4),
+        jax.random.key(seed))
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(cnn.mlp_apply(p, b["x"]), b["y"]), {}
+
+    return X, y, params, axes, loss_fn
+
+
+def _assert_trees_bitwise(a, b, label=""):
+    same = jax.tree.map(lambda x, y: bool(np.array_equal(np.asarray(x),
+                                                         np.asarray(y))),
+                        a, b)
+    assert all(jax.tree.leaves(same)), label
+
+
+def _assert_history_bitwise(h0, h1):
+    assert len(h0) == len(h1)
+    for r, (a, b) in enumerate(zip(h0, h1)):
+        for k in a:
+            assert k in b, (r, k)
+            assert np.array_equal(a[k], b[k]), (r, k, a[k], b[k])
+
+
+# ---------------------------------------------------------------------------
+# Prefetch correctness
+# ---------------------------------------------------------------------------
+
+def test_first_microbatch_matches_step_slice():
+    """The host-staged slice must equal reshape_batch(batch)[0] — the parity
+    mode's t=0 substitution rests on this equality."""
+    p, tau, bl = 3, 4, 5
+    rng = np.random.default_rng(0)
+    batch = {"x": rng.normal(size=(tau * p * bl, 7)).astype(np.float32),
+             "y": rng.integers(0, 9, size=tau * p * bl)}
+    first = first_microbatch(batch, p, tau)
+    for k, v in batch.items():
+        step_view = np.swapaxes(
+            v.reshape(p, tau, bl, *v.shape[1:]), 0, 1)[0]
+        np.testing.assert_array_equal(np.asarray(first[k]), step_view)
+
+
+def test_first_microbatch_rejects_indivisible_batch():
+    with pytest.raises(ValueError, match="not divisible"):
+        first_microbatch({"x": np.zeros((7, 2))}, n_workers=2, tau=2)
+
+
+def test_round_prefetcher_pairs_infinite_stream():
+    """(batch_r, first_{r+1}) pairs: batch_r equals the raw stream's round r
+    and first_{r+1} is round r+1's staged first microbatch."""
+    X, y, *_ = _problem()
+    p, tau, bl = 2, 2, 4
+    mk = lambda: OrderedDataset({"x": X, "y": y}, p, tau, bl, seed=7)
+    raw = mk().batches()
+    raws = [next(raw) for _ in range(6)]
+    pf = RoundPrefetcher(mk().batches(), p, tau)
+    try:
+        for r in range(5):
+            batch, nf = next(pf)
+            np.testing.assert_array_equal(np.asarray(batch["x"]),
+                                          raws[r]["x"])
+            expect = first_microbatch(raws[r + 1], p, tau)
+            for k in expect:
+                np.testing.assert_array_equal(np.asarray(nf[k]),
+                                              np.asarray(expect[k]))
+    finally:
+        pf.close()
+
+
+def test_round_prefetcher_finite_stream_reuses_last_first():
+    X, y, *_ = _problem()
+    p, tau, bl = 2, 2, 4
+    ds = OrderedDataset({"x": X, "y": y}, p, tau, bl, seed=3)
+    gen = ds.batches()
+    raws = [next(gen) for _ in range(3)]
+    pf = RoundPrefetcher(iter(raws), p, tau)
+    got = list(pf)
+    pf.close()
+    assert len(got) == 3
+    # final pair falls back to the round's own first microbatch
+    expect = first_microbatch(raws[2], p, tau)
+    for k in expect:
+        np.testing.assert_array_equal(np.asarray(got[2][1][k]),
+                                      np.asarray(expect[k]))
+
+
+def test_round_prefetcher_propagates_errors():
+    def boom():
+        yield {"x": np.zeros((8, 2), np.float32)}
+        raise RuntimeError("upstream died")
+
+    pf = RoundPrefetcher(boom(), n_workers=2, tau=2)
+    with pytest.raises(RuntimeError, match="upstream died"):
+        for _ in pf:
+            pass
+    pf.close()
+
+
+# ---------------------------------------------------------------------------
+# OrderGen segment boundaries (paper Alg. 2)
+# ---------------------------------------------------------------------------
+
+def _segment_ds(n_segments=2, boundary_delay=0):
+    data = {"x": np.arange(64, dtype=np.float32)[:, None]}
+    return _OD(data, n_workers=2, tau=1, b_local=4, n_segments=n_segments,
+               boundary_delay=boundary_delay)
+    # seg_len=32, per_round=4 -> rounds_per_segment=8
+
+
+def test_ordergen_reshuffles_bad_segment_mid_epoch():
+    """Regression: end_segment used to fire only at the epoch wrap (all
+    segments at once); a badly-scored segment must be reshuffled the moment
+    the traversal leaves it — mid-epoch."""
+    ds = _segment_ds()
+    it = ds.batches()
+    seeds0 = ds.order.seeds.copy()
+    for _ in range(ds.rounds_per_segment):        # traverse segment 0
+        next(it)
+    ds.order.record_scores(0, np.array([5.0, 5.0]))   # bad z-scores
+    next(it)              # first round of segment 1, still mid-epoch
+    assert not np.array_equal(ds.order.seeds[0], seeds0[0]), \
+        "bad segment's seeds must reshuffle at its own boundary"
+    np.testing.assert_array_equal(ds.order.seeds[1], seeds0[1])
+    np.testing.assert_array_equal(ds.order.scores[0], 0.0)   # reset
+
+
+def test_ordergen_keeps_good_segment_mid_epoch():
+    ds = _segment_ds()
+    it = ds.batches()
+    seeds0 = ds.order.seeds.copy()
+    for _ in range(ds.rounds_per_segment):
+        next(it)
+    ds.order.record_scores(0, np.array([-5.0, -5.0]))  # good z-scores
+    next(it)
+    np.testing.assert_array_equal(ds.order.seeds[0], seeds0[0])
+
+
+def test_ordergen_each_segment_ends_at_its_own_boundary():
+    """Over one full epoch + 1 round, every segment's decision fires exactly
+    when the traversal leaves it (bad scores -> all reshuffled by then)."""
+    ds = _segment_ds(n_segments=2)
+    it = ds.batches()
+    seeds0 = ds.order.seeds.copy()
+    for r in range(2 * ds.rounds_per_segment + 1):
+        seg = ds.segment_of_round(r)
+        ds.order.record_scores(seg, np.array([9.0, 9.0]))
+        next(it)
+    assert not np.array_equal(ds.order.seeds[0], seeds0[0])
+    assert not np.array_equal(ds.order.seeds[1], seeds0[1])
+
+
+def test_ordergen_boundary_delay_defers_decision():
+    """boundary_delay=d holds the decision for d rounds past the boundary so
+    a prefetcher running d rounds ahead still sees every recorded score."""
+    ds = _segment_ds(boundary_delay=1)
+    it = ds.batches()
+    seeds0 = ds.order.seeds.copy()
+    for _ in range(ds.rounds_per_segment):
+        next(it)
+    ds.order.record_scores(0, np.array([5.0, 5.0]))
+    next(it)                                     # boundary round: deferred
+    np.testing.assert_array_equal(ds.order.seeds[0], seeds0[0])
+    next(it)                                     # +1 round: decision fires
+    assert not np.array_equal(ds.order.seeds[0], seeds0[0])
+
+
+# ---------------------------------------------------------------------------
+# Parity mode: bitwise-identical to the unpipelined step
+# ---------------------------------------------------------------------------
+
+def _steps_for(spec, pipeline, loss_fn, axes, n_workers, tau=2,
+               async_mode="host_sim", n_pods=1):
+    wcfg = WASGDConfig(tau=tau, backend=spec, async_mode=async_mode,
+                       n_pods=n_pods)
+    opt = make_optimizer("sgd", 0.05, 0.0, 0.0)
+    step = build_train_step(loss_fn, opt, axes, wcfg, n_workers,
+                            mesh=_mesh(), pipeline=pipeline)
+    return wcfg, opt, step
+
+
+SPECS = ["einsum:f32", "rs_ag:f32", "rs_ag:bf16", "rs_ag:int8",
+         "shard_map:f32", "hierarchical:int8"]
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_pipeline_parity_bitwise_per_spec(spec):
+    """Jitted step-level parity across the composition grid's mesh
+    schedules: identical params, identical shared metrics, several rounds
+    deep (the carried seam output is consumed as the next round's t=0
+    microbatch)."""
+    X, y, params0, axes0, loss_fn = _problem()
+    w, tau, bl = _w(), 2, 4
+    from repro.core import replicate_workers
+    params, axes = replicate_workers(params0, axes0, w)
+    n_pods = 2 if spec.startswith("hierarchical") else 1
+    if n_pods == 2 and w % 2:
+        pytest.skip("hierarchical needs even worker count")
+    wcfg, opt, step0 = _steps_for(spec, None, loss_fn, axes, w, tau,
+                                  n_pods=n_pods)
+    _, _, step1 = _steps_for(spec, "parity", loss_fn, axes, w, tau,
+                             n_pods=n_pods)
+    primer = jax.jit(step1.primer)
+    jstep0, jstep1 = jax.jit(step0), jax.jit(step1)
+
+    ds = OrderedDataset({"x": X, "y": y}, w, tau, bl, seed=11)
+    gen = ds.batches()
+    batches = [jax.device_put(next(gen)) for _ in range(4)]
+    comm = init_comm_state("wasgd", params, axes, w, wcfg=wcfg)
+    s0 = init_state(params, opt.init(params), w, comm)
+    s1 = init_state(params, opt.init(params), w, comm)
+    carry = primer(s1.params, batches[0])
+    for r in range(3):
+        nf = first_microbatch(batches[r + 1], w, tau)
+        s0, m0 = jstep0(s0, batches[r])
+        s1, m1, carry = jstep1(s1, batches[r], nf, carry)
+        for k in m0:
+            assert np.array_equal(np.asarray(m0[k]), np.asarray(m1[k])), \
+                (spec, r, k)
+        _assert_trees_bitwise(s0.params, s1.params, (spec, r))
+        # the seam's staged batch is what round r+1 will consume
+        _assert_trees_bitwise(carry["first"], nf, (spec, r, "staged"))
+
+
+def test_pipeline_parity_through_trainer_run():
+    """End-to-end: Trainer(pipeline="parity") over the real prefetcher vs
+    the unpipelined Trainer — bitwise history and params."""
+    X, y, params, axes, loss_fn = _problem()
+    w = _w()
+    tcfg = TrainConfig(learning_rate=0.05,
+                       wasgd=WASGDConfig(tau=2, backend="rs_ag"))
+
+    def run(pipeline):
+        ds = OrderedDataset({"x": X, "y": y}, w, 2, 4, seed=5)
+        tr = Trainer(loss_fn, params, axes, tcfg, w, mesh=_mesh(),
+                     pipeline=pipeline)
+        tr.run(ds.batches(), 5)
+        return tr
+
+    t0, t1 = run(None), run("parity")
+    _assert_history_bitwise(t0.history, t1.history)
+    _assert_trees_bitwise(t0.state.params, t1.state.params)
+
+
+def test_pipeline_parity_async_on_device_through_trainer_run():
+    """Alg. 4 rounds: the straggler mask rides comm_state, the seam rides
+    the masked aggregate — parity must still be bitwise."""
+    X, y, params, axes, loss_fn = _problem()
+    w = _w()
+    tcfg = TrainConfig(learning_rate=0.05,
+                       wasgd=WASGDConfig(tau=2, backend="rs_ag",
+                                         async_mode="on_device"))
+    rounds = 5
+    rng = np.random.default_rng(2)
+    sched = np.ones((rounds, w), bool)
+    for r in range(1, rounds):                   # >=1 active per round
+        sched[r, rng.choice(w, max(1, w // 3), replace=False)] = False
+
+    def run(pipeline):
+        ds = OrderedDataset({"x": X, "y": y}, w, 2, 4, seed=5)
+        tr = Trainer(loss_fn, params, axes, tcfg, w, mesh=_mesh(),
+                     pipeline=pipeline)
+        tr.run(ds.batches(), rounds, straggler_schedule=sched)
+        return tr
+
+    t0, t1 = run(None), run("parity")
+    _assert_history_bitwise(t0.history, t1.history)
+    _assert_trees_bitwise(t0.state.params, t1.state.params)
+
+
+# ---------------------------------------------------------------------------
+# Speculative mode: stale Judge forward, measured deviation bound
+# ---------------------------------------------------------------------------
+
+def test_speculative_beta0_deviation_exactly_zero():
+    """beta=0 makes the Eq. 10 step the identity for active workers, so the
+    pre-aggregate seam forward IS the true forward: spec_dev == 0 bitwise,
+    and the whole run matches parity mode."""
+    X, y, params, axes, loss_fn = _problem()
+    w = _w()
+    tcfg = TrainConfig(learning_rate=0.05,
+                       wasgd=WASGDConfig(tau=2, beta=0.0, backend="rs_ag"))
+
+    def run(pipeline):
+        ds = OrderedDataset({"x": X, "y": y}, w, 2, 4, seed=9)
+        tr = Trainer(loss_fn, params, axes, tcfg, w, mesh=_mesh(),
+                     pipeline=pipeline)
+        tr.run(ds.batches(), 5)
+        return tr
+
+    t1, t2 = run("parity"), run("speculative")
+    for h in t2.history:
+        assert float(np.abs(h["spec_dev"]).max()) == 0.0
+    _assert_trees_bitwise(t1.state.params, t2.state.params)
+    for a, b in zip(t1.history, t2.history):
+        np.testing.assert_array_equal(a["h"], b["h"])
+        np.testing.assert_array_equal(a["theta"], b["theta"])
+
+
+def test_speculative_deviation_within_measured_bound():
+    """The stated mean-value bound, measured per round by the step itself:
+    |spec - true|_i <= slack * ||grad L_i(t=0)|| * ||delta x_i|| with a 2x
+    slack for the endpoint-gradient surrogate. Round 0's deviation is 0 by
+    construction (the primer runs on the round's own starting params)."""
+    X, y, params, axes, loss_fn = _problem()
+    w = _w()
+    tcfg = TrainConfig(learning_rate=0.05,
+                       wasgd=WASGDConfig(tau=2, beta=0.5, backend="rs_ag"))
+    ds = OrderedDataset({"x": X, "y": y}, w, 2, 4, seed=9)
+    tr = Trainer(loss_fn, params, axes, tcfg, w, mesh=_mesh(),
+                 pipeline="speculative")
+    tr.run(ds.batches(), 8)
+    assert float(tr.history[0]["spec_dev"].max()) == 0.0
+    devs = np.stack([h["spec_dev"] for h in tr.history[1:]])
+    bounds = np.stack([h["spec_bound"] for h in tr.history[1:]])
+    assert np.isfinite(devs).all() and (devs > 0).any(), \
+        "speculative rounds must actually be stale for beta > 0"
+    assert (devs <= 2.0 * bounds + 1e-6).all(), \
+        (devs.max(), bounds[devs > 2.0 * bounds].min())
+
+
+def test_speculative_trains():
+    """Stale Judge scores are admissible: the speculative run still learns
+    (loss drops) and stays finite."""
+    X, y, params, axes, loss_fn = _problem()
+    w = _w()
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=4))
+    ds = OrderedDataset({"x": X, "y": y}, w, 4, 8, seed=1)
+    tr = Trainer(loss_fn, params, axes, tcfg, w, pipeline="speculative")
+    tr.run(ds.batches(), 12)
+    losses = tr.losses()
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# API guards
+# ---------------------------------------------------------------------------
+
+def test_pipeline_rejects_unknown_mode_and_overlap_combo():
+    X, y, params0, axes0, loss_fn = _problem()
+    from repro.core import replicate_workers
+    params, axes = replicate_workers(params0, axes0, 2)
+    opt = make_optimizer("sgd", 0.05, 0.0, 0.0)
+    with pytest.raises(ValueError, match="unknown pipeline mode"):
+        build_train_step(loss_fn, opt, axes, WASGDConfig(), 2,
+                         pipeline="warp")
+    with pytest.raises(ValueError, match="seam"):
+        build_train_step(loss_fn, opt, axes, WASGDConfig(), 2,
+                         pipeline="parity", overlap=lambda: jnp.float32(1))
+
+
+def test_pipeline_rejects_rule_without_overlap_seam():
+    X, y, params0, axes0, loss_fn = _problem()
+    from repro.core import replicate_workers
+    from repro.train.step import spsgd_rule
+    params, axes = replicate_workers(params0, axes0, 2)
+    opt = make_optimizer("sgd", 0.05, 0.0, 0.0)
+    with pytest.raises(ValueError, match="overlap"):
+        build_train_step(loss_fn, opt, axes, WASGDConfig(), 2,
+                         rule=spsgd_rule(), pipeline="parity")
+
+
+def test_trainer_rejects_pipeline_for_baseline_rules():
+    X, y, params, axes, loss_fn = _problem()
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=2))
+    with pytest.raises(ValueError, match="wasgd"):
+        Trainer(loss_fn, params, axes, tcfg, 2, rule="spsgd",
+                pipeline="parity")
+
+
+def test_ordergen_deferred_decision_never_fires_mid_traversal():
+    """A boundary_delay that lands inside a NEW traversal of the same
+    segment (n_segments=1 here) must hold the decision until that
+    traversal's next boundary — reshuffling mid-traversal would switch the
+    permutation under an epoch in progress."""
+    ds = _segment_ds(n_segments=1, boundary_delay=2)
+    rps = ds.rounds_per_segment
+    it = ds.batches()
+    seeds0 = ds.order.seeds.copy()
+    for _ in range(rps):                          # epoch 1
+        next(it)
+    ds.order.record_scores(0, np.array([9.0, 9.0]))   # bad -> reshuffle due
+    for _ in range(rps):                          # epoch 2: decision held
+        next(it)
+        np.testing.assert_array_equal(ds.order.seeds[0], seeds0[0])
+    next(it)                                      # epoch-3 boundary: fires
+    assert not np.array_equal(ds.order.seeds[0], seeds0[0])
+
+
+# ---------------------------------------------------------------------------
+# Trainer <-> OrderedDataset coordination under prefetch
+# ---------------------------------------------------------------------------
+
+def test_pipelined_run_validates_dataset_boundary_delay():
+    """Passing the OrderedDataset itself lets the pipelined Trainer verify
+    the OrderGen decisions are deferred past the prefetch run-ahead."""
+    X, y, params, axes, loss_fn = _problem()
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=2))
+    tr = Trainer(loss_fn, params, axes, tcfg, 2, pipeline="parity")
+    ds = OrderedDataset({"x": X, "y": y}, 2, 2, 4, n_segments=2, seed=3)
+    with pytest.raises(ValueError, match="boundary_delay"):
+        tr.run(ds, 4)
+
+
+def test_pipelined_run_accepts_dataset_and_defaults_order_state():
+    X, y, params, axes, loss_fn = _problem()
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=2))
+    tr = Trainer(loss_fn, params, axes, tcfg, 2, pipeline="parity")
+    ds = OrderedDataset({"x": X, "y": y}, 2, 2, 4, n_segments=2, seed=3,
+                        boundary_delay=RoundPrefetcher.run_ahead())
+    tr.run(ds, 4)
+    assert len(tr.history) == 4
+    # order_state defaulted from the dataset: scores were recorded
+    assert np.abs(ds.order.scores).sum() > 0
+
+
+def test_pipelined_run_warns_on_bare_iterator_with_order_state():
+    X, y, params, axes, loss_fn = _problem()
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=2))
+    tr = Trainer(loss_fn, params, axes, tcfg, 2, pipeline="parity")
+    ds = OrderedDataset({"x": X, "y": y}, 2, 2, 4, n_segments=2, seed=3)
+    with pytest.warns(UserWarning, match="run-ahead"):
+        tr.run(ds.batches(), 3, order_state=ds.order,
+               segment_fn=ds.segment_of_round)
+
+
+def test_unpipelined_run_accepts_dataset():
+    X, y, params, axes, loss_fn = _problem()
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=2))
+    tr = Trainer(loss_fn, params, axes, tcfg, 2)
+    ds = OrderedDataset({"x": X, "y": y}, 2, 2, 4, n_segments=2, seed=3)
+    tr.run(ds, 4)
+    assert len(tr.history) == 4
+    assert np.abs(ds.order.scores).sum() > 0
