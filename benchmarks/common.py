@@ -75,7 +75,8 @@ def sequential_batches(X, y, p: int, tau: int, b_local: int):
 
 def train_custom(rule: str, batches, rounds: int, *, p: int = 4, tau: int = 8,
                  beta: float = 0.9, a_tilde: float = 1.0,
-                 strategy: str = "boltzmann", lr: float = 0.05, seed: int = 0,
+                 strategy: str = "boltzmann", policy: str = "",
+                 lr: float = 0.05, seed: int = 0,
                  order_state=None, segment_fn=None, images: bool = False,
                  eval_data=None,
                  easgd_alpha: Optional[float] = None) -> Dict:
@@ -83,7 +84,7 @@ def train_custom(rule: str, batches, rounds: int, *, p: int = 4, tau: int = 8,
     tcfg = TrainConfig(
         learning_rate=lr, optimizer="sgd",
         wasgd=WASGDConfig(tau=tau, beta=beta, a_tilde=a_tilde,
-                          strategy=strategy))
+                          strategy=strategy, policy=policy))
     tr = Trainer(loss_fn, params, axes, tcfg, p, rule=rule,
                  easgd_alpha=easgd_alpha)
     t0 = time.time()
@@ -108,7 +109,8 @@ def train_custom(rule: str, batches, rounds: int, *, p: int = 4, tau: int = 8,
 
 def train_run(rule: str, *, p: int = 4, tau: int = 8, b_local: int = 8,
               rounds: int = 20, beta: float = 0.9, a_tilde: float = 1.0,
-              strategy: str = "boltzmann", lr: float = 0.05, seed: int = 0,
+              strategy: str = "boltzmann", policy: str = "",
+              lr: float = 0.05, seed: int = 0,
               order_search: bool = True, order_seed: int = 7,
               images: bool = False, dataset_override=None,
               easgd_alpha: Optional[float] = None) -> Dict:
@@ -121,7 +123,7 @@ def train_run(rule: str, *, p: int = 4, tau: int = 8, b_local: int = 8,
                         seed=order_seed)
     return train_custom(
         rule, ds.batches(), rounds, p=p, tau=tau, beta=beta,
-        a_tilde=a_tilde, strategy=strategy, lr=lr, seed=seed,
+        a_tilde=a_tilde, strategy=strategy, policy=policy, lr=lr, seed=seed,
         order_state=ds.order if order_search else None,
         segment_fn=ds.segment_of_round if order_search else None,
         images=images, eval_data=(X, y), easgd_alpha=easgd_alpha)

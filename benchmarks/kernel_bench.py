@@ -74,6 +74,7 @@ def run(fast: bool = False):
     run_backend_matrix(fast=fast)
     run_async(fast=fast)
     run_pipeline(fast=fast)
+    run_policies(fast=fast)
 
 
 def run_backends(fast: bool = False):
@@ -261,6 +262,109 @@ def run_async(fast: bool = False, out_path: str = None):
     emit("async_bench_json", 0.0, out_path)
 
 
+def run_policies(fast: bool = False, out_path: str = None):
+    """Worker-assessment policy x async-strategy sweep.
+
+    Every representative policy spec of the third axis (core/weights.py)
+    runs the same small Alg. 4 workload under each async execution
+    strategy: ``host_sim`` (numpy event simulation), ``on_device``
+    (schedule-driven jitted rounds) and ``on_device_measured`` (the mask
+    derived from MEASURED per-device round times — no StepTimeModel).
+    Emits CSV rows and ``BENCH_policy.json``: per-round walltime, final
+    loss, dropped rounds per (policy, strategy). Single-host numbers are
+    indicative only (the on_device rows include one trace+compile each,
+    ``includes_compile`` marks them); the record shape is the artifact, and
+    on a real mesh the policy column shows what an assessment choice costs
+    per round.
+    """
+    import functools
+    import numpy as np
+    from repro.core.async_device import run_parallel_sgd_on_device
+    from repro.core.async_sim import (StepTimeModel, make_schedule,
+                                      run_parallel_sgd)
+    from repro.data import make_classification
+    from repro.models import cnn
+    from repro.models.param import build
+
+    if out_path is None:
+        out_path = os.path.join(RESULTS_DIR, "BENCH_policy.json")
+    p, b, tau = (2, 1, 2) if fast else (4, 2, 4)
+    rounds = 3 if fast else 8
+    w = p + b
+    X, y = make_classification(0, 1024, d=16, n_classes=4)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=16, d_hidden=32, n_classes=4), jax.random.key(0))
+
+    def loss_fn(pp, bb):
+        return cnn.classification_loss(cnn.mlp_apply(pp, bb["x"]),
+                                       bb["y"]), {}
+
+    def grad_fn(ps, batch):
+        one = lambda pp, bb: loss_fn(pp, bb)[0]
+        losses = jax.vmap(one)(ps, batch)
+        grads = jax.grad(lambda q: jax.vmap(one)(q, batch).sum())(ps)
+        return losses, grads
+    grad_fn = jax.jit(grad_fn)
+
+    def batches():
+        rng = np.random.default_rng(1)
+        while True:
+            idx = rng.integers(0, len(X), size=(w, tau * 8))
+            yield {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    sched = make_schedule(
+        StepTimeModel(w, sigma=0.3, straggle_p=0.1, straggle_mult=20,
+                      seed=3),
+        rounds=rounds, tau=tau, n_workers=p, backups=b)
+
+    policies = (["boltzmann", "ema(0.9)"] if fast else
+                ["boltzmann", "inverse", "ema(0.9)", "trimmed(1)", "topk(2)",
+                 "boltzmann(a=2)|anneal(cosine, period=8, peak=8)",
+                 "ema(0.9)|time_aware"])
+
+    records = []
+
+    def one(policy, mode, fn, includes_compile):
+        t0 = time.time()
+        out = fn()
+        us = (time.time() - t0) / rounds * 1e6
+        records.append({"policy": policy, "async_strategy": mode,
+                        "us_per_round": round(us, 1),
+                        "includes_compile": includes_compile,
+                        "final_loss": float(out.losses[-1]),
+                        "dropped_rounds": out.dropped_rounds,
+                        "measured_times": out.round_times is not None,
+                        "workers": w, "backups": b, "tau": tau,
+                        "rounds": rounds,
+                        "host_devices": len(jax.devices())})
+        # spec strings may contain commas (anneal args); keep the CSV
+        # name,us,derived contract intact — the JSON keeps the exact spec.
+        label = policy.replace(" ", "").replace(",", ";")
+        emit(f"policy_{label}_{mode}", us,
+             f"p{p}+b{b};final_loss={out.losses[-1]:.4f}")
+
+    for policy in policies:
+        one(policy, "host_sim", lambda pol=policy: run_parallel_sgd(
+            loss_fn, grad_fn, params, axes, batches(), n_workers=p,
+            backups=b, tau=tau, rounds=rounds, lr=0.05, schedule=sched,
+            policy=pol), includes_compile=False)
+        one(policy, "on_device", lambda pol=policy: run_parallel_sgd_on_device(
+            grad_fn, params, axes, batches(), n_workers=p, backups=b,
+            tau=tau, rounds=rounds, lr=0.05, schedule=sched, policy=pol,
+            backend="async_einsum"), includes_compile=True)
+        one(policy, "on_device_measured",
+            lambda pol=policy: run_parallel_sgd_on_device(
+                grad_fn, params, axes, batches(), n_workers=p, backups=b,
+                tau=tau, rounds=rounds, lr=0.05, measure_times=True,
+                policy=pol, backend="async_einsum"), includes_compile=True)
+
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"bench": "policy", "records": records}, f, indent=2)
+    emit("policy_bench_json", 0.0, out_path)
+    return records
+
+
 def run_pipeline(fast: bool = False, out_path: str = None):
     """Pipelined vs unpipelined WASGD round walltime per aggregation spec.
 
@@ -413,7 +517,7 @@ def main():
     sweeps = {"run": run, "run_backends": run_backends,
               "run_backend_matrix": run_backend_matrix,
               "run_async": run_async, "run_pipeline": run_pipeline,
-              "run_extra": run_extra}
+              "run_policies": run_policies, "run_extra": run_extra}
     ap = argparse.ArgumentParser(description=main.__doc__)
     ap.add_argument("sweep", nargs="?", default="run", choices=sorted(sweeps))
     ap.add_argument("--fast", action="store_true")

@@ -1,6 +1,12 @@
 """Paper Fig. 4 — weighting-strategy temperature sweep T = 1/a_tilde,
 scored against the equally weighted baseline with the paper's Eq. 47
-difference metric (positive = better than baseline)."""
+difference metric (positive = better than baseline).
+
+Driven through the worker-assessment POLICY axis (core/weights.py): the
+baseline is the ``"equal"`` policy and every temperature point is the
+``"boltzmann(a=1/T)"`` policy spec — no raw ``a_tilde`` plumbing, so the
+sweep exercises exactly the path ``WASGDConfig.policy`` users take.
+"""
 from __future__ import annotations
 
 import time
@@ -22,7 +28,7 @@ def run(fast: bool = False):
     reps = 2 if fast else 3
     Ts = [0.01, 0.1, 1.0, 10.0, 100.0]
 
-    base_curves = [train_run("wasgd", strategy="equal", rounds=rounds,
+    base_curves = [train_run("wasgd", policy="equal", rounds=rounds,
                              seed=0, order_seed=100 + r)["losses"]
                    for r in range(reps)]
 
@@ -31,7 +37,7 @@ def run(fast: bool = False):
         diffs = []
         t0 = time.time()
         for r in range(reps):
-            res = train_run("wasgd", strategy="boltzmann", a_tilde=1.0 / T,
+            res = train_run("wasgd", policy=f"boltzmann(a={1.0 / T})",
                             rounds=rounds, seed=0, order_seed=200 + r)
             diffs.append(eq47_metric(base_curves, res["losses"]))
         m, s = float(np.mean(diffs)), float(np.std(diffs))

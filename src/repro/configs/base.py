@@ -213,6 +213,19 @@ class WASGDConfig:
     a_tilde: float = 1.0              # Boltzmann temperature^{-1} (Eq. 13); T = 1/a
     tau: int = 4                      # local steps per communication round
     strategy: str = "boltzmann"       # boltzmann | inverse (WASGD v1) | equal | best
+    policy: str = ""                  # worker-assessment policy spec
+                                      # (core/weights.py): a composed
+                                      # "stage|stage|..." pipeline — e.g.
+                                      # "boltzmann(a=8)|anneal(cosine)",
+                                      # "ema(0.9)|time_aware",
+                                      # "trimmed(1)|boltzmann" — of energy
+                                      # transforms (ema, time_aware), mask
+                                      # refinements (topk, trimmed), one
+                                      # kernel (boltzmann/inverse/equal/
+                                      # best) and an anneal modifier.
+                                      # "" resolves the legacy knobs
+                                      # (strategy / a_tilde / a_schedule)
+                                      # as aliases, bitwise-identically.
     m_estimate: int = 100             # loss-energy sample budget (Eq. 21/26)
     record_chunks: int = 4            # c in Alg. 2 RecordIndex
     order_search: bool = True         # WASGD+ sample-order search (Judge/OrderGen)
@@ -247,7 +260,19 @@ class WASGDConfig:
                                       # one jitted program on the worker mesh
                                       # axis (core/async_device.py) — the
                                       # round's activity mask rides in
-                                      # TrainState.comm_state.
+                                      # TrainState.comm_state (alongside the
+                                      # policy state when the policy is
+                                      # stateful).
+
+    def __post_init__(self):
+        # Validate the worker-assessment knobs at CONSTRUCTION: an unknown
+        # strategy or unparsable policy spec used to fail deep inside
+        # tracing; it now fails here, listing the registered policy names.
+        # Late import: core.weights is repro-import-free, so the cycle
+        # configs -> core -> wasgd -> configs resolves (WASGDConfig is
+        # already defined by the time any config is constructed).
+        from repro.core.weights import validate_config_spec
+        validate_config_spec(self.strategy, self.policy)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -34,17 +34,28 @@ form, so the async regime composes with the payload axis
 ``pallas_wagg`` has no masked path. The host simulation stays the semantic
 oracle: ``tests/test_async_device.py`` injects the same
 ``StragglerSchedule`` into both paths and requires leaf-for-leaf parity.
+
+Worker assessment comes from the policy axis (core/weights.py): the
+drivers take ``policy=`` spec strings / ``WeightPolicy`` objects (legacy
+``strategy``/``a_tilde`` stay as bitwise aliases), with stateful policy
+state threading across rounds. ``run_parallel_sgd_on_device(
+measure_times=True)`` additionally derives the Alg. 4 activity mask from
+MEASURED per-device round times — no ``StepTimeModel`` or precomputed
+schedule — and feeds the measurements to time-consuming policy stages
+(``time_aware``) via ``observe_times``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+import time
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import backends
+from repro.core import weights as weights_mod
 from repro.core.aggregate import _axes_is_leaf
 from repro.core.async_sim import (AsyncResult, StepTimeModel,
                                   StragglerSchedule, make_schedule)
@@ -154,43 +165,151 @@ def weighted_aggregate_async(params: Dict, axes: Dict, theta: jax.Array,
 # One compiled Alg. 4 round + the driver loop
 # ---------------------------------------------------------------------------
 
-def build_async_round(grad_fn: Callable, axes: Dict, *, lr: float,
-                      beta: float = 0.9, a_tilde: float = 1.0,
-                      strategy: str = "boltzmann",
-                      backend: str = "async_shard_map",
-                      ctx: Optional[backends.AggregationContext] = None,
-                      jit: bool = True) -> Callable:
-    """Build ``round_fn(params, batch, active) -> (params, losses, theta)``.
-
-    One jitted program per p-of-(p+b) round: the local steps, the masked
-    Boltzmann theta, the Eq. 10 aggregate, and the straggler late-join all
-    trace together — ``active`` is a ``(w,)`` bool input, so a new straggler
-    set per round costs no recompilation. ``backend`` accepts any composed
-    ``schedule:codec`` spec (or a legacy ``async_*`` alias).
-
-    ``grad_fn(params_stacked, batch) -> (losses (w,), grads_stacked)`` —
-    the same contract as ``async_sim.run_parallel_sgd``.
-    """
-    ctx = backends.DEFAULT_CONTEXT if ctx is None else ctx
+def _resolve_backend(backend: str, ctx):
     name = async_backend_name(backend)
     backend_obj = backends.get_backend(name)
     if getattr(backend_obj, "needs_mesh", False) and ctx.mesh is None:
         raise ValueError(
             f"async aggregation backend {name!r} places explicit "
             f"collectives and needs ctx.mesh (AggregationContext(mesh=...))")
+    return backend_obj
+
+
+def _resolve_policy(policy, strategy: str, a_tilde: float):
+    """``policy`` spec/object wins; ``None`` aliases the legacy knobs to
+    their (stateless, bitwise-identical) kernel policy. The legacy arg is
+    kernel-checked first — ``strategy="ema"`` must keep raising the
+    unknown-strategy error, not silently build a stateful pipeline."""
+    if policy is None:
+        weights_mod.validate_config_spec(strategy)
+        return weights_mod.parse_policy(strategy, default_a=a_tilde)
+    return weights_mod.as_policy(policy, default_a=a_tilde)
+
+
+def build_async_round(grad_fn: Callable, axes: Dict, *, lr: float,
+                      beta: float = 0.9, a_tilde: float = 1.0,
+                      strategy: str = "boltzmann",
+                      policy=None,
+                      backend: str = "async_shard_map",
+                      ctx: Optional[backends.AggregationContext] = None,
+                      jit: bool = True) -> Callable:
+    """Build one jitted p-of-(p+b) round.
+
+    Stateless policy (the default ``strategy``/``a_tilde`` aliases):
+    ``round_fn(params, batch, active) -> (params, losses, theta)``.
+    Stateful policy (``policy="ema(0.9)|..."``): the policy state threads
+    through the round —
+    ``round_fn(params, batch, active, pstate)
+        -> (params, losses, theta, pstate)``
+    (``round_fn.stateful`` tells the caller which signature it got).
+
+    The local steps, the masked policy theta, the Eq. 10 aggregate, and the
+    straggler late-join all trace together — ``active`` is a ``(w,)`` bool
+    input, so a new straggler set per round costs no recompilation.
+    ``backend`` accepts any composed ``schedule:codec`` spec (or a legacy
+    ``async_*`` alias).
+
+    ``grad_fn(params_stacked, batch) -> (losses (w,), grads_stacked)`` —
+    the same contract as ``async_sim.run_parallel_sgd``.
+    """
+    ctx = backends.DEFAULT_CONTEXT if ctx is None else ctx
+    backend_obj = _resolve_backend(backend, ctx)
+    pol = _resolve_policy(policy, strategy, a_tilde)
     w_axes = jax.tree.map(lambda ax: ("worker",) + tuple(ax), axes,
                           is_leaf=_axes_is_leaf)
 
-    def round_fn(params, batch, active):
+    def _advance(params, batch, active, pstate):
         losses, grads = grad_fn(params, batch)
         params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
-        theta = masked_compute_theta(losses, active, a_tilde, strategy)
+        theta, pstate = pol(losses, active, pstate)
         params = backend_obj.aggregate(
             params, w_axes, theta, beta,
             ctx=dataclasses.replace(ctx, active=active))
-        return params, losses, theta
+        return params, losses, theta, pstate
 
-    return jax.jit(round_fn, donate_argnums=(0,)) if jit else round_fn
+    if pol.stateful:
+        def round_fn(params, batch, active, pstate):
+            return _advance(params, batch, active, pstate)
+    else:
+        def round_fn(params, batch, active):
+            return _advance(params, batch, active, ())[:3]
+
+    if jit:
+        round_fn = jax.jit(round_fn, donate_argnums=(0,))
+    round_fn.stateful = pol.stateful
+    return round_fn
+
+
+def build_split_async_round(grad_fn: Callable, axes: Dict, *, lr: float,
+                            beta: float = 0.9,
+                            policy="boltzmann",
+                            backend: str = "async_einsum",
+                            ctx: Optional[backends.AggregationContext]
+                            = None,
+                            jit: bool = True) -> Tuple[Callable, Callable]:
+    """The round split at the host's measurement point (measured-time mode).
+
+    ``measure_times=True`` needs the host in the loop BETWEEN the local
+    steps and the aggregation — the activity mask of Alg. 4 line 16 (the
+    first p arrivals) is derived from each worker's measured completion of
+    its local steps, so the fused single-program round of
+    ``build_async_round`` is split into two jitted programs:
+
+        ``local_fn(params, batch) -> (params, losses)``
+            tau local steps, no collectives — per-device completion of
+            THIS program is what ``measure_round_times`` observes;
+        ``agg_fn(params, losses, active, pstate)
+            -> (params, theta, pstate)``
+            masked policy theta + Eq. 10 aggregate + straggler late-join.
+    """
+    ctx = backends.DEFAULT_CONTEXT if ctx is None else ctx
+    backend_obj = _resolve_backend(backend, ctx)
+    pol = weights_mod.as_policy(policy)
+    w_axes = jax.tree.map(lambda ax: ("worker",) + tuple(ax), axes,
+                          is_leaf=_axes_is_leaf)
+
+    def local_fn(params, batch):
+        losses, grads = grad_fn(params, batch)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return params, losses
+
+    def agg_fn(params, losses, active, pstate):
+        theta, pstate = pol(losses, active, pstate)
+        params = backend_obj.aggregate(
+            params, w_axes, theta, beta,
+            ctx=dataclasses.replace(ctx, active=active))
+        return params, theta, pstate
+
+    if jit:
+        local_fn = jax.jit(local_fn, donate_argnums=(0,))
+        agg_fn = jax.jit(agg_fn, donate_argnums=(0,))
+    return local_fn, agg_fn
+
+
+def measure_round_times(x: jax.Array, w: int) -> np.ndarray:
+    """Measured per-device completion times of a worker-stacked output.
+
+    Blocks each addressable shard of ``x`` (device order) and records the
+    host clock as its data arrives: on a real mesh, a device's shards
+    become ready when THAT device finishes its program, so the recorded
+    instants are per-device arrival upper-bounds (monotone in block order —
+    a shard blocked later can only report later). Workers sharing a device
+    (w/p > 1 copies, or a single host device) share its time; downstream
+    tie-breaks are by worker index, matching the stable first-p-arrivals
+    rule. This is the measured signal that replaces the host
+    ``StepTimeModel``.
+    """
+    t0 = time.perf_counter()
+    times = np.full((w,), np.nan)
+    shards = sorted(x.addressable_shards, key=lambda s: s.device.id)
+    for sh in shards:
+        jax.block_until_ready(sh.data)
+        dt = time.perf_counter() - t0
+        idx = sh.index[0] if sh.index else slice(None)
+        times[idx] = dt
+    if np.isnan(times).any():              # non-addressable rows (multi-host)
+        times = np.where(np.isnan(times), np.nanmax(times), times)
+    return times
 
 
 def run_parallel_sgd_on_device(grad_fn: Callable, params0: Dict, axes: Dict,
@@ -198,8 +317,10 @@ def run_parallel_sgd_on_device(grad_fn: Callable, params0: Dict, axes: Dict,
                                tau: int, rounds: int, lr: float,
                                time_model: Optional[StepTimeModel] = None,
                                schedule: Optional[StragglerSchedule] = None,
+                               measure_times: bool = False,
                                a_tilde: float = 1.0, beta: float = 0.9,
                                strategy: str = "boltzmann",
+                               policy=None,
                                synchronous: bool = False,
                                backend: str = "async_shard_map",
                                ctx: Optional[backends.AggregationContext]
@@ -211,26 +332,79 @@ def run_parallel_sgd_on_device(grad_fn: Callable, params0: Dict, axes: Dict,
     aggregation spec. ``AsyncResult.params`` is the final worker-stacked
     parameter tree the parity harness compares leaf-for-leaf against the
     host simulation's.
+
+    ``policy`` (spec string or ``WeightPolicy``) selects the worker-
+    assessment policy; stateful policy state threads across the jitted
+    rounds. ``None`` keeps the legacy ``strategy``/``a_tilde`` kernels.
+
+    ``measure_times=True`` drives Alg. 4 line 16 from MEASURED per-device
+    round times instead of any host-side model: no ``time_model`` or
+    ``schedule`` is needed. The round splits at the measurement point
+    (``build_split_async_round``) — after each round's local steps the
+    host records every device's completion (``measure_round_times``), the
+    first ``n_workers`` arrivals form the aggregation set, and the measured
+    times are fed to the policy (``observe_times`` — the ``time_aware``
+    stage weights workers by real speed). ``AsyncResult.round_times`` holds
+    the measurements; ``wall`` is the sum of the per-round gate times
+    (the p-th measured arrival).
     """
+    w = n_workers + backups
+    pol = _resolve_policy(policy, strategy, a_tilde)
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), params0)
+
+    if measure_times:
+        if schedule is not None or time_model is not None:
+            raise ValueError(
+                "measure_times=True derives the activity schedule from "
+                "measured per-device round times; don't pass time_model= "
+                "or schedule= as well")
+        local_fn, agg_fn = build_split_async_round(
+            grad_fn, axes, lr=lr, beta=beta, policy=pol, backend=backend,
+            ctx=ctx)
+        pstate = pol.init_state(w)
+        losses_hist, times_hist = [], []
+        wall = 0.0
+        dropped = 0
+        for r in range(rounds):
+            batch = next(batches)                  # (w, tau*b_local, ...)
+            params, losses = local_fn(params, batch)
+            times = measure_round_times(losses, w)
+            order = np.argsort(times, kind="stable")
+            active = np.zeros((w,), bool)
+            active[order[:n_workers]] = True       # first p arrivals
+            wall += float(times[order[n_workers - 1]])
+            dropped += int(backups)
+            pstate = pol.observe_times(pstate, jnp.asarray(times))
+            params, _, pstate = agg_fn(params, losses, jnp.asarray(active),
+                                       pstate)
+            losses_hist.append(float(np.asarray(losses)[active].mean()))
+            times_hist.append(times)
+        return AsyncResult(np.asarray(losses_hist), wall, dropped, params,
+                           np.asarray(times_hist))
+
     if schedule is None:
         if time_model is None:
-            raise ValueError("pass either time_model= or schedule=")
+            raise ValueError("pass either time_model= or schedule= "
+                             "(or measure_times=True)")
         schedule = make_schedule(time_model, rounds=rounds, tau=tau,
                                  n_workers=n_workers, backups=backups,
                                  synchronous=synchronous)
     validate_active_rounds(schedule.active, rounds=rounds)
-    w = n_workers + backups
-    params = jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), params0)
     round_fn = build_async_round(grad_fn, axes, lr=lr, beta=beta,
                                  a_tilde=a_tilde, strategy=strategy,
-                                 backend=backend, ctx=ctx)
+                                 policy=pol, backend=backend, ctx=ctx)
+    pstate = pol.init_state(w)
 
     losses_hist = []
     for r in range(rounds):
         batch = next(batches)                      # (w, tau*b_local, ...)
         active = jnp.asarray(schedule.active[r])
-        params, losses, _ = round_fn(params, batch, active)
+        if round_fn.stateful:
+            params, losses, _, pstate = round_fn(params, batch, active,
+                                                 pstate)
+        else:
+            params, losses, _ = round_fn(params, batch, active)
         losses_np = np.asarray(losses)
         losses_hist.append(float(losses_np[schedule.active[r]].mean()))
 

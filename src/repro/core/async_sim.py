@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.core import aggregate as agg
 from repro.core import backends
-from repro.core.weights import compute_theta
+from repro.core import weights as weights_mod
+from repro.core.weights import compute_theta, no_active_error
 
 
 def masked_theta(losses: np.ndarray, active: np.ndarray,
@@ -34,9 +35,16 @@ def masked_theta(losses: np.ndarray, active: np.ndarray,
     approach) dominates the normalizing sum, collapses the active workers'
     normalized energies toward 0, and degenerates the Boltzmann weights to
     near-equal regardless of loss.
+
+    An all-False mask is rejected with the SAME error the traced device
+    path (``weights.masked_compute_theta``) raises on concrete masks —
+    host and device fail identically instead of the host returning the
+    empty-slice garbage it used to.
     """
     losses = np.asarray(losses)
     active = np.asarray(active, bool)
+    if active.size and not active.any():
+        raise no_active_error()
     theta_active = np.asarray(compute_theta(
         jnp.asarray(losses[active], jnp.float32), strategy, a_tilde))
     theta = np.zeros(losses.shape[0], np.float32)
@@ -99,10 +107,14 @@ def make_schedule(time_model: StepTimeModel, *, rounds: int, tau: int,
 
 class AsyncResult(NamedTuple):
     losses: np.ndarray          # per-round mean loss (over active workers)
-    wall: float                 # simulated wall-clock
+    wall: float                 # simulated (or measured) wall-clock
     dropped_rounds: int         # total straggler exclusions
     params: Optional[Dict] = None   # final worker-stacked parameter tree
                                     # (leaf-for-leaf parity vs async_device)
+    round_times: Optional[np.ndarray] = None
+                                # (rounds, w) MEASURED per-device round
+                                # times (async_device measure_times=True;
+                                # None when a host schedule drove the run)
 
 
 def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
@@ -112,6 +124,7 @@ def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
                      a_tilde: float = 1.0,
                      beta: float = 0.9, synchronous: bool = False,
                      strategy: str = "boltzmann",
+                     policy=None,
                      backend: str = "einsum",
                      schedule: Optional[StragglerSchedule] = None,
                      ctx: Optional[backends.AggregationContext] = None
@@ -123,6 +136,12 @@ def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
     ``backend`` names the aggregation backend (core/backends.py) applying
     Eq. 10 over the active workers; ``ctx`` carries its mesh/comm_dtype/
     n_pods knobs (defaults suit the meshless ``einsum`` family).
+
+    ``policy`` (a spec string or ``WeightPolicy``) selects the worker-
+    assessment policy; it overrides ``strategy``/``a_tilde`` and may be
+    stateful (the state threads across the simulated rounds), so this
+    event simulation stays the parity oracle for policy-driven on-device
+    runs too. ``None`` keeps the legacy ``masked_theta`` path bit-for-bit.
 
     ``schedule`` overrides ``time_model``: a precomputed activity schedule
     (``make_schedule``), so parity tests can inject the exact same straggler
@@ -136,6 +155,9 @@ def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
                                  n_workers=n_workers, backups=backups,
                                  synchronous=synchronous)
     w = n_workers + backups
+    pol = (None if policy is None
+           else weights_mod.as_policy(policy, default_a=a_tilde))
+    pstate = pol.init_state(w) if pol is not None else None
     params = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (w,) + x.shape), params0)
     w_axes = jax.tree.map(lambda ax: ("worker",) + tuple(ax), axes,
@@ -153,7 +175,13 @@ def run_parallel_sgd(loss_fn: Callable, grad_fn: Callable, params0: Dict,
         wall += float(schedule.round_wall[r])
         dropped += int((~active).sum())
 
-        theta = masked_theta(np.asarray(losses), active, a_tilde, strategy)
+        if pol is None:
+            theta = masked_theta(np.asarray(losses), active, a_tilde,
+                                 strategy)
+        else:
+            theta_j, pstate = pol(jnp.asarray(losses),
+                                  jnp.asarray(active), pstate)
+            theta = np.asarray(theta_j, np.float32)
         new_params = backends.aggregate_with(
             backend, params, w_axes, jnp.asarray(theta, jnp.float32), beta,
             ctx=ctx)

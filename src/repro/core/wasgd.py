@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import WASGDConfig
 from repro.core import backends
 from repro.core.order import judge_scores
-from repro.core.weights import compute_theta, omega, theta_entropy
+from repro.core.weights import omega, policy_from_config, theta_entropy
 
 
 class CommResult(NamedTuple):
@@ -27,12 +27,20 @@ class CommResult(NamedTuple):
 
 
 def communicate(params: Dict, axes: Dict, h: jax.Array, wcfg: WASGDConfig,
-                leaf_fn=None, mesh=None) -> CommResult:
+                leaf_fn=None, mesh=None, policy_state=None) -> CommResult:
     """One communication (lines 12-19 of Alg. 1), SPMD formulation.
 
     ``h``: (p,) loss energies. The paper's send/wait/arrange steps are
     subsumed by SPMD: ``h`` is already globally consistent (tiny all-gather)
     and the weighted sum lowers to one all-reduce over the worker axis.
+
+    theta comes from the worker-assessment policy the config selects
+    (``wcfg.policy`` spec or the legacy ``strategy``/``a_tilde`` aliases —
+    core/weights.py). ``communicate`` is the stateless compat entry point:
+    a stateful policy starts from a fresh state unless the caller threads
+    ``policy_state=`` through; either way the advanced state rides out in
+    ``metrics["policy_state"]`` (the train-step rules thread it through
+    ``comm_state`` instead).
 
     The aggregation spec comes from ``wcfg.backend`` — a two-axis
     ``"schedule:codec"`` composition, a legacy alias, or ``"auto"``
@@ -42,7 +50,8 @@ def communicate(params: Dict, axes: Dict, h: jax.Array, wcfg: WASGDConfig,
     context (core/backends.py) — every config knob reaches the computation.
     ``leaf_fn`` remains as a legacy escape hatch that bypasses the registry.
     """
-    theta = compute_theta(h, wcfg.strategy, wcfg.a_tilde)
+    pol = policy_from_config(wcfg)
+    theta, policy_state = pol(h, None, policy_state)
     new_params = backends.aggregate_from_config(wcfg, params, axes, theta,
                                                 mesh=mesh, leaf_fn=leaf_fn)
     scores = judge_scores(h)
@@ -51,5 +60,6 @@ def communicate(params: Dict, axes: Dict, h: jax.Array, wcfg: WASGDConfig,
         "omega": omega(theta),
         "h_mean": h.mean(),
         "h_min": h.min(),
+        "policy_state": policy_state,
     }
     return CommResult(new_params, theta, scores, metrics)

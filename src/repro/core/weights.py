@@ -1,21 +1,114 @@
-"""Weight evaluating functions (paper Sec. 3.2).
+"""Worker assessment — the **policy** axis of the aggregation API.
 
-Given per-worker loss energies ``h`` (shape ``(p,)``), produce normalized
-aggregation weights ``theta`` (summing to 1):
+The paper's decentralized scheme stands on its weight evaluating function:
+given per-worker loss energies ``h`` (shape ``(p,)``), produce normalized
+aggregation weights ``theta`` (summing to 1). WASGD+ *is* WASGD with a
+better one (Boltzmann, Eq. 13), and the design space is wider than one
+scalar knob — so worker assessment is a registered, composable axis
+(schedule x codec x **policy**), mirroring ``core/backends.py``.
+
+Weight evaluating functions of the paper (the stateless *kernels*)
+==================================================================
 
 * ``boltzmann`` (WASGD+, Eq. 13): theta_i = softmax(-a_tilde * h_i / sum(h))
   — Property 1: a→0 gives equal weights, a→inf broadcasts the best worker.
 * ``inverse`` (WASGD v1, Alg. 3): theta_i ∝ 1 / h_i.
 * ``equal``: theta_i = 1/p (SimuParallelSGD-style averaging).
 * ``best``: one-hot on the minimum energy (the a→inf limit).
+
+The ``WeightPolicy`` protocol
+=============================
+
+A policy is a jit-traceable, optionally *stateful* assessment of the
+workers::
+
+    state          = policy.init_state(p)                  # a pytree
+    theta, state   = policy(h, active, state, t)           # traced
+
+``h`` is the ``(p,)`` energy vector, ``active`` an optional ``(p,)`` bool
+mask (Alg. 4 rounds; ``None`` = everyone), ``state`` the policy's pytree
+(``()`` when stateless) and ``t`` an optional round index (``None`` = read
+the counter the state carries). Policy state rides ``comm_state`` through
+the train step exactly like the Alg. 4 activity mask already does.
+
+Spec grammar (``WASGDConfig.policy``)
+=====================================
+
+::
+
+    spec   := stage ("|" stage)*
+    stage  := name [ "(" arg ("," arg)* ")" ]
+    arg    := [key "="] value          # ints / floats / bools / bare words
+
+e.g. ``"boltzmann(a=8)|anneal(cosine)"``, ``"ema(0.9)|time_aware"``,
+``"trimmed(1)|boltzmann(a=4)"``. Stages compose by *role* (the written
+order only sequences stages of the same role):
+
+``kernel``    boltzmann(a=) | inverse | equal | best — the weight
+              evaluating function mapping (possibly transformed) energies
+              to theta. At most one per spec; omitted -> ``boltzmann``
+              with the config's ``a_tilde``.
+``energy``    transforms of ``h`` before the kernel sees it:
+              ``ema(decay=0.9)`` — per-worker EMA-smoothed energies (a
+              stale-robust Eq. 26 estimate; bias-corrected, masked
+              updates); ``time_aware(gamma=1.0)`` — scales energies by
+              measured per-device round times (slow worker -> inflated
+              energy -> smaller weight; Cheng et al. 2017 speed
+              weighting), fed by ``observe_times``.
+``mask``      refinements of the active set, robust to outlier workers:
+              ``topk(k)`` — only the k lowest-energy active workers get
+              weight; ``trimmed(k=1)`` — drop the k lowest AND k highest
+              energy active workers (guarded: a round too small to trim
+              keeps its mask).
+``modifier``  ``anneal(kind, rate=, period=, peak=)`` — schedules the
+              kernel's ``a`` over rounds t (the paper's equal→best
+              Property 1 interpolation as a curriculum): ``linear``
+              (a*(1+rate*t), the legacy ``a_schedule="anneal"``), ``exp``
+              (a*e^{rate*t}), ``cosine`` (half-cosine ramp from a to
+              a*peak over ``period`` rounds).
+
+Legacy aliases (byte-for-byte identical theta)
+==============================================
+
+``WASGDConfig.strategy``/``a_tilde`` resolve through the same registry:
+``strategy="boltzmann", a_tilde=x`` is the policy ``boltzmann(a=x)``;
+``a_schedule="anneal"`` appends ``|anneal(linear, rate=anneal_rate)``. The
+stateless kernels call the SAME free functions as always, so legacy configs
+are bitwise-identical (tests/test_policy.py holds them to it).
+
+Extending the axis::
+
+    from repro.core.weights import register_policy
+
+    @register_policy
+    class MyTransform:
+        name = "my_transform"
+        role = "energy"            # kernel | energy | mask | modifier
+        stateful = False
+        def transform(self, h, active, state, t): return h, state
+
+Every spec mentioning ``my_transform`` becomes selectable through
+``WASGDConfig.policy`` and is validated at config construction.
 """
 from __future__ import annotations
 
+import inspect
+import re
+from typing import Any, Dict, List, Optional, Protocol, Tuple, \
+    runtime_checkable
+
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 STRATEGIES = ("boltzmann", "inverse", "equal", "best")
 
+POLICY_ROLES = ("kernel", "energy", "mask", "modifier")
+
+
+# ---------------------------------------------------------------------------
+# The paper's weight evaluating functions (stateless reference ops)
+# ---------------------------------------------------------------------------
 
 def normalize_energy(h: jax.Array) -> jax.Array:
     """h'_i = h_i / sum_j h_j (Eq. 12 normalization)."""
@@ -42,6 +135,562 @@ def best_weights(h: jax.Array) -> jax.Array:
     return jax.nn.one_hot(jnp.argmin(h), h.shape[0], dtype=jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# All-False masks: reject early where the values are visible
+# ---------------------------------------------------------------------------
+
+def no_active_error() -> ValueError:
+    """The shared empty-round error: host and device paths fail identically
+    (``validate_active_rounds`` raises the per-round form of the same)."""
+    return ValueError(
+        "no active worker: an all-False activity mask has no Alg. 4 "
+        "aggregate to late-join (masked theta would be the softmax of an "
+        "all -inf row -> NaN); every round needs >= 1 active worker")
+
+
+def _reject_concrete_all_false(active) -> None:
+    """Raise ``no_active_error`` when a CONCRETE mask is all-False.
+
+    Traced masks cannot be inspected (their values only exist at run time),
+    so inside jit the documented contract stands: an all-False round yields
+    NaNs rather than silently invented weights. Everywhere the mask is a
+    host value — the numpy oracle, eager calls, schedule injection — the
+    config error surfaces HERE, at the same point of the program, instead
+    of as a numerical curiosity rounds later.
+    """
+    try:
+        concrete = np.asarray(active)
+    except Exception:                      # tracer: no values to check
+        return
+    if concrete.size and not concrete.any():
+        raise no_active_error()
+
+
+# ---------------------------------------------------------------------------
+# Policy protocol + stage registry
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class WeightPolicy(Protocol):
+    """One worker-assessment policy: stateful, jit-traceable theta."""
+
+    name: str
+    stateful: bool
+
+    def init_state(self, p: int) -> Any:
+        ...
+
+    def __call__(self, h: jax.Array, active: Optional[jax.Array] = None,
+                 state: Any = None, t: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Any]:
+        ...
+
+
+_STAGES: Dict[str, type] = {}
+
+
+def register_policy(cls=None, *, overwrite: bool = False):
+    """Register a policy stage class by its ``name`` (usable as decorator).
+
+    The class declares ``role`` (kernel | energy | mask | modifier) and the
+    role's method (``weights`` / ``transform`` / ``refine`` / ``factor``);
+    its ``__init__`` keywords become the stage's spec arguments.
+    """
+    def _register(c):
+        name = getattr(c, "name", None)
+        role = getattr(c, "role", None)
+        if not name or role not in POLICY_ROLES:
+            raise ValueError(
+                f"policy stage {c!r} needs a `name` and a `role` in "
+                f"{POLICY_ROLES}")
+        if name in _STAGES and not overwrite:
+            raise ValueError(f"weight policy {name!r} already registered; "
+                             f"pass overwrite=True to replace")
+        _STAGES[name] = c
+        return c
+
+    return _register(cls) if cls is not None else _register
+
+
+def available_policies() -> Tuple[str, ...]:
+    """Registered stage names (the vocabulary of the policy spec grammar)."""
+    return tuple(sorted(_STAGES))
+
+
+# ---------------------------------------------------------------------------
+# Kernels (role "kernel"): the four paper strategies, masked + unmasked
+# ---------------------------------------------------------------------------
+
+@register_policy
+class Boltzmann:
+    """Eq. 13. ``a=None`` inherits the config's ``a_tilde`` at resolution."""
+    name = "boltzmann"
+    role = "kernel"
+    stateful = False
+    uses_a = True
+
+    def __init__(self, a: Optional[float] = None):
+        self.a = None if a is None else float(a)
+
+    def weights(self, h, active, a):
+        if active is None:
+            return boltzmann_weights(h, a)
+        # normalize over the ACTIVE energies, then softmax with inactive
+        # logits at -inf == softmax over the compacted active subset.
+        h = h.astype(jnp.float32)
+        m = active.astype(jnp.float32)
+        hn = h / jnp.maximum((m * h).sum(), 1e-30)
+        return jax.nn.softmax(jnp.where(active, -a * hn, -jnp.inf))
+
+
+@register_policy
+class Inverse:
+    name = "inverse"
+    role = "kernel"
+    stateful = False
+    uses_a = False
+
+    def weights(self, h, active, a):
+        if active is None:
+            return inverse_weights(h)
+        h = h.astype(jnp.float32)
+        inv = active.astype(jnp.float32) / jnp.maximum(h, 1e-30)
+        return inv / jnp.maximum(inv.sum(), 1e-30)
+
+
+@register_policy
+class Equal:
+    name = "equal"
+    role = "kernel"
+    stateful = False
+    uses_a = False
+
+    def weights(self, h, active, a):
+        if active is None:
+            return equal_weights(h.shape[0])
+        m = active.astype(jnp.float32)
+        return m / jnp.maximum(m.sum(), 1.0)
+
+
+@register_policy
+class Best:
+    name = "best"
+    role = "kernel"
+    stateful = False
+    uses_a = False
+
+    def weights(self, h, active, a):
+        if active is None:
+            return best_weights(h)
+        # argmin over active energies; ties break to the first active worker,
+        # matching jnp.argmin over the compacted subset. An all-False mask
+        # yields NaNs (0/0) like the other kernels, not a silent one-hot
+        # on argmin-of-all-inf (worker 0).
+        h = h.astype(jnp.float32)
+        m = active.astype(jnp.float32)
+        oh = jax.nn.one_hot(jnp.argmin(jnp.where(active, h, jnp.inf)),
+                            h.shape[0], dtype=jnp.float32) * m
+        return oh / oh.sum()
+
+
+def _kernel(strategy: str):
+    cls = _STAGES.get(strategy)
+    if cls is None or getattr(cls, "role", None) != "kernel":
+        kernels = [n for n, c in sorted(_STAGES.items())
+                   if getattr(c, "role", None) == "kernel"]
+        raise ValueError(f"unknown weighting strategy {strategy!r}; "
+                         f"registered kernel policies: {kernels}")
+    return cls()
+
+
+# ---------------------------------------------------------------------------
+# Energy transforms (role "energy")
+# ---------------------------------------------------------------------------
+
+@register_policy
+class Ema:
+    """Per-worker EMA over the loss energies — a stale-robust Eq. 26
+    estimate: one noisy round no longer swings theta, and a worker's weight
+    reflects its trajectory. Bias-corrected (round 0 evaluates to the raw
+    energy); inactive workers' averages freeze (masked update), so a
+    straggler re-joins with its pre-exclusion estimate intact."""
+    name = "ema"
+    role = "energy"
+    stateful = True
+
+    def __init__(self, decay: float = 0.9):
+        decay = float(decay)
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"ema decay must be in [0, 1), got {decay}")
+        self.decay = decay
+
+    def init_state(self, p: int):
+        return {"h_bar": jnp.zeros((p,), jnp.float32),
+                "n": jnp.zeros((p,), jnp.float32)}
+
+    def transform(self, h, active, state, t):
+        h = h.astype(jnp.float32)
+        m = (jnp.ones(h.shape, jnp.float32) if active is None
+             else active.astype(jnp.float32))
+        n = state["n"] + m
+        h_bar = jnp.where(m > 0,
+                          self.decay * state["h_bar"] + (1 - self.decay) * h,
+                          state["h_bar"])
+        corr = 1.0 - self.decay ** jnp.maximum(n, 1.0)
+        h_hat = jnp.where(n > 0, h_bar / jnp.maximum(corr, 1e-30), h)
+        return h_hat, {"h_bar": h_bar, "n": n}
+
+
+@register_policy
+class TimeAware:
+    """Weight workers by *measured speed* (Cheng et al. 2017): energies are
+    scaled by ``(round_time / mean_active_round_time) ** gamma``, so a slow
+    worker's energy inflates and its theta shrinks. The times come from
+    ``observe_times`` — the on-device async driver records per-device round
+    times and feeds them here (``run_parallel_sgd_on_device(
+    measure_times=True)``), retiring the host ``StepTimeModel`` as the only
+    signal. Until the first observation the transform is the identity."""
+    name = "time_aware"
+    role = "energy"
+    stateful = True
+
+    def __init__(self, gamma: float = 1.0):
+        self.gamma = float(gamma)
+
+    def init_state(self, p: int):
+        return {"times": jnp.ones((p,), jnp.float32),
+                "seen": jnp.zeros((), bool)}
+
+    def transform(self, h, active, state, t):
+        h = h.astype(jnp.float32)
+        tm = state["times"]
+        m = (jnp.ones(h.shape, jnp.float32) if active is None
+             else active.astype(jnp.float32))
+        mean = (m * tm).sum() / jnp.maximum(m.sum(), 1.0)
+        scale = (tm / jnp.maximum(mean, 1e-30)) ** self.gamma
+        return jnp.where(state["seen"], h * scale, h), state
+
+    def observe(self, state, times):
+        return {"times": jnp.asarray(times, jnp.float32),
+                "seen": jnp.ones((), bool)}
+
+
+# ---------------------------------------------------------------------------
+# Mask refinements (role "mask"): robust to outlier workers
+# ---------------------------------------------------------------------------
+
+def _as_mask(h, active):
+    return (jnp.ones(h.shape, bool) if active is None
+            else active.astype(bool))
+
+
+def _active_ranks(h, act):
+    """Rank of each worker by energy among the ACTIVE set (stable ties);
+    inactive workers rank past every active one."""
+    key = jnp.where(act, h.astype(jnp.float32), jnp.inf)
+    order = jnp.argsort(key, stable=True)
+    return jnp.argsort(order, stable=True)
+
+
+@register_policy
+class TopK:
+    """Keep only the k lowest-energy active workers (theta = 0 elsewhere).
+    Rounds with fewer than k active workers keep them all."""
+    name = "topk"
+    role = "mask"
+    stateful = False
+
+    def __init__(self, k: int):
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"topk needs k >= 1, got {k}")
+        self.k = k
+
+    def refine(self, h, active):
+        act = _as_mask(h, active)
+        return act & (_active_ranks(h, act) < self.k)
+
+
+@register_policy
+class Trimmed:
+    """Drop the k highest AND k lowest energy active workers before
+    weighting — robust to both failure outliers (diverging loss) and
+    too-good-to-be-true ones (a corrupted shard scoring near zero). A round
+    with <= 2k active workers is left untrimmed rather than emptied."""
+    name = "trimmed"
+    role = "mask"
+    stateful = False
+
+    def __init__(self, k: int = 1):
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"trimmed needs k >= 1, got {k}")
+        self.k = k
+
+    def refine(self, h, active):
+        act = _as_mask(h, active)
+        ranks = _active_ranks(h, act)
+        n_act = act.sum()
+        keep = act & (ranks >= self.k) & (ranks < n_act - self.k)
+        return jnp.where(n_act > 2 * self.k, keep, act)
+
+
+# ---------------------------------------------------------------------------
+# Kernel modifiers (role "modifier")
+# ---------------------------------------------------------------------------
+
+@register_policy
+class Anneal:
+    """Schedule the kernel's ``a`` over rounds t — the paper's Property 1
+    interpolation (a→0 equal, a→inf best) as an explore→exploit curriculum.
+
+    ``linear``  a * (1 + rate*t)           (the legacy ``a_schedule``)
+    ``exp``     a * e^{rate*t}
+    ``cosine``  a * (1 + (peak-1) * (1 - cos(pi * min(t/period, 1))) / 2)
+                — smooth ramp from a to a*peak over ``period`` rounds.
+    """
+    name = "anneal"
+    role = "modifier"
+    stateful = True                      # needs the round counter t
+    KINDS = ("linear", "exp", "cosine")
+
+    def __init__(self, kind: str = "linear", rate: float = 0.05,
+                 period: float = 100.0, peak: float = 100.0):
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown anneal kind {kind!r}; "
+                             f"known: {self.KINDS}")
+        self.kind = kind
+        self.rate = float(rate)
+        self.period = float(period)
+        self.peak = float(peak)
+
+    def factor(self, t):
+        t = jnp.asarray(t, jnp.float32)
+        if self.kind == "linear":
+            return 1.0 + self.rate * t
+        if self.kind == "exp":
+            return jnp.exp(self.rate * t)
+        frac = jnp.clip(t / self.period, 0.0, 1.0)
+        return 1.0 + (self.peak - 1.0) * 0.5 * (1.0 - jnp.cos(jnp.pi * frac))
+
+
+# ---------------------------------------------------------------------------
+# The composed pipeline policy
+# ---------------------------------------------------------------------------
+
+class PipelinePolicy:
+    """A parsed policy spec: energy transforms -> mask refinements -> one
+    (annealed) kernel. Fully jit-traceable; state is a flat dict keyed by
+    stage position (``()`` when every stage is stateless), carrying the
+    round counter ``t`` whenever a modifier needs it.
+    """
+
+    def __init__(self, stages: List[Any], default_a: float = 1.0,
+                 spec: Optional[str] = None):
+        kernels = [s for s in stages if s.role == "kernel"]
+        if len(kernels) > 1:
+            raise ValueError(
+                f"policy spec names {len(kernels)} kernels "
+                f"({[k.name for k in kernels]}); compose at most one "
+                f"weight evaluating function per spec")
+        self.kernel = kernels[0] if kernels else Boltzmann()
+        self.energy_stages = [s for s in stages if s.role == "energy"]
+        self.mask_stages = [s for s in stages if s.role == "mask"]
+        self.modifiers = [s for s in stages if s.role == "modifier"]
+        if self.modifiers and not getattr(self.kernel, "uses_a", False):
+            raise ValueError(
+                f"'{self.modifiers[0].name}' schedules the kernel's 'a', "
+                f"but kernel '{self.kernel.name}' takes none; use the "
+                f"'boltzmann' kernel (or drop the modifier)")
+        a = getattr(self.kernel, "a", None)
+        self.a = float(default_a) if a is None else float(a)
+        self._needs_t = any(getattr(m, "stateful", False)
+                            for m in self.modifiers)
+        self.stateful = self._needs_t or any(
+            getattr(s, "stateful", False)
+            for s in self.energy_stages + self.mask_stages)
+        self.name = spec if spec is not None else "|".join(
+            s.name for s in stages) or self.kernel.name
+        self.spec = self.name
+
+    def _stage_key(self, i: int, stage) -> str:
+        return f"s{i}_{stage.name}"
+
+    def init_state(self, p: int):
+        st = {}
+        for i, s in enumerate(self.energy_stages):
+            if getattr(s, "stateful", False):
+                st[self._stage_key(i, s)] = s.init_state(p)
+        if self._needs_t:
+            st["t"] = jnp.zeros((), jnp.float32)
+        return st if st else ()
+
+    def __call__(self, h, active=None, state=None, t=None):
+        h = jnp.asarray(h)
+        if active is not None:
+            _reject_concrete_all_false(active)
+        if state is None or (isinstance(state, tuple) and not state):
+            state = self.init_state(h.shape[0])   # fresh/empty -> round 0
+        st = dict(state) if isinstance(state, dict) else {}
+        if t is None:
+            t = st.get("t", jnp.zeros((), jnp.float32))
+        for i, s in enumerate(self.energy_stages):
+            key = self._stage_key(i, s)
+            h, sub = s.transform(h, active, st.get(key), t)
+            if getattr(s, "stateful", False):
+                st[key] = sub
+        act = None if active is None else active.astype(bool)
+        for s in self.mask_stages:
+            act = s.refine(h, act)
+        a_eff = self.a
+        for m in self.modifiers:
+            a_eff = a_eff * m.factor(t)
+        theta = self.kernel.weights(h, act, a_eff)
+        if self._needs_t:
+            st["t"] = jnp.asarray(t, jnp.float32) + 1.0
+        return theta, (st if st else ())
+
+    def observe_times(self, state, times):
+        """Feed measured per-device round times to the stages that consume
+        them (``time_aware``); a no-op for every other pipeline."""
+        if not isinstance(state, dict):
+            return state
+        st = dict(state)
+        for i, s in enumerate(self.energy_stages):
+            key = self._stage_key(i, s)
+            if hasattr(s, "observe") and key in st:
+                st[key] = s.observe(st[key], times)
+        return st
+
+    def __repr__(self):
+        return f"WeightPolicy({self.spec!r})"
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing + config resolution
+# ---------------------------------------------------------------------------
+
+_STAGE_RE = re.compile(r"([A-Za-z_]\w*)\s*(?:\((.*)\))?\s*$", re.S)
+
+
+def _parse_value(tok: str):
+    tok = tok.strip()
+    low = tok.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    for conv in (int, float):
+        try:
+            return conv(tok)
+        except ValueError:
+            pass
+    return tok
+
+
+def _parse_args(argstr: Optional[str]):
+    args, kwargs = [], {}
+    if not argstr or not argstr.strip():
+        return args, kwargs
+    for tok in argstr.split(","):
+        if "=" in tok:
+            k, v = tok.split("=", 1)
+            kwargs[k.strip()] = _parse_value(v)
+        else:
+            if kwargs:
+                raise ValueError(
+                    f"positional policy argument {tok.strip()!r} after a "
+                    f"keyword argument")
+            args.append(_parse_value(tok))
+    return args, kwargs
+
+
+def parse_policy(spec: str, default_a: float = 1.0) -> PipelinePolicy:
+    """Parse a policy spec string into a ``PipelinePolicy``.
+
+    Raises ``ValueError`` naming the registered policies on an unknown
+    stage, and on malformed arguments — at parse time, i.e. at config
+    construction, not deep inside tracing.
+    """
+    stages = []
+    for part in spec.split("|"):
+        part = part.strip()
+        m = _STAGE_RE.match(part) if part else None
+        if m is None:
+            raise ValueError(
+                f"malformed stage {part!r} in policy spec {spec!r}; "
+                f"expected 'name' or 'name(arg, key=value, ...)'")
+        name, argstr = m.group(1), m.group(2)
+        cls = _STAGES.get(name)
+        if cls is None:
+            raise ValueError(
+                f"unknown weight policy {name!r} in spec {spec!r}; "
+                f"registered policies: {list(available_policies())}")
+        args, kwargs = _parse_args(argstr)
+        try:
+            stage = cls(*args, **kwargs)
+        except TypeError as e:
+            sig = str(inspect.signature(cls.__init__)).replace("self, ", "") \
+                .replace("self", "")
+            raise ValueError(
+                f"bad arguments for policy stage {part!r}: {e}; "
+                f"{name} takes {sig}") from None
+        stages.append(stage)
+    return PipelinePolicy(stages, default_a=default_a, spec=spec)
+
+
+def as_policy(policy, default_a: float = 1.0) -> WeightPolicy:
+    """Spec string -> parsed pipeline; a policy object passes through."""
+    if isinstance(policy, str):
+        return parse_policy(policy, default_a=default_a)
+    if isinstance(policy, WeightPolicy):
+        return policy
+    raise TypeError(f"expected a policy spec string or a WeightPolicy, "
+                    f"got {type(policy).__name__}")
+
+
+def policy_from_config(wcfg) -> PipelinePolicy:
+    """Resolve a ``WASGDConfig``-shaped object to its ``WeightPolicy``.
+
+    An explicit ``wcfg.policy`` spec wins (its kernel's missing ``a``
+    defaults to ``wcfg.a_tilde``). Otherwise the legacy knobs alias in:
+    ``strategy``/``a_tilde`` select the bare kernel, and
+    ``a_schedule="anneal"`` appends the linear anneal modifier (only where
+    the kernel has an ``a`` to anneal — matching the legacy rule, where the
+    schedule was a no-op for a-less strategies).
+    """
+    spec = getattr(wcfg, "policy", "") or ""
+    a = float(getattr(wcfg, "a_tilde", 1.0))
+    if spec:
+        return parse_policy(spec, default_a=a)
+    strategy = getattr(wcfg, "strategy", "boltzmann")
+    kernel_cls = _STAGES.get(strategy)
+    if kernel_cls is None or getattr(kernel_cls, "role", None) != "kernel":
+        _kernel(strategy)                          # raises the listing error
+    if getattr(wcfg, "a_schedule", "constant") == "anneal" \
+            and getattr(kernel_cls, "uses_a", False):
+        rate = float(getattr(wcfg, "anneal_rate", 0.05))
+        return parse_policy(f"{strategy}|anneal(linear, rate={rate})",
+                            default_a=a)
+    return parse_policy(strategy, default_a=a)
+
+
+def validate_config_spec(strategy: str, policy: str = "") -> None:
+    """Config-construction-time validation (``WASGDConfig.__post_init__``):
+    an unknown strategy or unparsable policy spec fails HERE with the
+    registered policy names, not deep inside tracing."""
+    _kernel(strategy)
+    if policy:
+        parse_policy(policy)
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry points (the stateless kernels, unchanged signatures)
+# ---------------------------------------------------------------------------
+
+def compute_theta(h: jax.Array, strategy: str = "boltzmann",
+                  a_tilde: float = 1.0) -> jax.Array:
+    return _kernel(strategy).weights(h, None, a_tilde)
+
+
 def masked_compute_theta(h: jax.Array, active: jax.Array,
                          a_tilde: float = 1.0,
                          strategy: str = "boltzmann") -> jax.Array:
@@ -56,47 +705,21 @@ def masked_compute_theta(h: jax.Array, active: jax.Array,
     signature deliberately mirrors that host-side twin's
     ``(losses, active, a_tilde, strategy)`` order.
 
-    At least one worker must be active; an all-False mask yields NaNs or
-    zeros (e.g. the softmax of an all ``-inf`` row), matching the host
-    path's empty-slice garbage rather than silently inventing weights.
+    At least one worker must be active. A *concrete* all-False mask is
+    rejected eagerly with the same error the async drivers raise at
+    schedule injection (``validate_active_rounds``); a traced all-False
+    mask — invisible until run time — keeps the documented contract of
+    yielding NaNs (e.g. the softmax of an all ``-inf`` row) rather than
+    silently inventing weights.
     """
+    _reject_concrete_all_false(active)
     h = h.astype(jnp.float32)
-    active = active.astype(bool)
-    m = active.astype(jnp.float32)
-    if strategy == "boltzmann":
-        # normalize over the ACTIVE energies, then softmax with inactive
-        # logits at -inf == softmax over the compacted active subset.
-        hn = h / jnp.maximum((m * h).sum(), 1e-30)
-        logits = jnp.where(active, -a_tilde * hn, -jnp.inf)
-        return jax.nn.softmax(logits)
-    if strategy == "inverse":
-        inv = m / jnp.maximum(h, 1e-30)
-        return inv / jnp.maximum(inv.sum(), 1e-30)
-    if strategy == "equal":
-        return m / jnp.maximum(m.sum(), 1.0)
-    if strategy == "best":
-        # argmin over active energies; ties break to the first active worker,
-        # matching jnp.argmin over the compacted subset. An all-False mask
-        # yields NaNs (0/0) like the other strategies, not a silent one-hot
-        # on argmin-of-all-inf (worker 0).
-        oh = jax.nn.one_hot(jnp.argmin(jnp.where(active, h, jnp.inf)),
-                            h.shape[0], dtype=jnp.float32) * m
-        return oh / oh.sum()
-    raise ValueError(f"unknown weighting strategy {strategy!r}")
+    return _kernel(strategy).weights(h, active.astype(bool), a_tilde)
 
 
-def compute_theta(h: jax.Array, strategy: str = "boltzmann",
-                  a_tilde: float = 1.0) -> jax.Array:
-    if strategy == "boltzmann":
-        return boltzmann_weights(h, a_tilde)
-    if strategy == "inverse":
-        return inverse_weights(h)
-    if strategy == "equal":
-        return equal_weights(h.shape[0])
-    if strategy == "best":
-        return best_weights(h)
-    raise ValueError(f"unknown weighting strategy {strategy!r}")
-
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
 
 def theta_entropy(theta: jax.Array) -> jax.Array:
     """Diagnostic: entropy of the weight distribution (log p = equal)."""

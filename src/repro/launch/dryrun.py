@@ -169,6 +169,10 @@ def main():
                          "'rs_ag:int8'), a legacy alias, or 'auto'; empty "
                          "composes it from the legacy boolean flags "
                          "(core/backends.py)")
+    ap.add_argument("--policy", default="",
+                    help="worker-assessment policy spec (core/weights.py), "
+                         "e.g. 'ema(0.9)|time_aware'; stateful policy state "
+                         "rides comm_state into the compiled round")
     ap.add_argument("--expert-sharding", default=None,
                     choices=["ep_data", "worker"])
     ap.add_argument("--dp-workers", action="store_true",
@@ -197,6 +201,7 @@ def main():
     from repro.configs.base import WASGDConfig
     tcfg = TrainConfig(wasgd=WASGDConfig(
         tau=args.tau, comm_dtype=args.comm_dtype, backend=args.backend,
+        policy=args.policy,
         hierarchical=args.hierarchical, n_pods=2 if args.hierarchical else 1,
         async_mode=args.async_mode))
     cfg_overrides = {}

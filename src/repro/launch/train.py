@@ -37,6 +37,11 @@ def main():
     ap.add_argument("--a-tilde", type=float, default=1.0)
     ap.add_argument("--strategy", default="boltzmann",
                     choices=["boltzmann", "inverse", "equal", "best"])
+    ap.add_argument("--policy", default="",
+                    help="worker-assessment policy spec (core/weights.py), "
+                         "e.g. 'boltzmann(a=8)|anneal(cosine)', "
+                         "'ema(0.9)|time_aware', 'trimmed(1)|boltzmann'; "
+                         "empty resolves --strategy/--a-tilde as aliases")
     ap.add_argument("--rule", default="wasgd",
                     choices=["wasgd", "spsgd", "easgd", "omwu", "mmwu", "seq"])
     ap.add_argument("--lr", type=float, default=0.03)
@@ -60,7 +65,7 @@ def main():
     tcfg = TrainConfig(
         learning_rate=args.lr, optimizer="sgd",
         wasgd=WASGDConfig(tau=args.tau, beta=args.beta, a_tilde=args.a_tilde,
-                          strategy=args.strategy))
+                          strategy=args.strategy, policy=args.policy))
 
     toks = make_tokens(0, 2048, args.seq, cfg.vocab_size)
     data = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.weights import policy_from_config
 from repro.models import abstract_params, loss_fn as lm_loss
 from repro.models.param import add_worker_axis, is_expert_path
 from repro.optim import Optimizer, make_optimizer
@@ -46,12 +47,33 @@ def abstract_lm_state(cfg: ModelConfig, tcfg: TrainConfig, n_workers: int
     opt_shapes = jax.eval_shape(optimizer.init, shapes)
     o_axes = opt_axes_like(optimizer.name, opt_shapes, axes)
 
-    # async on-device rounds carry the (w,) Alg. 4 activity mask in
-    # comm_state (train/step.py:async_wasgd_rule); sync rounds carry ().
+    # comm_state mirrors train/step.py:init_comm_state: the (w,) Alg. 4
+    # activity mask for on-device async rounds, the worker-assessment
+    # policy's state when it is stateful (riding alongside the mask as
+    # {"active", "policy"} in the async case), () otherwise.
+    pol = policy_from_config(tcfg.wasgd)
+    pstate = pol.init_state(n_workers)         # tiny concrete leaves
+
+    def _sds(x):
+        return jax.ShapeDtypeStruct(jnp.shape(x), x.dtype)
+
+    def _pax(x):
+        shp = jnp.shape(x)
+        return tuple("worker" if (i == 0 and shp[0] == n_workers) else None
+                     for i in range(len(shp)))
+
+    pol_shapes = jax.tree.map(_sds, pstate)
+    pol_axes = jax.tree.map(_pax, pstate)
     on_device_async = tcfg.wasgd.async_mode == "on_device"
-    comm_shapes = (jax.ShapeDtypeStruct((n_workers,), jnp.bool_)
-                   if on_device_async else ())
-    comm_axes = ("worker",) if on_device_async else ()
+    if on_device_async:
+        mask_shape = jax.ShapeDtypeStruct((n_workers,), jnp.bool_)
+        if pol.stateful:
+            comm_shapes = {"active": mask_shape, "policy": pol_shapes}
+            comm_axes = {"active": ("worker",), "policy": pol_axes}
+        else:
+            comm_shapes, comm_axes = mask_shape, ("worker",)
+    else:
+        comm_shapes, comm_axes = pol_shapes, pol_axes
     state_shapes = TrainState(
         step=jax.ShapeDtypeStruct((), jnp.int32),
         params=shapes,

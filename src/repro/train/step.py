@@ -28,7 +28,7 @@ from repro.core import backends
 from repro.core import baselines as bl
 from repro.core.energy import record_mask
 from repro.core.order import judge_scores
-from repro.core.weights import (compute_theta, masked_compute_theta, omega,
+from repro.core.weights import (compute_theta, omega, policy_from_config,
                                 theta_entropy)
 from repro.optim import Optimizer
 from repro.train.state import TrainState
@@ -58,7 +58,14 @@ def wasgd_rule(wcfg: WASGDConfig, leaf_fn=None, mesh=None, overlap=None):
     identical with or without it. The built rule also accepts a per-call
     ``overlap=`` keyword overriding the build-time thunk — that is how the
     pipelined train step threads a fresh seam closure (over this round's
-    params and the staged next batch) into every invocation."""
+    params and the staged next batch) into every invocation.
+
+    theta comes from the configured worker-assessment policy
+    (``wcfg.policy`` spec, or the legacy ``strategy``/``a_tilde``/
+    ``a_schedule`` aliases — core/weights.py:policy_from_config); a stateful
+    policy's state IS ``comm_state`` here, threaded through every round
+    (the legacy ``a_schedule="anneal"`` round counter now rides as the
+    anneal policy's ``{"t": ...}`` state)."""
     if leaf_fn is None:
         # fail fast at build time, not at the first jitted step: unknown
         # backend names/specs, missing meshes, and a degenerate n_pods are
@@ -80,17 +87,10 @@ def wasgd_rule(wcfg: WASGDConfig, leaf_fn=None, mesh=None, overlap=None):
                     "'hierarchical' aggregation schedule needs "
                     f"WASGDConfig.n_pods >= 2 (got {wcfg.n_pods})")
 
+    pol = policy_from_config(wcfg)
+
     def rule(params, axes, h, comm_state, overlap=overlap):
-        if wcfg.a_schedule == "anneal":
-            # beyond-paper: simulated-annealing-style temperature schedule on
-            # the paper's own Boltzmann weights — start near equal weighting
-            # (exploration), cool toward best-worker broadcast (exploitation).
-            t = comm_state if isinstance(comm_state, jax.Array)                 else jnp.zeros((), jnp.float32)
-            a_eff = wcfg.a_tilde * (1.0 + wcfg.anneal_rate * t)
-            comm_state = t + 1.0
-        else:
-            a_eff = wcfg.a_tilde
-        theta = compute_theta(h, wcfg.strategy, a_eff)
+        theta, comm_state = pol(h, None, comm_state)
         res = backends.aggregate_from_config(
             wcfg, params, axes, theta, mesh=mesh, leaf_fn=leaf_fn,
             overlap=overlap)
@@ -112,12 +112,15 @@ def async_wasgd_rule(wcfg: WASGDConfig, mesh=None, overlap=None):
     core/async_device.py) as part of the jitted round. ``overlap`` is the
     same compute-thunk hook as ``wasgd_rule``'s (build-time default,
     per-call ``overlap=`` override).
+
+    With a *stateful* worker-assessment policy (``wcfg.policy`` — e.g.
+    ``"ema(0.9)"`` or an anneal schedule) the policy state rides
+    ``comm_state`` ALONGSIDE the mask: ``comm_state = {"active": mask,
+    "policy": state}``. The host loop replaces only ``"active"`` per round;
+    the policy state threads through the jitted rounds untouched by the
+    host. (The legacy bare-mask comm_state is kept for stateless policies,
+    bitwise-compatibly.)
     """
-    if wcfg.a_schedule == "anneal":
-        raise ValueError(
-            "async_mode='on_device' uses comm_state for the activity mask; "
-            "the 'anneal' a_schedule (which also rides comm_state) is not "
-            "supported in the same run")
     name = backends.backend_name_from_config(wcfg)
     if name != "auto":
         name = async_device.async_backend_name(name)
@@ -126,10 +129,15 @@ def async_wasgd_rule(wcfg: WASGDConfig, mesh=None, overlap=None):
             raise ValueError(
                 f"aggregation backend {backend.name!r} needs a mesh; pass "
                 f"mesh= through Trainer/build_train_step/async_wasgd_rule")
+    pol = policy_from_config(wcfg)
 
     def rule(params, axes, h, comm_state, overlap=overlap):
-        active = comm_state                        # (w,) bool mask
-        theta = masked_compute_theta(h, active, wcfg.a_tilde, wcfg.strategy)
+        if pol.stateful:
+            active = comm_state["active"]          # (w,) bool mask
+            pstate = comm_state["policy"]
+        else:
+            active, pstate = comm_state, ()
+        theta, pstate = pol(h, active, pstate)
         ctx = dataclasses.replace(
             backends.context_from_config(wcfg, mesh), active=active)
         nm = name
@@ -146,7 +154,9 @@ def async_wasgd_rule(wcfg: WASGDConfig, mesh=None, overlap=None):
         else:
             new_params = backends.aggregate_with(nm, params, axes, theta,
                                                  wcfg.beta, ctx=ctx)
-        return new_params, comm_state, theta, metrics
+        out_comm = ({"active": active, "policy": pstate} if pol.stateful
+                    else comm_state)
+        return new_params, out_comm, theta, metrics
     return rule
 
 
@@ -451,10 +461,14 @@ def init_comm_state(rule_name: str, params: Dict, axes: Dict, n_workers: int,
         return bl.easgd_init(params, axes)
     if rule_name in ("omwu", "mmwu", "mwu"):
         return bl.mwu_init(n_workers)
-    if wcfg is not None and wcfg.async_mode == "on_device":
+    if wcfg is None or rule_name not in ("wasgd", "wasgd+"):
+        return ()
+    pol = policy_from_config(wcfg)
+    pstate = pol.init_state(n_workers)
+    if wcfg.async_mode == "on_device":
         # Alg. 4 activity mask; all-active until the host loop injects the
-        # round's straggler set (Trainer.run straggler_schedule=).
-        return jnp.ones((n_workers,), bool)
-    if wcfg is not None and wcfg.a_schedule == "anneal":
-        return jnp.zeros((), jnp.float32)
-    return ()
+        # round's straggler set (Trainer.run straggler_schedule=). A
+        # stateful policy's state rides alongside it.
+        mask = jnp.ones((n_workers,), bool)
+        return {"active": mask, "policy": pstate} if pol.stateful else mask
+    return pstate

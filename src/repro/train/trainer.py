@@ -197,8 +197,15 @@ class Trainer:
                 else:
                     batch = next(batches)
                 if active_rounds is not None:
-                    self.state = self.state._replace(
-                        comm_state=jnp.asarray(active_rounds[r]))
+                    # comm_state is the bare (w,) mask for stateless
+                    # policies, or {"active": mask, "policy": state} when a
+                    # stateful worker-assessment policy rides along — only
+                    # the mask is the host's to replace.
+                    mask = jnp.asarray(active_rounds[r])
+                    cs = self.state.comm_state
+                    cs = ({**cs, "active": mask} if isinstance(cs, dict)
+                          else mask)
+                    self.state = self.state._replace(comm_state=cs)
                 if self.pipeline is not None:
                     if carry is None:
                         carry = self._primer(self.state.params, batch)

@@ -421,12 +421,31 @@ def test_async_rule_all_active_equals_sync_rule():
     assert _max_leaf_err(sync, asy) < 1e-6
 
 
-def test_async_rule_rejects_anneal_schedule():
+def test_async_rule_anneal_rides_comm_state_with_mask():
+    """The anneal schedule used to be REJECTED on-device (comm_state was
+    single-purpose: the activity mask). Under the policy axis the stateful
+    policy's state rides comm_state alongside the mask — so annealing and
+    Alg. 4 straggler rounds now compose, and each round's theta matches the
+    annealed Boltzmann weights at the round's counter value."""
     from repro.configs.base import WASGDConfig
-    from repro.train.step import async_wasgd_rule
-    with pytest.raises(ValueError, match="anneal"):
-        async_wasgd_rule(WASGDConfig(async_mode="on_device",
-                                     a_schedule="anneal"))
+    from repro.train.step import async_wasgd_rule, init_comm_state
+    from repro.core.weights import boltzmann_weights
+
+    w, rate, a = 4, 0.5, 2.0
+    params, axes = _stacked_fixture(w)
+    wcfg = WASGDConfig(async_mode="on_device", a_schedule="anneal",
+                       anneal_rate=rate, a_tilde=a)
+    rule = async_wasgd_rule(wcfg)
+    comm = init_comm_state("wasgd", params, axes, w, wcfg=wcfg)
+    assert set(comm) == {"active", "policy"}
+    h = jnp.array([0.5, 1.0, 2.0, 0.1])
+    active = jnp.ones((w,), bool)
+    for t in range(3):
+        params, comm, theta, _ = rule(params, axes, h, comm)
+        a_eff = a * (1.0 + rate * t)
+        expect = masked_compute_theta(h, active, a_eff, "boltzmann")
+        np.testing.assert_array_equal(np.asarray(theta), np.asarray(expect))
+    assert float(comm["policy"]["t"]) == 3.0
 
 
 # ---------------------------------------------------------------------------

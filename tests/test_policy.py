@@ -1,0 +1,591 @@
+"""Worker-assessment policies (the schedule x codec x POLICY axis) —
+property suite, legacy-alias bitwise identity, and end-to-end plumbing.
+
+Three contracts, per the axis redesign:
+
+* every registered policy produces a distribution over workers and is
+  permutation-equivariant (from a fresh, symmetric state);
+* the masked path with an all-True mask equals the unmasked path
+  leaf-for-leaf;
+* the legacy ``strategy``/``a_tilde``/``a_schedule`` config knobs resolve
+  as ALIASES of their policy counterparts, bitwise-identically — theta and
+  whole training trajectories, through both the sync and the
+  ``async_mode="on_device"`` rules.
+"""
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import weights as W
+from repro.core.weights import (PipelinePolicy, STRATEGIES, as_policy,
+                                available_policies, boltzmann_weights,
+                                compute_theta, masked_compute_theta,
+                                parse_policy, policy_from_config)
+
+# One representative spec per registered stage (plus compositions), so the
+# property suite covers every policy in the registry. test_registry_covered
+# fails if a stage is registered without a spec here.
+POLICY_SPECS = (
+    "equal",
+    "inverse",
+    "best",
+    "boltzmann(a=2.5)",
+    "ema(0.9)",
+    "ema(0.5)|inverse",
+    "topk(2)",
+    "trimmed(1)",
+    "trimmed(1)|topk(3)",
+    "boltzmann|anneal(linear, rate=0.1)",
+    "boltzmann(a=3)|anneal(cosine, period=10, peak=8)",
+    "boltzmann(a=2)|anneal(exp, rate=0.05)",
+    "ema(0.9)|time_aware",
+    "time_aware(gamma=2)|boltzmann(a=4)",
+)
+
+
+def test_registry_covered():
+    mentioned = set()
+    for spec in POLICY_SPECS:
+        for part in spec.split("|"):
+            mentioned.add(part.split("(")[0].strip())
+    assert mentioned >= set(available_policies()), (
+        "registered policy stages missing from POLICY_SPECS: "
+        f"{sorted(set(available_policies()) - mentioned)}")
+
+
+# ---------------------------------------------------------------------------
+# (a) distribution + permutation equivariance, for every registered policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", POLICY_SPECS)
+@settings(max_examples=15, deadline=None)
+@given(h=st.lists(st.floats(0.01, 100.0), min_size=4, max_size=12,
+                  unique=True),
+       t=st.integers(0, 20))
+def test_hyp_policy_is_distribution(spec, h, t):
+    """theta >= 0, finite, sums to 1 — at any round t, from a fresh state,
+    masked and unmasked."""
+    pol = parse_policy(spec)
+    hv = jnp.array(h)
+    p = len(h)
+    for active in (None, jnp.ones((p,), bool)):
+        th, _ = pol(hv, active, None, jnp.float32(t))
+        th = np.asarray(th)
+        assert np.isfinite(th).all(), spec
+        assert (th >= 0).all(), spec
+        np.testing.assert_allclose(th.sum(), 1.0, rtol=1e-4, err_msg=spec)
+
+
+@pytest.mark.parametrize("spec", POLICY_SPECS)
+@settings(max_examples=15, deadline=None)
+@given(h=st.lists(st.floats(0.01, 100.0), min_size=4, max_size=12,
+                  unique=True),
+       perm_seed=st.integers(0, 2**31 - 1))
+def test_hyp_policy_permutation_equivariance(spec, h, perm_seed):
+    """Relabeling the workers relabels the weights the same way (fresh
+    symmetric state; unique energies so rank-based stages tie-break
+    identically)."""
+    pol = parse_policy(spec)
+    hv = jnp.array(h)
+    perm = np.random.default_rng(perm_seed).permutation(len(h))
+    th, _ = pol(hv)
+    th_perm, _ = pol(hv[perm])
+    np.testing.assert_allclose(np.asarray(th_perm), np.asarray(th)[perm],
+                               rtol=1e-4, atol=1e-6, err_msg=spec)
+
+
+@pytest.mark.parametrize("spec", POLICY_SPECS)
+def test_policy_jit_traceable(spec):
+    """Every policy traces: theta and state come out of a jitted call with
+    the mask as a traced input."""
+    pol = parse_policy(spec)
+    p = 6
+    h = jnp.linspace(0.5, 3.0, p)
+    state = pol.init_state(p)
+    active = jnp.array([True, True, False, True, True, True])
+
+    @jax.jit
+    def step(hh, act, st):
+        return pol(hh, act, st)
+
+    th, new_state = step(h, active, state)
+    assert np.isfinite(np.asarray(th)).all()
+    assert np.asarray(th)[2] == 0.0              # masked worker: exactly 0
+    # state structure is stable round over round (it rides comm_state)
+    assert jax.tree_util.tree_structure(new_state) == \
+        jax.tree_util.tree_structure(state)
+
+
+# ---------------------------------------------------------------------------
+# (b) masked all-True == unmasked, leaf for leaf
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", POLICY_SPECS)
+def test_masked_all_true_equals_unmasked_bitwise(spec):
+    pol = parse_policy(spec)
+    rng = np.random.default_rng(7)
+    for p in (2, 3, 5, 8, 13):
+        h = jnp.asarray(rng.uniform(0.05, 5.0, p).astype(np.float32))
+        th_un, st_un = pol(h, None, None)
+        th_ma, st_ma = pol(h, jnp.ones((p,), bool), None)
+        np.testing.assert_array_equal(np.asarray(th_un), np.asarray(th_ma),
+                                      err_msg=spec)
+        for a, b in zip(jax.tree.leaves(st_un), jax.tree.leaves(st_ma)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=spec)
+
+
+def test_masked_compute_theta_all_true_bitwise():
+    """The legacy masked entry point, held to the same exactness."""
+    rng = np.random.default_rng(3)
+    for p in (2, 3, 4, 7, 16):
+        h = jnp.asarray(rng.uniform(0.05, 5.0, p).astype(np.float32))
+        for strategy in STRATEGIES:
+            np.testing.assert_array_equal(
+                np.asarray(masked_compute_theta(h, jnp.ones((p,), bool),
+                                                1.7, strategy)),
+                np.asarray(compute_theta(h, strategy, 1.7)),
+                err_msg=strategy)
+
+
+# ---------------------------------------------------------------------------
+# (c) legacy aliases are bitwise-identical to their policy counterparts
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(h=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=12),
+       a=st.floats(0.1, 20.0))
+def test_hyp_strategy_aliases_bitwise(h, a):
+    hv = jnp.array(h)
+    for strategy in STRATEGIES:
+        legacy = np.asarray(compute_theta(hv, strategy, a))
+        th, state = as_policy(strategy, default_a=a)(hv)
+        assert state == ()
+        np.testing.assert_array_equal(legacy, np.asarray(th),
+                                      err_msg=strategy)
+
+
+def test_masked_strategy_aliases_bitwise():
+    rng = np.random.default_rng(11)
+    for trial in range(6):
+        p = int(rng.integers(3, 9))
+        h = jnp.asarray(rng.uniform(0.05, 5.0, p).astype(np.float32))
+        active = np.zeros(p, bool)
+        active[rng.choice(p, int(rng.integers(1, p + 1)), replace=False)] \
+            = True
+        for strategy in STRATEGIES:
+            legacy = masked_compute_theta(h, jnp.asarray(active), 2.0,
+                                          strategy)
+            th, _ = as_policy(strategy, default_a=2.0)(h, jnp.asarray(active))
+            np.testing.assert_array_equal(np.asarray(legacy), np.asarray(th),
+                                          err_msg=strategy)
+
+
+def test_legacy_anneal_alias_bitwise():
+    """a_schedule="anneal" == the boltzmann|anneal(linear) policy: a_eff =
+    a_tilde * (1 + rate*t) round over round, bitwise."""
+    from repro.configs.base import WASGDConfig
+
+    a, rate = 2.0, 0.3
+    wcfg = WASGDConfig(a_tilde=a, a_schedule="anneal", anneal_rate=rate)
+    pol = policy_from_config(wcfg)
+    assert pol.stateful
+    h = jnp.array([0.4, 1.1, 2.2, 0.9])
+    state = pol.init_state(4)
+    for t in range(4):
+        th, state = pol(h, None, state)
+        t_arr = jnp.asarray(float(t), jnp.float32)
+        expect = boltzmann_weights(h, a * (1.0 + rate * t_arr))
+        np.testing.assert_array_equal(np.asarray(th), np.asarray(expect))
+
+
+def test_policy_from_config_precedence():
+    from repro.configs.base import WASGDConfig
+
+    # explicit policy wins over strategy; kernel's missing a <- a_tilde
+    pol = policy_from_config(WASGDConfig(strategy="equal", a_tilde=7.0,
+                                         policy="boltzmann"))
+    assert pol.kernel.name == "boltzmann" and pol.a == 7.0
+    # legacy anneal on an a-less kernel stays the legacy no-op (stateless)
+    pol = policy_from_config(WASGDConfig(strategy="equal",
+                                         a_schedule="anneal"))
+    assert not pol.stateful
+
+
+# ---------------------------------------------------------------------------
+# Trajectory identity: legacy config == policy config, sync and on-device
+# ---------------------------------------------------------------------------
+
+def _mlp_problem(seed=0):
+    from repro.data import make_classification
+    from repro.models import cnn
+    from repro.models.param import build
+
+    X, y = make_classification(seed, 256, d=8, n_classes=3)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=8, d_hidden=16, n_classes=3), jax.random.key(seed))
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(cnn.mlp_apply(p, b["x"]), b["y"]), {}
+
+    return X, y, params, axes, loss_fn
+
+
+def _run_trainer(wcfg, rounds=4, straggler_schedule=None, seed=0):
+    from repro.configs import TrainConfig
+    from repro.train import Trainer
+
+    X, y, params, axes, loss_fn = _mlp_problem(seed)
+    w, tau = 4, 2
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=wcfg)
+    tr = Trainer(loss_fn, params, axes, tcfg, w)
+
+    def batches():
+        rng = np.random.default_rng(seed)
+        while True:
+            idx = rng.integers(0, len(X), size=tau * w * 4)
+            yield {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    tr.run(batches(), rounds, straggler_schedule=straggler_schedule)
+    return tr
+
+
+def _assert_trees_bitwise(a, b, msg=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(msg))
+
+
+@pytest.mark.parametrize("strategy,a", [("boltzmann", 3.0), ("inverse", 1.0),
+                                        ("equal", 1.0)])
+def test_legacy_config_trajectory_bitwise_sync(strategy, a):
+    from repro.configs.base import WASGDConfig
+
+    legacy = _run_trainer(WASGDConfig(tau=2, strategy=strategy, a_tilde=a))
+    spec = f"{strategy}(a={a})" if strategy == "boltzmann" else strategy
+    pol = _run_trainer(WASGDConfig(tau=2, a_tilde=a, policy=spec))
+    _assert_trees_bitwise(legacy.state.params, pol.state.params, strategy)
+    for r, (m0, m1) in enumerate(zip(legacy.history, pol.history)):
+        np.testing.assert_array_equal(m0["theta"], m1["theta"], err_msg=str(r))
+        np.testing.assert_array_equal(m0["loss"], m1["loss"], err_msg=str(r))
+
+
+def test_legacy_config_trajectory_bitwise_on_device():
+    """Acceptance: strategy/a_tilde through async_mode="on_device" with a
+    straggler schedule == the equivalent policy spec, bitwise."""
+    from repro.configs.base import WASGDConfig
+
+    rounds, w = 4, 4
+    rng = np.random.default_rng(5)
+    sched = np.ones((rounds, w), bool)
+    for r in range(1, rounds):
+        sched[r, rng.choice(w, 2, replace=False)] = False
+    legacy = _run_trainer(
+        WASGDConfig(tau=2, strategy="boltzmann", a_tilde=2.0,
+                    async_mode="on_device"),
+        rounds=rounds, straggler_schedule=sched)
+    pol = _run_trainer(
+        WASGDConfig(tau=2, policy="boltzmann(a=2.0)",
+                    async_mode="on_device"),
+        rounds=rounds, straggler_schedule=sched)
+    _assert_trees_bitwise(legacy.state.params, pol.state.params)
+    for r, (m0, m1) in enumerate(zip(legacy.history, pol.history)):
+        np.testing.assert_array_equal(m0["theta"], m1["theta"], err_msg=str(r))
+        assert (np.asarray(m0["theta"])[~sched[r]] == 0.0).all()
+
+
+def test_stateful_policy_on_device_rides_comm_state():
+    """EMA policy state + Alg. 4 mask coexist in comm_state through a real
+    Trainer run; straggler theta stays exactly 0 and the EMA state
+    advances."""
+    from repro.configs.base import WASGDConfig
+
+    rounds, w = 4, 4
+    rng = np.random.default_rng(9)
+    sched = np.ones((rounds, w), bool)
+    for r in range(rounds):
+        sched[r, rng.choice(w, 1)] = False
+    tr = _run_trainer(WASGDConfig(tau=2, policy="ema(0.9)",
+                                  async_mode="on_device"),
+                      rounds=rounds, straggler_schedule=sched)
+    assert set(tr.state.comm_state) == {"active", "policy"}
+    ema_state = tr.state.comm_state["policy"]
+    (key,) = [k for k in ema_state if k != "t"]
+    # each worker's observation count == its active rounds
+    np.testing.assert_array_equal(np.asarray(ema_state[key]["n"]),
+                                  sched.sum(axis=0).astype(np.float32))
+    for r, rec in enumerate(tr.history):
+        assert (np.asarray(rec["theta"])[~sched[r]] == 0.0).all()
+        assert np.isfinite(rec["loss"])
+
+
+# ---------------------------------------------------------------------------
+# Host sim stays the parity oracle for stateful policies
+# ---------------------------------------------------------------------------
+
+def _grad_setup(seed=0):
+    X, y, params, axes, loss_fn = _mlp_problem(seed)
+
+    def grad_fn(ps, batch):
+        one = lambda p, b: loss_fn(p, b)[0]
+        losses = jax.vmap(one)(ps, batch)
+        grads = jax.grad(lambda q: jax.vmap(one)(q, batch).sum())(ps)
+        return losses, grads
+
+    def batches(w, n):
+        rng = np.random.default_rng(seed)
+        while True:
+            idx = rng.integers(0, len(X), size=(w, n))
+            yield {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return params, axes, loss_fn, jax.jit(grad_fn), batches
+
+
+@pytest.mark.parametrize("policy", ["ema(0.9)", "trimmed(1)",
+                                    "boltzmann(a=2)|anneal(linear, rate=0.2)"])
+def test_policy_parity_host_vs_device(policy):
+    """Same straggler schedule + same policy into both async paths ->
+    leaf-for-leaf params (the PR 2 harness, extended to the policy axis)."""
+    from repro.core import backends as B
+    from repro.core.async_device import run_parallel_sgd_on_device
+    from repro.core.async_sim import (StepTimeModel, make_schedule,
+                                      run_parallel_sgd)
+
+    params, axes, loss_fn, grad_fn, batches = _grad_setup()
+    p, b = 4, 1
+    w = p + b
+    tm = StepTimeModel(w, sigma=0.3, straggle_p=0.2, straggle_mult=10, seed=3)
+    sched = make_schedule(tm, rounds=4, tau=2, n_workers=p, backups=b)
+    host = run_parallel_sgd(loss_fn, grad_fn, params, axes, batches(w, 8),
+                            n_workers=p, backups=b, tau=2, rounds=4, lr=0.05,
+                            schedule=sched, policy=policy)
+    dev = run_parallel_sgd_on_device(
+        grad_fn, params, axes, batches(w, 8), n_workers=p, backups=b, tau=2,
+        rounds=4, lr=0.05, schedule=sched, policy=policy,
+        backend="async_einsum")
+    np.testing.assert_allclose(dev.losses, host.losses, atol=1e-5)
+    errs = jax.tree.map(lambda a, c: float(jnp.abs(a - c).max()),
+                        host.params, dev.params)
+    assert max(jax.tree.leaves(errs)) < 1e-5, policy
+
+
+# ---------------------------------------------------------------------------
+# Measured round times: the on-device mask without any StepTimeModel
+# ---------------------------------------------------------------------------
+
+def test_measured_times_drive_on_device_round():
+    """Acceptance: a full on-device async run driven by measured per-device
+    round times — no StepTimeModel, no precomputed schedule. time_aware
+    consumes the measurements through observe_times."""
+    from repro.core.async_device import run_parallel_sgd_on_device
+
+    params, axes, _, grad_fn, batches = _grad_setup()
+    p, b, rounds = 3, 1, 4
+    w = p + b
+    res = run_parallel_sgd_on_device(
+        grad_fn, params, axes, batches(w, 8), n_workers=p, backups=b, tau=2,
+        rounds=rounds, lr=0.05, measure_times=True,
+        policy="ema(0.9)|time_aware", backend="async_einsum")
+    assert res.round_times is not None and res.round_times.shape == (rounds, w)
+    assert np.isfinite(res.round_times).all()
+    assert (res.round_times >= 0).all()
+    assert np.isfinite(res.losses).all()
+    assert res.dropped_rounds == rounds * b      # first-p-of-w every round
+    assert res.wall > 0
+
+
+def test_async_driver_legacy_strategy_stays_kernel_checked():
+    """strategy= is the legacy scalar knob: a non-kernel stage name must
+    keep raising the unknown-strategy error, not silently parse as a
+    policy spec (which would flip the round to a stateful pipeline)."""
+    from repro.core.async_device import build_async_round
+
+    _, axes, _, grad_fn, _ = _grad_setup()
+    with pytest.raises(ValueError, match="unknown weighting strategy"):
+        build_async_round(grad_fn, axes, lr=0.1, strategy="ema",
+                          backend="async_einsum")
+
+
+def test_measured_times_reject_redundant_time_source():
+    from repro.core.async_device import run_parallel_sgd_on_device
+    from repro.core.async_sim import StepTimeModel
+
+    params, axes, _, grad_fn, batches = _grad_setup()
+    with pytest.raises(ValueError, match="measure_times"):
+        run_parallel_sgd_on_device(
+            grad_fn, params, axes, batches(4, 8), n_workers=3, backups=1,
+            tau=2, rounds=2, lr=0.05, measure_times=True,
+            time_model=StepTimeModel(4), backend="async_einsum")
+
+
+def test_time_aware_downweights_slow_workers():
+    pol = parse_policy("time_aware(gamma=1.0)|boltzmann(a=2)")
+    h = jnp.array([1.0, 1.0, 1.0, 1.0])
+    state = pol.init_state(4)
+    th0, state = pol(h, None, state)
+    np.testing.assert_allclose(np.asarray(th0), 0.25, atol=1e-6)
+    state = pol.observe_times(state, jnp.array([1.0, 1.0, 1.0, 8.0]))
+    th1, state = pol(h, None, state)
+    assert th1[3] < th1[0]                        # slow worker downweighted
+    np.testing.assert_allclose(np.asarray(th1).sum(), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Stage behavior units
+# ---------------------------------------------------------------------------
+
+def test_topk_keeps_k_lowest_energies():
+    th, _ = parse_policy("topk(2)")(jnp.array([1.0, 2.0, 4.0, 0.5]))
+    th = np.asarray(th)
+    assert (th > 0).sum() == 2 and th[0] > 0 and th[3] > 0
+
+
+def test_trimmed_drops_both_tails():
+    th, _ = parse_policy("trimmed(1)")(jnp.array([1.0, 2.0, 4.0, 0.5]))
+    th = np.asarray(th)
+    assert th[2] == 0.0 and th[3] == 0.0          # max and min energies
+    assert th[0] > 0 and th[1] > 0
+
+
+def test_trimmed_small_round_left_untrimmed():
+    """<= 2k active workers: trimming would empty the round; keep the mask."""
+    h = jnp.array([1.0, 2.0, 4.0, 0.5])
+    active = jnp.array([True, True, False, False])
+    th, _ = parse_policy("trimmed(1)")(h, active)
+    th = np.asarray(th)
+    assert th[0] > 0 and th[1] > 0 and th[2] == 0 and th[3] == 0
+
+
+def test_ema_smooths_across_rounds():
+    pol = parse_policy("ema(0.9)|best")
+    state = pol.init_state(2)
+    # round 0: worker 1 is better -> one-hot on 1 (bias-corrected EMA == h)
+    th, state = pol(jnp.array([2.0, 1.0]), None, state)
+    np.testing.assert_array_equal(np.asarray(th), [0.0, 1.0])
+    # one noisy spike for worker 1 does NOT flip the smoothed ranking
+    th, state = pol(jnp.array([2.0, 2.1]), None, state)
+    np.testing.assert_array_equal(np.asarray(th), [0.0, 1.0])
+
+
+def test_anneal_cosine_reaches_peak_and_saturates():
+    pol = parse_policy("boltzmann(a=2)|anneal(cosine, period=10, peak=5)")
+    stage = pol.modifiers[0]
+    assert float(stage.factor(0.0)) == 1.0
+    np.testing.assert_allclose(float(stage.factor(10.0)), 5.0, rtol=1e-6)
+    np.testing.assert_allclose(float(stage.factor(50.0)), 5.0, rtol=1e-6)
+    mid = float(stage.factor(5.0))
+    assert 1.0 < mid < 5.0
+
+
+# ---------------------------------------------------------------------------
+# Config-time validation + empty-round rejection
+# ---------------------------------------------------------------------------
+
+def test_config_validates_strategy_listing_policies():
+    from repro.configs.base import WASGDConfig
+    with pytest.raises(ValueError, match="registered kernel policies"):
+        WASGDConfig(strategy="nope")
+
+
+def test_config_validates_policy_spec_listing_policies():
+    from repro.configs.base import WASGDConfig
+    with pytest.raises(ValueError, match="registered policies"):
+        WASGDConfig(policy="boltzmann|nope")
+    with pytest.raises(ValueError, match="at most one"):
+        WASGDConfig(policy="boltzmann|equal")
+    with pytest.raises(ValueError, match="schedules the kernel's 'a'"):
+        WASGDConfig(policy="equal|anneal(linear)")
+    with pytest.raises(ValueError, match="takes"):
+        WASGDConfig(policy="boltzmann(nope=3)")
+    WASGDConfig(policy="ema(0.9)|time_aware")     # valid spec constructs
+
+
+def test_all_false_mask_rejected_host_and_device_identically():
+    """The documented NaN footgun: a concrete all-False mask now fails
+    eagerly with the same error on both the host oracle and the traced
+    entry point (the async drivers already reject it at schedule
+    injection)."""
+    from repro.core.async_sim import masked_theta
+
+    h = np.array([1.0, 2.0, 3.0], np.float32)
+    dead = np.zeros(3, bool)
+    with pytest.raises(ValueError, match="no active worker"):
+        masked_theta(h, dead)
+    with pytest.raises(ValueError, match="no active worker"):
+        masked_compute_theta(jnp.asarray(h), jnp.asarray(dead))
+    with pytest.raises(ValueError, match="no active worker"):
+        parse_policy("boltzmann")(jnp.asarray(h), jnp.asarray(dead))
+
+
+DRYRUN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro.configs import TrainConfig, WASGDConfig, get_smoke_config
+    from repro.configs.base import InputShape
+    from repro.launch.specs import input_specs
+    from repro.parallel.sharding import num_workers, tree_shardings
+
+    cfg = get_smoke_config("stablelm-1.6b")
+    shape = InputShape("t", 32, 16, "train")
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    w = num_workers(mesh)
+    for wcfg in (WASGDConfig(tau=2, policy="ema(0.9)|time_aware"),
+                 WASGDConfig(tau=2, policy="ema(0.9)",
+                             async_mode="on_device")):
+        wl = input_specs(cfg, shape, w, TrainConfig(wasgd=wcfg))
+        in_sh = tuple(tree_shardings(mesh, s, a, wl.rules)
+                      for s, a in zip(wl.arg_shapes, wl.arg_axes))
+        with mesh:
+            jax.jit(wl.fn, in_shardings=in_sh).lower(*wl.arg_shapes).compile()
+        print("COMPILED", wcfg.policy, wcfg.async_mode)
+    print("RESULT ok")
+""")
+
+
+def test_policy_state_compiles_through_dryrun_specs():
+    """The multi-pod dry-run path: stateful policy state (sync) and the
+    {"active", "policy"} dict (on-device async) shard and compile through
+    input_specs -> tree_shardings -> jit(in_shardings) on a placeholder
+    mesh. Subprocess so the forced device count never leaks."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    out = subprocess.run([sys.executable, "-c", DRYRUN_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "RESULT ok" in out.stdout
+
+
+def test_register_policy_duplicate_and_custom():
+    with pytest.raises(ValueError, match="already registered"):
+        @W.register_policy
+        class Dup:                                 # noqa
+            name = "boltzmann"
+            role = "kernel"
+
+    @W.register_policy(overwrite=True)
+    class Scale:
+        name = "_test_scale"
+        role = "energy"
+        stateful = False
+
+        def transform(self, h, active, state, t):
+            return h * 2.0, state
+
+    try:
+        th, _ = parse_policy("_test_scale|boltzmann(a=2)")(
+            jnp.array([1.0, 2.0]))
+        # h*2 then Eq. 12 normalization: the scale cancels — same theta
+        ref, _ = parse_policy("boltzmann(a=2)")(jnp.array([1.0, 2.0]))
+        np.testing.assert_allclose(np.asarray(th), np.asarray(ref),
+                                   atol=1e-7)
+    finally:
+        W._STAGES.pop("_test_scale", None)
