@@ -75,6 +75,7 @@ def run(fast: bool = False):
     run_async(fast=fast)
     run_pipeline(fast=fast)
     run_policies(fast=fast)
+    run_elastic(fast=fast)
 
 
 def run_backends(fast: bool = False):
@@ -474,6 +475,105 @@ def run_pipeline(fast: bool = False, out_path: str = None):
     return records
 
 
+def run_elastic(fast: bool = False, out_path: str = None):
+    """Elastic membership + sharded checkpoint costs vs state bytes x p.
+
+    For each worker count: time a grow (``p -> p+2``, newcomers adopt the
+    aggregate) and a shrink (``p -> max(1, p-2)``) of a full worker-stacked
+    ``TrainState`` through ``core/membership.resize_train_state``; then time
+    a synchronous sharded save, its restore, and the CALLER-VISIBLE cost of
+    the async save (the on-device snapshot + enqueue — the part that sits on
+    the training critical path; the wait column is the hidden write riding
+    the next rounds). Records land in ``BENCH_elastic.json``.
+    """
+    import functools
+    import shutil
+    import tempfile
+    import numpy as np
+    from repro.configs.base import WASGDConfig
+    from repro.checkpoint.io import (AsyncCheckpointer, restore_sharded,
+                                     save_sharded)
+    from repro.core import replicate_workers
+    from repro.core.membership import resize_train_state
+    from repro.models import cnn
+    from repro.models.param import build
+    from repro.optim import make_optimizer
+    from repro.train.state import init_state
+    from repro.train.step import init_comm_state
+
+    if out_path is None:
+        out_path = os.path.join(RESULTS_DIR, "BENCH_elastic.json")
+    d_hidden = 64 if fast else 256
+    ps = (2, 4) if fast else (2, 4, 8, 16)
+    wcfg = WASGDConfig(tau=2, async_mode="on_device")
+    params0, axes0 = build(functools.partial(
+        cnn.mlp_init, d_in=32, d_hidden=d_hidden, n_classes=8),
+        jax.random.key(0))
+    opt = make_optimizer("adamw", 1e-3, 0.0, 0.01)
+
+    records = []
+    tmp = tempfile.mkdtemp(prefix="bench_elastic_")
+    try:
+        for p in ps:
+            params, axes = replicate_workers(params0, axes0, p)
+            state = init_state(params, opt.init(params), p,
+                               init_comm_state("wasgd", params, axes, p,
+                                               wcfg=wcfg))
+            state_bytes = sum(int(np.asarray(x).nbytes)
+                              for x in jax.tree.leaves(state))
+
+            def grow(s=state, a=axes, p=p):
+                return resize_train_state(s, a, p + 2)
+
+            def shrink(s=state, a=axes, p=p):
+                return resize_train_state(s, a, max(1, p - 2))
+
+            us_grow = _time(lambda: grow().params["w_in"], n=5)
+            us_shrink = _time(lambda: shrink().params["w_in"], n=5)
+
+            ck = os.path.join(tmp, f"p{p}")
+            host = jax.tree.map(np.asarray, state)
+            t0 = time.time()
+            save_sharded(ck, host, topology={"p": p}, n_shards=2)
+            us_save = (time.time() - t0) * 1e6
+            t0 = time.time()
+            restored, _ = restore_sharded(ck, state)
+            jax.block_until_ready(restored.params)
+            us_restore = (time.time() - t0) * 1e6
+
+            ac = AsyncCheckpointer()
+            t0 = time.time()
+            ac.save(os.path.join(tmp, f"p{p}_async"), state,
+                    topology={"p": p}, n_shards=2)
+            us_async_call = (time.time() - t0) * 1e6
+            t0 = time.time()
+            ac.close()
+            us_async_wait = (time.time() - t0) * 1e6
+
+            records.append({
+                "workers": p, "state_bytes": state_bytes,
+                "us_resize_grow": round(us_grow, 1),
+                "us_resize_shrink": round(us_shrink, 1),
+                "us_save_sharded": round(us_save, 1),
+                "us_restore_sharded": round(us_restore, 1),
+                "us_async_save_call": round(us_async_call, 1),
+                "us_async_save_wait": round(us_async_wait, 1)})
+            emit(f"elastic_resize_grow_p{p}", us_grow,
+                 f"{state_bytes >> 10}KiB")
+            emit(f"elastic_ckpt_save_p{p}", us_save,
+                 f"{state_bytes >> 10}KiB")
+            emit(f"elastic_ckpt_async_call_p{p}", us_async_call,
+                 f"hidden={round(us_async_wait, 1)}us")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"bench": "elastic", "records": records}, f, indent=2)
+    emit("elastic_bench_json", 0.0, out_path)
+    return records
+
+
 def run_extra(fast: bool = False):
     """fused_ce + ssd_chunk microbenchmarks (appended kernels)."""
     import jax
@@ -517,7 +617,8 @@ def main():
     sweeps = {"run": run, "run_backends": run_backends,
               "run_backend_matrix": run_backend_matrix,
               "run_async": run_async, "run_pipeline": run_pipeline,
-              "run_policies": run_policies, "run_extra": run_extra}
+              "run_policies": run_policies, "run_extra": run_extra,
+              "run_elastic": run_elastic}
     ap = argparse.ArgumentParser(description=main.__doc__)
     ap.add_argument("sweep", nargs="?", default="run", choices=sorted(sweeps))
     ap.add_argument("--fast", action="store_true")

@@ -1,3 +1,11 @@
-from repro.checkpoint.io import restore, save
+from repro.checkpoint.io import (
+    AsyncCheckpointer,
+    restore,
+    restore_sharded,
+    save,
+    save_sharded,
+    saved_topology,
+)
 
-__all__ = ["restore", "save"]
+__all__ = ["AsyncCheckpointer", "restore", "restore_sharded", "save",
+           "save_sharded", "saved_topology"]

@@ -1,18 +1,48 @@
-"""Checkpointing: flat-key npz payload + JSON manifest (offline container —
-no orbax). Saves/restores arbitrary pytrees of arrays (params, optimizer
-state, worker-stacked or not) with dtype/shape verification on restore.
+"""Checkpointing (offline container — no orbax).
+
+Two on-disk formats over the same flat-key pytree encoding:
+
+* **flat** (legacy): one ``arrays.npz`` + ``manifest.json`` per
+  checkpoint — ``save``/``restore``.
+* **sharded** (elastic membership, ``save_sharded``/``restore_sharded``):
+  per-host shard files ``shard_00000.npz`` ... plus a topology-aware
+  ``manifest.json`` recording, beside every key's shape/dtype/shard
+  assignment, the run topology — worker count ``p``, round, policy spec,
+  comm-state structure — so a restore can detect a membership mismatch
+  and route through the resize machinery (core/membership.py) to resume
+  under a DIFFERENT ``p``. Keys are deterministically bin-packed across
+  shards by byte size; on a multi-host fleet each host writes (and reads
+  back) only its own shard file, so checkpoint bandwidth scales with the
+  fleet. The manifest is written atomically (tmp + rename): a preempted
+  save leaves the previous checkpoint readable, never a torn manifest.
+
+``AsyncCheckpointer`` moves the host-side serialization off the critical
+path: ``save`` snapshots the tree with a cheap on-device copy (safe
+against donated buffers) and a daemon thread performs the device-to-host
+gather and shard writes while the next rounds — including the rs_ag
+overlap seam's collective phases — run on the devices, so a periodic
+checkpoint costs no extra round time.
+
+Restores verify structure AND dtype: the manifest dtype is checked
+against both the stored array (corruption — always fatal) and the
+``like`` leaf (mismatched resume target — fatal unless the explicit
+``allow_cast=True`` escape hatch is passed).
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Tuple
+import queue
+import threading
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 SEP = "//"
+
+SHARDED_FORMAT = "wasgd-sharded-v1"
 
 
 def _flatten(tree, prefix=""):
@@ -32,6 +62,85 @@ def _flatten(tree, prefix=""):
     return out
 
 
+def _check_structure(like_keys, stored_keys):
+    """Structure mismatch split into the two distinct failure directions:
+    keys the target expects but the checkpoint lacks, and keys the
+    checkpoint holds that the target has no slot for — the symmetric
+    difference reported as one "missing" list hid which side was wrong."""
+    missing = sorted(set(like_keys) - set(stored_keys))
+    unexpected = sorted(set(stored_keys) - set(like_keys))
+    if missing or unexpected:
+        parts = []
+        if missing:
+            parts.append(f"missing from checkpoint: {missing[:8]}"
+                         + (f" (+{len(missing) - 8} more)"
+                            if len(missing) > 8 else ""))
+        if unexpected:
+            parts.append(f"unexpected in checkpoint: {unexpected[:8]}"
+                         + (f" (+{len(unexpected) - 8} more)"
+                            if len(unexpected) > 8 else ""))
+        raise ValueError("checkpoint structure mismatch: " + "; ".join(parts))
+
+
+def _check_leaf(key: str, arr: np.ndarray, entry: Dict, like_leaf,
+                allow_cast: bool):
+    """Shape + dtype verification for one restored leaf.
+
+    The manifest is the contract: a stored array that disagrees with its
+    own manifest entry is corruption and always fatal; a manifest dtype
+    that disagrees with the restore target ``like`` is a mismatched resume
+    (e.g. an f32 checkpoint into a bf16 state) and fatal unless the caller
+    explicitly passes ``allow_cast=True`` — the silent-cast behaviour this
+    replaces converted every leaf to ``like``'s dtype without a word.
+    """
+    if tuple(arr.shape) != tuple(np.shape(like_leaf)):
+        raise ValueError(f"shape mismatch for {key}: "
+                         f"{arr.shape} vs {np.shape(like_leaf)}")
+    man_dtype = entry.get("dtype")
+    if man_dtype is not None and str(arr.dtype) != man_dtype:
+        raise ValueError(
+            f"checkpoint corruption for {key}: stored dtype {arr.dtype} "
+            f"disagrees with its manifest entry {man_dtype}")
+    like_dtype = str(jnp.asarray(like_leaf).dtype)
+    if man_dtype is not None and man_dtype != like_dtype and not allow_cast:
+        raise ValueError(
+            f"dtype mismatch for {key}: checkpoint holds {man_dtype}, "
+            f"restore target expects {like_dtype}; pass allow_cast=True to "
+            f"cast explicitly")
+    return jnp.asarray(arr, dtype=like_dtype if allow_cast else man_dtype)
+
+
+def _restore_flat(data_of_key, manifest: Dict, like: Any, allow_cast: bool):
+    """Rebuild ``like``'s structure leaf-by-leaf along the SAME traversal
+    ``_flatten`` uses to derive keys — pairing flat keys with
+    ``jax.tree.flatten`` leaves (as the code this replaces did) silently
+    mis-pairs once a dict's insertion order differs from jax's sorted-key
+    flatten order."""
+    _check_structure(_flatten(like), manifest["keys"])
+
+    def build(sub, prefix=""):
+        if isinstance(sub, dict):
+            return {k: build(v, f"{prefix}{SEP}{k}" if prefix else str(k))
+                    for k, v in sub.items()}
+        if hasattr(sub, "_fields"):         # NamedTuple
+            return type(sub)(*(
+                build(getattr(sub, k),
+                      f"{prefix}{SEP}@{k}" if prefix else f"@{k}")
+                for k in sub._fields))
+        if isinstance(sub, (tuple, list)):
+            return type(sub)(
+                build(v, f"{prefix}{SEP}#{i}" if prefix else f"#{i}")
+                for i, v in enumerate(sub))
+        return _check_leaf(prefix, data_of_key(prefix),
+                           manifest["keys"][prefix], sub, allow_cast)
+
+    return build(like)
+
+
+# ---------------------------------------------------------------------------
+# Flat (legacy) format
+# ---------------------------------------------------------------------------
+
 def save(path: str, tree: Any, meta: Dict | None = None):
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
@@ -41,27 +150,201 @@ def save(path: str, tree: Any, meta: Dict | None = None):
                  for k, v in flat.items()},
         "meta": meta or {},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    _write_manifest(path, manifest)
 
 
-def restore(path: str, like: Any) -> Tuple[Any, Dict]:
-    """Restore into the structure of ``like`` (shape/dtype checked)."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+def restore(path: str, like: Any, allow_cast: bool = False
+            ) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype verified —
+    see ``_check_leaf``; ``allow_cast=True`` is the explicit escape hatch
+    for dtype-converting restores). A sharded checkpoint at ``path`` is
+    detected from its manifest and delegated to ``restore_sharded``."""
+    manifest = _read_manifest(path)
+    if manifest.get("format") == SHARDED_FORMAT:
+        return restore_sharded(path, like, allow_cast=allow_cast)
     data = np.load(os.path.join(path, "arrays.npz"))
-    flat_like = _flatten(like)
-    if set(flat_like) != set(data.files):
-        missing = set(flat_like) ^ set(data.files)
-        raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:8]}")
-    leaves, treedef = jax.tree.flatten(like)
-    flat_keys = list(_flatten(like).keys())
-    assert len(flat_keys) == len(leaves)
-    restored = []
-    for k, leaf in zip(flat_keys, leaves):
-        arr = data[k]
-        if tuple(arr.shape) != tuple(np.shape(leaf)):
-            raise ValueError(f"shape mismatch for {k}: "
-                             f"{arr.shape} vs {np.shape(leaf)}")
-        restored.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
-    return jax.tree.unflatten(treedef, restored), manifest["meta"]
+    tree = _restore_flat(lambda k: data[k], manifest, like, allow_cast)
+    return tree, manifest["meta"]
+
+
+# ---------------------------------------------------------------------------
+# Sharded format
+# ---------------------------------------------------------------------------
+
+def _write_manifest(path: str, manifest: Dict):
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+
+
+def _read_manifest(path: str) -> Dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def _shard_file(s: int) -> str:
+    return f"shard_{s:05d}.npz"
+
+
+def _assign_shards(flat: Dict[str, np.ndarray], n_shards: int
+                   ) -> List[List[str]]:
+    """Deterministic byte-balanced bin-packing: keys in descending size
+    (ties by key) each go to the currently lightest shard (ties by index)
+    — every host computes the same assignment without coordination."""
+    bins: List[List[str]] = [[] for _ in range(n_shards)]
+    loads = [0] * n_shards
+    for k in sorted(flat, key=lambda k: (-flat[k].nbytes, k)):
+        s = min(range(n_shards), key=lambda i: (loads[i], i))
+        bins[s].append(k)
+        loads[s] += flat[k].nbytes
+    return bins
+
+
+def save_sharded(path: str, tree: Any, meta: Dict | None = None,
+                 topology: Dict | None = None, n_shards: int | None = None,
+                 process_index: int | None = None):
+    """Write a sharded checkpoint: ``n_shards`` npz shard files plus the
+    topology-aware manifest.
+
+    ``n_shards`` defaults to the process count (one shard per host); pass
+    more to bound file sizes on a single host. On a multi-host fleet every
+    process computes the same deterministic assignment and
+    ``process_index`` (defaults to ``jax.process_index()``) writes only
+    its own shard — the manifest comes from process 0. ``topology`` is the
+    membership record (``{"p", "round", "policy", "rule", "comm_state"}``)
+    that lets ``restore_sharded`` / the Trainer resume under a different
+    worker count by routing through core/membership.py.
+    """
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    if n_shards is None:
+        n_shards = max(1, jax.process_count())
+    if process_index is None:
+        process_index = jax.process_index()
+    bins = _assign_shards(flat, n_shards)
+    per_process = max(1, n_shards // max(1, jax.process_count()))
+    for s, keys in enumerate(bins):
+        if jax.process_count() > 1 and s // per_process != process_index:
+            continue                       # another host owns this shard
+        np.savez(os.path.join(path, _shard_file(s)),
+                 **{k: flat[k] for k in keys})
+    if process_index == 0:
+        manifest = {
+            "format": SHARDED_FORMAT,
+            "n_shards": n_shards,
+            "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                         "shard": s}
+                     for s, keys in enumerate(bins)
+                     for k, v in ((k, flat[k]) for k in keys)},
+            "topology": topology or {},
+            "meta": meta or {},
+        }
+        _write_manifest(path, manifest)
+
+
+def restore_sharded(path: str, like: Any, allow_cast: bool = False
+                    ) -> Tuple[Any, Dict]:
+    """Restore a sharded checkpoint into the structure of ``like``.
+
+    Structure and dtype are verified (``_check_structure``/``_check_leaf``).
+    ``like`` must already be shaped for the checkpoint's topology — to
+    resume under a different worker count, read ``saved_topology(path)``,
+    build the ``like`` at the saved ``p``, restore, then resize through
+    core/membership.py (``Trainer.resume_from`` does exactly this).
+    """
+    manifest = _read_manifest(path)
+    if manifest.get("format") != SHARDED_FORMAT:
+        raise ValueError(
+            f"{path} is not a sharded checkpoint "
+            f"(format={manifest.get('format')!r}); use restore()")
+    shards: Dict[int, Any] = {}
+
+    def data_of_key(k):
+        s = manifest["keys"][k]["shard"]
+        if s not in shards:
+            shards[s] = np.load(os.path.join(path, _shard_file(s)))
+        return shards[s][k]
+
+    tree = _restore_flat(data_of_key, manifest, like, allow_cast)
+    return tree, manifest["meta"]
+
+
+def saved_topology(path: str) -> Dict:
+    """The topology block of a checkpoint's manifest (``{}`` for legacy
+    flat checkpoints) plus its meta — read without touching any shard, so
+    a resume can decide on the resize route before loading bytes."""
+    manifest = _read_manifest(path)
+    return {"format": manifest.get("format", "flat"),
+            "n_shards": manifest.get("n_shards", 1),
+            "topology": manifest.get("topology", {}),
+            "meta": manifest.get("meta", {})}
+
+
+# ---------------------------------------------------------------------------
+# Async save: serialization rides the next round's device time
+# ---------------------------------------------------------------------------
+
+class AsyncCheckpointer:
+    """Background-thread sharded saver.
+
+    ``save`` is cheap on the caller's thread: it snapshots every leaf with
+    an on-device copy — dispatch-only, and the copy is ordered before any
+    later donation of the source buffers (the train step donates its
+    state), so the snapshot is consistent even though the next round
+    starts immediately — then enqueues the write. The daemon thread
+    performs the device-to-host gather (blocking only itself) and the
+    ``save_sharded`` shard writes while subsequent rounds run on the
+    devices; with the rs_ag schedule the gather overlaps the same
+    phase-gap seam the pipelined round uses, so a periodic checkpoint
+    costs no extra round time on the training critical path.
+
+    Worker-thread failures are held and re-raised on the next ``save`` or
+    ``wait`` — a checkpoint that cannot be written must not be discovered
+    at restore time.
+    """
+
+    def __init__(self, depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="ckpt-writer")
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            job = self._q.get()
+            try:
+                if job is None:
+                    return
+                path, snap, meta, topology, n_shards = job
+                host = jax.tree.map(np.asarray, snap)
+                save_sharded(path, host, meta=meta, topology=topology,
+                             n_shards=n_shards)
+            except BaseException as e:     # surface on the trainer thread
+                self._exc = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise RuntimeError("async checkpoint save failed") from exc
+
+    def save(self, path: str, tree: Any, meta: Dict | None = None,
+             topology: Dict | None = None, n_shards: int | None = None):
+        self._raise_pending()
+        snap = jax.tree.map(
+            lambda x: jnp.array(x, copy=True) if isinstance(x, jax.Array)
+            else np.asarray(x), tree)
+        self._q.put((path, snap, meta, topology, n_shards))
+
+    def wait(self):
+        """Block until every enqueued save has hit disk; re-raise failures."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=5.0)

@@ -134,6 +134,38 @@ def take_worker(params: Dict, axes: Dict, i: int) -> Dict:
         params, axes, is_leaf=lambda n: _axes_is_leaf(n))
 
 
+def resize_worker_leaves(params: Dict, axes: Dict, new_p: int,
+                         theta: Optional[jax.Array] = None) -> Dict:
+    """Grow/shrink every worker-stacked leaf to ``new_p`` rows.
+
+    The membership contract (core/membership.py): worker ``i`` keeps slot
+    ``i`` for ``i < min(old_p, new_p)`` — survivors are bitwise-preserved —
+    a shrink drops the tail slots, and a grow appends newcomers whose row
+    is the **aggregate** ``m = sum_j theta_j x_j`` over the surviving
+    workers (``theta=None`` = equal weights): exactly the state an Alg. 4
+    late-joiner adopts, so a freshly joined worker starts from the
+    consensus model instead of a stale or random copy. Leaves without a
+    worker axis (expert-parallel single copies) pass through unchanged.
+    """
+    if new_p < 1:
+        raise ValueError(f"resize needs new_p >= 1, got {new_p}")
+
+    def visit(x, ax):
+        if not is_worker_leaf(ax):
+            return x
+        old_p = x.shape[0]
+        if new_p <= old_p:
+            return x[:new_p]
+        t = (jnp.full((old_p,), 1.0 / old_p, jnp.float32) if theta is None
+             else theta.astype(jnp.float32))
+        m = jnp.tensordot(t, x.astype(jnp.float32), axes=1)
+        newcomers = jnp.broadcast_to(
+            m[None], (new_p - old_p,) + x.shape[1:]).astype(x.dtype)
+        return jnp.concatenate([x, newcomers], axis=0)
+
+    return jax.tree.map(visit, params, axes, is_leaf=_axes_is_leaf)
+
+
 def replicate_workers(params: Dict, axes: Dict, n_workers: int,
                       expert_copies: bool = False):
     """Single-copy params -> (w, ...) worker copies (+ updated axes tree).

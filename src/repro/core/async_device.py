@@ -122,6 +122,27 @@ def validate_active_rounds(active: np.ndarray, rounds: Optional[int] = None):
             f">= 1 active worker")
 
 
+def resize_active_mask(active, new_p: int) -> jnp.ndarray:
+    """Rebuild the Alg. 4 activity mask after a membership resize
+    (core/membership.py): worker ``i`` keeps slot ``i`` for
+    ``i < min(old_p, new_p)`` — a straggler that was excluded stays
+    excluded — a shrink drops the tail slots, and newcomers join ACTIVE
+    (they hold the aggregate, the freshest state in the fleet). A shrink
+    that would leave no active worker is the same config error as an
+    all-straggler round and raises ``no_active_error`` at the resize, not
+    as NaNs rounds later.
+    """
+    if new_p < 1:
+        raise ValueError(f"resize needs new_p >= 1, got {new_p}")
+    active = jnp.asarray(active).astype(bool)
+    old_p = active.shape[0]
+    if new_p <= old_p:
+        out = active[:new_p]
+        weights_mod._reject_concrete_all_false(out)
+        return out
+    return jnp.concatenate([active, jnp.ones((new_p - old_p,), bool)])
+
+
 # ---------------------------------------------------------------------------
 # Masked Eq. 10 + late-join over a tree (compat entry point)
 # ---------------------------------------------------------------------------

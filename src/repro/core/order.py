@@ -66,6 +66,28 @@ class OrderState:
             self.scores[segment] = 0.0
         return keep
 
+    def resize(self, new_p: int):
+        """Membership resize: worker ``i`` keeps its seed column for
+        ``i < min(old_p, new_p)`` (the slot contract — a surviving worker's
+        permutation, and thus its epoch traversal position, is unaffected by
+        others joining or leaving); newcomers draw fresh seeds and start
+        their Judge score at 0."""
+        if int(new_p) < 1:
+            raise ValueError(f"resize needs new_p >= 1, got {new_p}")
+        new_p = int(new_p)
+        with self._lock:
+            old_p = self.seeds.shape[1]
+            if new_p <= old_p:
+                self.seeds = self.seeds[:, :new_p]
+                self.scores = self.scores[:, :new_p]
+            else:
+                n_seg = self.seeds.shape[0]
+                fresh = self._rng.integers(0, 2**31 - 1,
+                                           size=(n_seg, new_p - old_p))
+                self.seeds = np.concatenate([self.seeds, fresh], axis=1)
+                self.scores = np.concatenate(
+                    [self.scores, np.zeros((n_seg, new_p - old_p))], axis=1)
+
 
 def grouped_order(labels: np.ndarray, delta: int, seed: int = 0) -> np.ndarray:
     """Build a sample order with runs of ``delta`` same-label samples

@@ -185,6 +185,15 @@ class WeightPolicy(Protocol):
                  ) -> Tuple[jax.Array, Any]:
         ...
 
+    def expand_state(self, state: Any, new_p: int) -> Any:
+        """Re-shard the policy state across a membership resize
+        (core/membership.py): worker ``i`` keeps slot ``i`` for
+        ``i < min(old_p, new_p)``, a shrink drops the tail, and newcomers
+        are re-initialized **from the aggregate** of the surviving workers
+        — so EMA/time/anneal state survives elastic membership instead of
+        resetting to round 0."""
+        ...
+
 
 _STAGES: Dict[str, type] = {}
 
@@ -340,6 +349,26 @@ class Ema:
         h_hat = jnp.where(n > 0, h_bar / jnp.maximum(corr, 1e-30), h)
         return h_hat, {"h_bar": h_bar, "n": n}
 
+    def expand_state(self, state, new_p: int):
+        """Newcomers adopt the aggregate estimate: the mean accumulator
+        (and observation count) over the surviving workers that have seen
+        at least one round — a joiner weighs in with the fleet's consensus
+        energy history, not a fresh round-0 estimate. If no survivor has
+        observations the newcomers start fresh (zeros)."""
+        h_bar, n = state["h_bar"], state["n"]
+        old_p = h_bar.shape[0]
+        if new_p <= old_p:
+            return {"h_bar": h_bar[:new_p], "n": n[:new_p]}
+        seen = n > 0
+        denom = jnp.maximum(seen.sum(), 1).astype(jnp.float32)
+        agg_h = jnp.where(seen, h_bar, 0.0).sum() / denom
+        agg_n = jnp.where(seen, n, 0.0).sum() / denom
+        grow = new_p - old_p
+        return {"h_bar": jnp.concatenate(
+                    [h_bar, jnp.full((grow,), agg_h, jnp.float32)]),
+                "n": jnp.concatenate(
+                    [n, jnp.full((grow,), agg_n, jnp.float32)])}
+
 
 @register_policy
 class TimeAware:
@@ -373,6 +402,17 @@ class TimeAware:
     def observe(self, state, times):
         return {"times": jnp.asarray(times, jnp.float32),
                 "seen": jnp.ones((), bool)}
+
+    def expand_state(self, state, new_p: int):
+        """Newcomers adopt the mean measured round time of the survivors
+        (the aggregate speed estimate) until their own first observation;
+        the ``seen`` flag is fleet-wide and carries over."""
+        tm = state["times"]
+        old_p = tm.shape[0]
+        if new_p <= old_p:
+            return {"times": tm[:new_p], "seen": state["seen"]}
+        fill = jnp.full((new_p - old_p,), tm.mean(), jnp.float32)
+        return {"times": jnp.concatenate([tm, fill]), "seen": state["seen"]}
 
 
 # ---------------------------------------------------------------------------
@@ -562,8 +602,49 @@ class PipelinePolicy:
                 st[key] = s.observe(st[key], times)
         return st
 
+    def expand_state(self, state, new_p: int):
+        """Re-shard the composed policy state across a membership resize
+        (``WorkerSet.resize`` — core/membership.py): each stateful stage's
+        per-worker arrays keep the survivors' slots (bitwise) and fill
+        newcomer slots from the stage's aggregate (the stage's own
+        ``expand_state``, or the generic survivor-mean fallback); the round
+        counter ``t`` — fleet state, not per-worker — carries over, so an
+        anneal curriculum does not restart when membership changes."""
+        if not isinstance(state, dict) or not state:
+            return state                         # () — stateless pipeline
+        st = dict(state)
+        for i, s in enumerate(self.energy_stages):
+            key = self._stage_key(i, s)
+            if key not in st:
+                continue
+            if hasattr(s, "expand_state"):
+                st[key] = s.expand_state(st[key], new_p)
+            else:
+                st[key] = _generic_expand_state(st[key], new_p)
+        return st
+
     def __repr__(self):
         return f"WeightPolicy({self.spec!r})"
+
+
+def _generic_expand_state(sub, new_p: int):
+    """Fallback per-stage resize for custom stateful stages that declare no
+    ``expand_state``: every array leaf is treated as per-worker along its
+    leading dim — survivors keep slots, newcomers get the survivor mean;
+    rank-0 leaves (counters, flags) pass through as fleet state."""
+    def visit(x):
+        x = jnp.asarray(x)
+        if x.ndim == 0:
+            return x
+        old_p = x.shape[0]
+        if new_p <= old_p:
+            return x[:new_p]
+        fill = jnp.broadcast_to(
+            x.astype(jnp.float32).mean(axis=0)[None],
+            (new_p - old_p,) + x.shape[1:]).astype(x.dtype)
+        return jnp.concatenate([x, fill], axis=0)
+
+    return jax.tree.map(visit, sub)
 
 
 # ---------------------------------------------------------------------------

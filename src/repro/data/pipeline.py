@@ -53,7 +53,20 @@ class OrderedDataset:
     def segment_of_round(self, r: int) -> int:
         return (r // self.rounds_per_segment) % self.n_segments
 
-    def batches(self) -> Iterator[Dict[str, np.ndarray]]:
+    def resize(self, new_p: int):
+        """Membership resize at a round boundary: the per-worker index rows
+        in ``batches`` follow ``self.p``, and the OrderState's seed columns
+        follow the slot contract (survivors keep their permutation, newcomers
+        draw fresh seeds — ``OrderState.resize``). Restart ``batches`` at the
+        resume round afterwards; a generator already in flight keeps the old
+        worker count."""
+        if int(new_p) < 1:
+            raise ValueError(f"resize needs new_p >= 1, got {new_p}")
+        self.p = int(new_p)
+        self.order.resize(self.p)
+
+    def batches(self, start_round: int = 0
+                ) -> Iterator[Dict[str, np.ndarray]]:
         """Infinite iterator over rounds; at EACH segment boundary the
         segment just left is ended (``OrderState.end_segment``), so
         OrderGen's keep-or-reshuffle decision (paper Alg. 2) fires per
@@ -66,8 +79,13 @@ class OrderedDataset:
         ``order_for`` re-derives the permutation from the seed every round,
         so reshuffling mid-traversal would switch the sample order under an
         epoch in progress (some samples seen twice, others skipped).
+
+        ``start_round`` resumes the round counter mid-traversal — the
+        elastic Trainer rebuilds this generator at each membership resize
+        (and a checkpoint resume) so the new generator picks up at the
+        round the old one stopped, with the new ``self.p``.
         """
-        r = 0
+        r = int(start_round)
         pending = []                     # (fire_at_round, segment) FIFO
         while True:
             seg = self.segment_of_round(r)
@@ -236,3 +254,27 @@ class RoundPrefetcher:
             except queue.Empty:
                 break
         self._thread.join(timeout=1.0)
+
+    def resize(self, n_workers: int, batches: Optional[Iterator[Dict]] = None):
+        """Membership resize: tear down the staging thread (everything it
+        buffered was laid out for the old worker count — worker-major
+        reshapes are not reinterpretable across ``p``), then restart staging
+        against ``batches`` (a fresh upstream generator built for the new
+        membership, e.g. ``OrderedDataset.batches(start_round=r)`` after
+        ``OrderedDataset.resize``; defaults to reusing the current upstream,
+        which is only correct if that iterator itself now yields new-``p``
+        rounds). The consumer's pair lookahead resets too, so the next
+        ``__next__`` yields the first new-membership round."""
+        if int(n_workers) < 1:
+            raise ValueError(f"resize needs n_workers >= 1, got {n_workers}")
+        self.close()
+        self.n_workers = int(n_workers)
+        if batches is not None:
+            self._batches = iter(batches)
+        self._q = queue.Queue(maxsize=self._q.maxsize)
+        self._stop = False
+        self._cur = None
+        self._done = False
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="round-prefetch")
+        self._thread.start()

@@ -47,7 +47,24 @@ def main():
     ap.add_argument("--lr", type=float, default=0.03)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--b-local", type=int, default=2)
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="write a final params-only flat checkpoint here")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for periodic full-state sharded "
+                         "checkpoints (checkpoint-dir/round_N); saved "
+                         "asynchronously every --checkpoint-every rounds")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="rounds between sharded checkpoints "
+                         "(0 = disabled; requires --checkpoint-dir)")
+    ap.add_argument("--resume", default=None,
+                    help="resume from a sharded checkpoint (a "
+                         "checkpoint-dir/round_N path); a checkpoint saved "
+                         "under a different --workers count is resized "
+                         "into this run's membership on restore")
+    ap.add_argument("--chaos", type=int, default=0, metavar="SEED",
+                    help="run under a seeded elastic membership chaos "
+                         "schedule (core/membership.make_chaos_schedule; "
+                         "0 = fixed membership)")
     ap.add_argument("--pipeline", default=None,
                     choices=["parity", "speculative"],
                     help="software-pipeline the round (train/step.py): "
@@ -85,8 +102,20 @@ def main():
     params, axes = init_params(cfg, jax.random.key(0))
     trainer = Trainer(make_lm_loss(cfg), params, axes, tcfg, args.workers,
                       rule=args.rule, pipeline=args.pipeline)
+    membership = None
+    if args.chaos:
+        from repro.core.membership import make_chaos_schedule
+        membership = make_chaos_schedule(args.workers, args.rounds,
+                                         seed=args.chaos)
+        print(f"chaos membership: {membership}")
+    if args.checkpoint_every and not args.checkpoint_dir:
+        raise SystemExit("--checkpoint-every requires --checkpoint-dir")
     summary = trainer.run(ds, args.rounds,
-                          log_every=max(1, args.rounds // 5))
+                          log_every=max(1, args.rounds // 5),
+                          checkpoint_every=args.checkpoint_every,
+                          checkpoint_path=args.checkpoint_dir,
+                          membership_schedule=membership,
+                          resume_from=args.resume)
     print(f"done: {summary}")
     if args.ckpt:
         save(args.ckpt, trainer.state.params,

@@ -456,7 +456,26 @@ def build_train_step(loss_fn: LossFn, optimizer: Optimizer, axes: Dict,
 
 
 def init_comm_state(rule_name: str, params: Dict, axes: Dict, n_workers: int,
-                    wcfg: Optional[WASGDConfig] = None):
+                    wcfg: Optional[WASGDConfig] = None, prev=None):
+    """Build (or, given ``prev=``, re-shard) a rule's communication state.
+
+    ``prev`` threads membership through: at a ``WorkerSet`` resize the
+    Trainer passes the old round's comm state and gets it re-sharded to
+    ``n_workers`` workers — surviving slots keep their state, newcomers
+    re-init from the fleet (core/membership.resize_comm_state) — instead of
+    a cold ``init_state`` that would forget the policy's learned assessment.
+    Rules whose comm state has a center/master variable (easgd, mwu) have no
+    elastic re-shard and reject ``prev``.
+    """
+    if prev is not None:
+        from repro.core.membership import resize_comm_state
+        if rule_name not in ("wasgd", "wasgd+"):
+            raise ValueError(
+                f"rule {rule_name!r} has no elastic comm-state re-shard")
+        pol = (policy_from_config(wcfg)
+               if wcfg is not None and policy_from_config(wcfg).stateful
+               else None)
+        return resize_comm_state(prev, n_workers, policy=pol)
     if rule_name == "easgd":
         return bl.easgd_init(params, axes)
     if rule_name in ("omwu", "mmwu", "mwu"):

@@ -18,7 +18,10 @@ import numpy as np
 
 from repro.configs.base import TrainConfig, WASGDConfig
 from repro.core import replicate_workers
+from repro.core.membership import (MembershipSchedule, WorkerSet,
+                                   resize_train_state)
 from repro.core.order import OrderState
+from repro.core.weights import policy_from_config
 from repro.data.pipeline import RoundPrefetcher
 from repro.optim import make_optimizer
 from repro.train.state import TrainState, init_state
@@ -78,7 +81,7 @@ class Trainer:
         keep OrderGen's per-segment decision aligned with the recorded
         Judge scores."""
         self.tcfg = tcfg
-        self.n_workers = n_workers
+        self.workers = WorkerSet(n_workers)
         self.rule_name = rule
         self.pipeline = pipeline
         if pipeline is not None and rule not in ("wasgd", "wasgd+"):
@@ -98,19 +101,136 @@ class Trainer:
                                      wcfg=tcfg.wasgd)
         self.state: TrainState = init_state(params, opt_state, n_workers,
                                             comm_state)
-        if rule == "easgd" and easgd_alpha is not None:
-            rule_fn = step_mod.easgd_rule(easgd_alpha)
+        self._loss_fn = loss_fn
+        self._mesh = mesh
+        self._overlap = overlap
+        self._jit = jit
+        self._easgd_alpha = easgd_alpha
+        self._ckpt = None                      # lazy AsyncCheckpointer
+        self._build_step()
+        self.history: list = []
+
+    @property
+    def n_workers(self) -> int:
+        """The live worker count — a round-boundary-mutable property of the
+        ``WorkerSet`` (changes only through ``resize``)."""
+        return self.workers.p
+
+    def _build_step(self):
+        """(Re)build the jitted round step for the current membership. The
+        step closes over ``n_workers`` (batch reshape, mask shapes), so
+        every ``resize`` swaps it; built steps are memoized per worker
+        count — a chaos schedule that revisits a ``p`` reuses that jit
+        wrapper (and its compilation cache) instead of recompiling."""
+        if not hasattr(self, "_step_cache"):
+            self._step_cache = {}
+        cached = self._step_cache.get(self.n_workers)
+        if cached is not None:
+            self._step, self._primer = cached
+            return
+        if self.rule_name == "easgd" and self._easgd_alpha is not None:
+            rule_fn = step_mod.easgd_rule(self._easgd_alpha)
         else:
-            rule_fn = RULES[rule](tcfg, mesh=mesh, overlap=overlap)
-        self._step = build_train_step(loss_fn, self.optimizer, axes,
-                                      tcfg.wasgd, n_workers, rule=rule_fn,
-                                      pipeline=pipeline)
-        self._primer = getattr(self._step, "primer", None)
-        if jit:
-            self._step = jax.jit(self._step, donate_argnums=(0,))
+            rule_fn = RULES[self.rule_name](self.tcfg, mesh=self._mesh,
+                                            overlap=self._overlap)
+        step = build_train_step(self._loss_fn, self.optimizer, self.axes,
+                                self.tcfg.wasgd, self.n_workers,
+                                rule=rule_fn, pipeline=self.pipeline)
+        self._primer = getattr(step, "primer", None)
+        if self._jit:
+            step = jax.jit(step, donate_argnums=(0,))
             if self._primer is not None:
                 self._primer = jax.jit(self._primer)
-        self.history: list = []
+        self._step = step
+        self._step_cache[self.n_workers] = (self._step, self._primer)
+
+    def _policy_for_resize(self):
+        if self.rule_name not in ("wasgd", "wasgd+"):
+            return None
+        pol = policy_from_config(self.tcfg.wasgd)
+        return pol if pol.stateful else None
+
+    def resize(self, new_p: int, round: Optional[int] = None):
+        """Commit a membership change at a round boundary: re-shard the
+        worker-stacked train state (survivors keep their slots bitwise,
+        newcomers adopt the aggregate — core/membership.py), re-shard the
+        comm state through ``init_comm_state(prev=)``, and rebuild the
+        jitted step for the new shapes. Returns the ``MembershipEvent``
+        (or None when ``new_p`` is already the live count)."""
+        if self.rule_name not in ("wasgd", "wasgd+"):
+            raise ValueError(
+                f"elastic membership is a wasgd/wasgd+ capability — rule "
+                f"{self.rule_name!r} pins worker count at construction")
+        new_p = int(new_p)
+        if new_p == self.n_workers:
+            return None
+        comm = init_comm_state(self.rule_name, self.state.params, self.axes,
+                               new_p, wcfg=self.tcfg.wasgd,
+                               prev=self.state.comm_state)
+        self.state = resize_train_state(self.state, self.axes, new_p,
+                                        policy=self._policy_for_resize(),
+                                        comm_state=comm)
+        event = self.workers.resize(new_p, round=round)
+        self._build_step()
+        return event
+
+    # -- sharded, resumable checkpoints -----------------------------------
+
+    def _topology(self, round: int) -> Dict:
+        """The membership record a sharded checkpoint carries: enough for a
+        restore to rebuild the saved state's shapes (``p``), place itself in
+        the run (``round``), and verify the rule/policy/comm-state structure
+        it is being restored into."""
+        from repro.checkpoint.io import _flatten
+        return {
+            "p": self.n_workers,
+            "round": int(round),
+            "rule": self.rule_name,
+            "policy": self.tcfg.wasgd.policy,
+            "comm_state": sorted(_flatten({"cs": self.state.comm_state})),
+        }
+
+    def save_checkpoint(self, path: str, round: int):
+        """Async sharded save of the FULL train state (params, optimizer
+        state, energy, comm state — not the params-only legacy format). The
+        call returns after an on-device snapshot; serialization rides the
+        next rounds' device time (checkpoint/io.AsyncCheckpointer)."""
+        from repro.checkpoint import AsyncCheckpointer
+        if self._ckpt is None:
+            self._ckpt = AsyncCheckpointer()
+        self._ckpt.save(path, self.state, meta={"round": int(round)},
+                        topology=self._topology(round))
+
+    def resume(self, path: str, allow_cast: bool = False) -> int:
+        """Restore a checkpoint into this trainer and return the round to
+        resume at. A sharded checkpoint saved under a DIFFERENT worker count
+        restores at its recorded ``p`` (the manifest topology shapes the
+        template) and then resizes to this trainer's live membership — the
+        saved survivors land bitwise in their slots, extra slots are filled
+        by the resize machinery's late-join rule."""
+        from repro.checkpoint import restore, saved_topology
+        info = saved_topology(path)
+        topo = info["topology"]
+        saved_p = int(topo.get("p", self.n_workers))
+        if topo.get("rule") is not None and topo["rule"] != self.rule_name:
+            raise ValueError(
+                f"checkpoint was saved by rule {topo['rule']!r}; this "
+                f"trainer runs {self.rule_name!r}")
+        pol = self._policy_for_resize()
+        like = self.state
+        if saved_p != self.n_workers:
+            if self.rule_name not in ("wasgd", "wasgd+"):
+                raise ValueError(
+                    f"checkpoint p={saved_p} != trainer p={self.n_workers} "
+                    f"and rule {self.rule_name!r} has no elastic resize")
+            like = resize_train_state(self.state, self.axes, saved_p,
+                                      policy=pol)
+        restored, meta = restore(path, like, allow_cast=allow_cast)
+        if saved_p != self.n_workers:
+            restored = resize_train_state(restored, self.axes,
+                                          self.n_workers, policy=pol)
+        self.state = restored
+        return int(topo.get("round", meta.get("round", 0)))
 
     def run(self, batches: Iterator[Dict], n_rounds: int,
             order_state: Optional[OrderState] = None,
@@ -118,7 +238,9 @@ class Trainer:
             log_every: int = 0, metrics_path: Optional[str] = None,
             checkpoint_every: int = 0,
             checkpoint_path: Optional[str] = None,
-            straggler_schedule=None) -> Dict:
+            straggler_schedule=None,
+            membership_schedule: Optional[MembershipSchedule] = None,
+            resume_from: Optional[str] = None) -> Dict:
         """``batches`` is a round-batch iterator, or an ``OrderedDataset``
         instance — passing the dataset itself lets a pipelined run VALIDATE
         that its OrderGen decisions are deferred past the prefetcher's
@@ -129,8 +251,28 @@ class Trainer:
         ``StragglerSchedule`` or ``(rounds, w)`` bool array covering all
         ``n_rounds``; round ``r``'s activity mask is injected into
         ``state.comm_state`` before the step, so the jitted Alg. 4 round
-        excludes that round's stragglers."""
+        excludes that round's stragglers.
+
+        ``membership_schedule`` makes the run ELASTIC: at each round
+        boundary where the schedule's ``p_of(r)`` differs from the live
+        ``WorkerSet``, the trainer resizes (``Trainer.resize``), the
+        OrderedDataset re-shards its per-worker index rows, and the round
+        generator (and prefetcher, when pipelined) restarts at round ``r``
+        with the new worker count. Requires ``batches`` to be the
+        ``OrderedDataset`` itself — a bare iterator bakes in a fixed ``p``.
+        Mutually exclusive with ``straggler_schedule`` (whose mask table is
+        a fixed ``(rounds, p)``); transient stragglers within a fixed
+        membership are that path, membership changes are this one.
+
+        ``checkpoint_every``/``checkpoint_path`` save the FULL train state
+        every N rounds as a sharded, topology-aware checkpoint
+        (``checkpoint_path/round_{r+1}``), asynchronously — serialization
+        rides the following rounds. ``resume_from`` restores such a
+        checkpoint (``Trainer.resume``) and continues at its recorded
+        round; a checkpoint from a different worker count resizes into this
+        trainer's membership on the way in."""
         from repro.data.pipeline import OrderedDataset
+        ds = None
         if isinstance(batches, OrderedDataset):
             ds = batches
             if self.pipeline is not None \
@@ -145,7 +287,6 @@ class Trainer:
                     f"RoundPrefetcher.run_ahead()")
             if order_state is None and segment_fn is None:
                 order_state, segment_fn = ds.order, ds.segment_of_round
-            batches = ds.batches()
         elif self.pipeline is not None and order_state is not None:
             import warnings
             warnings.warn(
@@ -181,6 +322,34 @@ class Trainer:
                     f"correlate the exclusion statistics)")
             from repro.core.async_device import validate_active_rounds
             validate_active_rounds(active_rounds, rounds=n_rounds)
+        if membership_schedule is not None:
+            if self.rule_name not in ("wasgd", "wasgd+"):
+                raise ValueError(
+                    f"membership_schedule is a wasgd/wasgd+ capability "
+                    f"(got rule={self.rule_name!r})")
+            if straggler_schedule is not None:
+                raise ValueError(
+                    "membership_schedule and straggler_schedule are "
+                    "mutually exclusive: the straggler mask table is a "
+                    "fixed (rounds, p) — model leaving workers as "
+                    "membership events instead")
+            if ds is None:
+                raise ValueError(
+                    "membership_schedule requires run(OrderedDataset, ...) "
+                    "— a bare batch iterator bakes in a fixed worker "
+                    "count, so its rounds cannot be re-sharded at a "
+                    "membership event")
+        start = 0
+        if resume_from is not None:
+            start = self.resume(resume_from)
+            if start >= n_rounds:
+                raise ValueError(
+                    f"checkpoint {resume_from} is at round {start}, at or "
+                    f"past n_rounds={n_rounds} — nothing left to run")
+            if ds is not None and ds.p != self.n_workers:
+                ds.resize(self.n_workers)
+        if ds is not None:
+            batches = ds.batches(start_round=start)
         t0 = time.time()
         mf = open(metrics_path, "a") if metrics_path else None
         prefetch = None
@@ -191,7 +360,18 @@ class Trainer:
             batches = prefetch
         carry = None
         try:
-            for r in range(n_rounds):
+            for r in range(start, n_rounds):
+                if membership_schedule is not None:
+                    target = membership_schedule.p_of(r)
+                    if target != self.n_workers:
+                        self.resize(target, round=r)
+                        ds.resize(target)
+                        gen = ds.batches(start_round=r)
+                        if prefetch is not None:
+                            prefetch.resize(target, gen)
+                        else:
+                            batches = gen
+                        carry = None      # re-prime the pipelined seam
                 if self.pipeline is not None:
                     batch, next_first = next(batches)
                 else:
@@ -215,6 +395,8 @@ class Trainer:
                     self.state, metrics = self._step(self.state, batch)
                 rec = {k: np.asarray(v) for k, v in metrics.items()}
                 rec["round"] = r
+                if membership_schedule is not None:
+                    rec["p"] = self.n_workers
                 self.history.append(rec)
                 if order_state is not None:
                     seg = segment_fn(r) if segment_fn else 0
@@ -226,9 +408,8 @@ class Trainer:
                     mf.flush()
                 if checkpoint_every and checkpoint_path \
                         and (r + 1) % checkpoint_every == 0:
-                    from repro.checkpoint import save
-                    save(os.path.join(checkpoint_path, f"round_{r+1}"),
-                         self.state.params, meta={"round": r + 1})
+                    self.save_checkpoint(
+                        os.path.join(checkpoint_path, f"round_{r+1}"), r + 1)
                 if log_every and (r + 1) % log_every == 0:
                     print(f"round {r+1}/{n_rounds} loss={rec['loss']:.4f} "
                           f"theta_entropy={rec['theta_entropy']:.3f}")
@@ -237,7 +418,9 @@ class Trainer:
                 mf.close()
             if prefetch is not None:
                 prefetch.close()
-        return {"rounds": n_rounds, "wall": time.time() - t0,
+            if self._ckpt is not None:
+                self._ckpt.wait()          # surface async save failures here
+        return {"rounds": n_rounds - start, "wall": time.time() - t0,
                 "final_loss": float(self.history[-1]["loss"])}
 
     def losses(self) -> np.ndarray:

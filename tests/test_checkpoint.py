@@ -1,0 +1,168 @@
+"""Sharded, topology-aware checkpoints + the hardened legacy restore
+(dtype verification, split structure-mismatch diagnostics, async saver)."""
+import functools
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (AsyncCheckpointer, restore, restore_sharded,
+                              save, save_sharded, saved_topology)
+from repro.configs import WASGDConfig
+from repro.core import replicate_workers
+from repro.models import cnn
+from repro.models.param import build
+from repro.optim import make_optimizer
+from repro.train.state import init_state
+from repro.train.step import init_comm_state
+
+
+def _full_state(p=4, opt_name="adamw"):
+    """A worker-stacked TrainState with the PR 5 stateful on_device comm
+    state ({"active", "policy"}) and real optimizer state."""
+    params0, axes0 = build(functools.partial(
+        cnn.mlp_init, d_in=8, d_hidden=16, n_classes=4), jax.random.key(0))
+    params, axes = replicate_workers(params0, axes0, p)
+    opt = make_optimizer(opt_name, 1e-3, 0.9, 0.01)
+    wcfg = WASGDConfig(tau=2, policy="ema|boltzmann", async_mode="on_device")
+    cs = init_comm_state("wasgd+", params, axes, p, wcfg=wcfg)
+    assert set(cs) == {"active", "policy"}
+    return init_state(params, opt.init(params), p, cs), axes
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert jnp.asarray(x).dtype == jnp.asarray(y).dtype
+
+
+# -- full-state round trips --------------------------------------------------
+
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum", "adamw"])
+def test_full_train_state_roundtrip_flat(tmp_path, opt_name):
+    state, _ = _full_state(opt_name=opt_name)
+    save(str(tmp_path / "ck"), state, meta={"round": 3})
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored, meta = restore(str(tmp_path / "ck"), like)
+    assert meta["round"] == 3
+    _assert_trees_equal(restored, state)
+
+
+def test_full_train_state_roundtrip_sharded(tmp_path):
+    state, _ = _full_state()
+    path = str(tmp_path / "ck")
+    save_sharded(path, state, meta={"round": 5},
+                 topology={"p": 4, "round": 5, "rule": "wasgd+"}, n_shards=3)
+    files = sorted(os.listdir(path))
+    assert files == ["manifest.json", "shard_00000.npz", "shard_00001.npz",
+                     "shard_00002.npz"]
+    # keys really spread over the shards (byte-balanced bin packing)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    shards_used = {e["shard"] for e in man["keys"].values()}
+    assert shards_used == {0, 1, 2}
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored, meta = restore_sharded(path, like)
+    assert meta["round"] == 5
+    _assert_trees_equal(restored, state)
+    # the generic restore() detects the sharded format and delegates
+    restored2, _ = restore(path, like)
+    _assert_trees_equal(restored2, state)
+
+
+def test_saved_topology(tmp_path):
+    state, _ = _full_state()
+    path = str(tmp_path / "ck")
+    save_sharded(path, state, topology={"p": 4, "round": 7})
+    info = saved_topology(path)
+    assert info["format"] == "wasgd-sharded-v1"
+    assert info["topology"] == {"p": 4, "round": 7}
+    save(str(tmp_path / "legacy"), {"w": jnp.ones(3)})
+    assert saved_topology(str(tmp_path / "legacy"))["format"] == "flat"
+
+
+def test_restore_sharded_rejects_flat(tmp_path):
+    save(str(tmp_path / "ck"), {"w": jnp.ones(3)})
+    with pytest.raises(ValueError, match="not a sharded checkpoint"):
+        restore_sharded(str(tmp_path / "ck"), {"w": jnp.ones(3)})
+
+
+# -- satellite bugfixes: dtype verification, split structure errors ----------
+
+def test_restore_dtype_mismatch_raises(tmp_path):
+    save(str(tmp_path / "ck"), {"w": jnp.arange(4, dtype=jnp.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch for w"):
+        restore(str(tmp_path / "ck"),
+                {"w": jnp.zeros(4, jnp.bfloat16)})
+
+
+def test_restore_allow_cast_escape_hatch(tmp_path):
+    save(str(tmp_path / "ck"), {"w": jnp.arange(4, dtype=jnp.float32)})
+    restored, _ = restore(str(tmp_path / "ck"),
+                          {"w": jnp.zeros(4, jnp.bfloat16)}, allow_cast=True)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(restored["w"], np.float32),
+                               np.arange(4.0))
+
+
+def test_restore_manifest_corruption_raises(tmp_path):
+    path = str(tmp_path / "ck")
+    save(path, {"w": jnp.arange(4, dtype=jnp.float32)})
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    man["keys"]["w"]["dtype"] = "int32"        # lie about the stored array
+    json.dump(man, open(os.path.join(path, "manifest.json"), "w"))
+    with pytest.raises(ValueError, match="corruption"):
+        restore(path, {"w": jnp.zeros(4, jnp.float32)})
+
+
+def test_structure_mismatch_split_messages(tmp_path):
+    path = str(tmp_path / "ck")
+    save(path, {"a": jnp.ones(2), "b": jnp.ones(2)})
+    with pytest.raises(ValueError, match="missing from checkpoint: \\['c'\\]"):
+        restore(path, {"a": jnp.ones(2), "b": jnp.ones(2), "c": jnp.ones(2)})
+    with pytest.raises(ValueError, match="unexpected in checkpoint: \\['b'\\]"):
+        restore(path, {"a": jnp.ones(2)})
+    # both directions at once name both sides
+    with pytest.raises(ValueError, match="missing.*unexpected"):
+        restore(path, {"a": jnp.ones(2), "c": jnp.ones(2)})
+
+
+def test_restore_pairs_unsorted_dict_keys(tmp_path):
+    """Insertion order != sorted order: each key restores its OWN array
+    (the old flat restore zipped _flatten keys with jax's sorted-leaf
+    order and could mis-pair same-shaped leaves)."""
+    tree = {"z": jnp.full(3, 1.0), "a": jnp.full(3, 2.0)}
+    save(str(tmp_path / "ck"), tree)
+    restored, _ = restore(str(tmp_path / "ck"),
+                          {"z": jnp.zeros(3), "a": jnp.zeros(3)})
+    np.testing.assert_array_equal(np.asarray(restored["z"]), np.full(3, 1.0))
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.full(3, 2.0))
+
+
+# -- async saver -------------------------------------------------------------
+
+def test_async_checkpointer_matches_sync(tmp_path):
+    state, _ = _full_state()
+    ac = AsyncCheckpointer()
+    ac.save(str(tmp_path / "async"), state, meta={"round": 1},
+            topology={"p": 4})
+    ac.wait()
+    ac.close()
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored, meta = restore(str(tmp_path / "async"), like)
+    assert meta["round"] == 1
+    _assert_trees_equal(restored, state)
+    assert saved_topology(str(tmp_path / "async"))["topology"]["p"] == 4
+
+
+def test_async_checkpointer_surfaces_write_errors(tmp_path):
+    bad = str(tmp_path / "a-file")
+    open(bad, "w").write("not a directory")
+    ac = AsyncCheckpointer()
+    ac.save(os.path.join(bad, "nested"), {"w": jnp.ones(2)})
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        ac.wait()

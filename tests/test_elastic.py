@@ -1,0 +1,333 @@
+"""Elastic worker membership: the WorkerSet lifecycle, resize machinery,
+data-side re-sharding, and the chaos convergence test (workers join, leave,
+and die mid-run; training converges anyway)."""
+import functools
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, WASGDConfig
+from repro.core import (MembershipSchedule, WorkerSet, make_chaos_schedule,
+                        replicate_workers, resize_comm_state,
+                        resize_opt_state, resize_train_state,
+                        resize_worker_leaves)
+from repro.core.async_device import resize_active_mask
+from repro.core.membership import MembershipEvent
+from repro.core.order import OrderState
+from repro.core.weights import parse_policy
+from repro.data import OrderedDataset, RoundPrefetcher, make_classification
+from repro.models import cnn
+from repro.models.param import build
+from repro.optim import make_optimizer
+from repro.train import Trainer
+
+
+# -- WorkerSet / schedules ---------------------------------------------------
+
+def test_workerset_lifecycle():
+    ws = WorkerSet(4)
+    assert ws.p == 4 and ws.generation == 0
+    ev = ws.resize(6, round=3)
+    assert ev == MembershipEvent(3, 4, 6)
+    assert ws.p == 6 and ws.generation == 1
+    ws.resize(6)                                  # no-op resize: logged, no gen bump
+    assert ws.generation == 1 and len(ws.log) == 2
+    with pytest.raises(ValueError):
+        ws.resize(0)
+    with pytest.raises(ValueError):
+        WorkerSet(0)
+
+
+def test_membership_schedule_p_of():
+    s = MembershipSchedule(4, {3: 6, 7: 2})
+    assert [s.p_of(r) for r in (0, 2, 3, 6, 7, 100)] == [4, 4, 6, 6, 2, 2]
+    assert s.max_p(8) == 6
+    with pytest.raises(ValueError):
+        MembershipSchedule(4, {2: 0})
+
+
+def test_chaos_schedule_bounds_and_determinism():
+    a = make_chaos_schedule(4, 32, seed=7)
+    b = make_chaos_schedule(4, 32, seed=7)
+    assert a.events == b.events and a.events  # deterministic, non-trivial
+    ps = [a.p_of(r) for r in range(32)]
+    assert all(1 <= p <= 8 for p in ps)
+    assert len(set(ps)) > 1                   # it actually moves
+
+
+# -- param / mask / policy-state resize --------------------------------------
+
+def _stacked(p):
+    params = {"w": jnp.arange(p * 3, dtype=jnp.float32).reshape(p, 3),
+              "shared": jnp.ones((2,))}
+    axes = {"w": ("worker", None), "shared": (None,)}
+    return params, axes
+
+
+def test_resize_worker_leaves_grow_shrink():
+    params, axes = _stacked(4)
+    small = resize_worker_leaves(params, axes, 2)
+    np.testing.assert_array_equal(small["w"], params["w"][:2])
+    np.testing.assert_array_equal(small["shared"], params["shared"])
+    big = resize_worker_leaves(params, axes, 6)
+    np.testing.assert_array_equal(big["w"][:4], params["w"])  # survivors bitwise
+    m = np.asarray(params["w"]).mean(axis=0)
+    np.testing.assert_allclose(big["w"][4:], np.stack([m, m]), rtol=1e-6)
+
+
+def test_resize_worker_leaves_theta_weighted_newcomers():
+    params, axes = _stacked(4)
+    theta = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    big = resize_worker_leaves(params, axes, 5, theta=theta)
+    np.testing.assert_allclose(big["w"][4], params["w"][0], rtol=1e-6)
+
+
+def test_resize_active_mask():
+    m = jnp.asarray([True, False, True, True])
+    np.testing.assert_array_equal(resize_active_mask(m, 2),
+                                  np.array([True, False]))
+    grown = resize_active_mask(m, 6)
+    np.testing.assert_array_equal(np.asarray(grown)[4:], [True, True])
+    with pytest.raises(ValueError):
+        resize_active_mask(jnp.asarray([False, False, True]), 2)
+
+
+def test_ema_policy_expand_state():
+    pol = parse_policy("ema(0.5)|boltzmann")
+    st = pol.init_state(3)
+    h = jnp.asarray([1.0, 2.0, 3.0])
+    _, st = pol(h, state=st)
+    grown = pol.expand_state(st, 5)
+    (k,) = [k for k in grown if k.endswith("ema")]
+    assert grown[k]["h_bar"].shape == (5,)
+    # newcomers adopt the survivors' mean running state
+    np.testing.assert_allclose(np.asarray(grown[k]["h_bar"][3:]),
+                               np.full(2, np.asarray(st[k]["h_bar"]).mean()),
+                               rtol=1e-6)
+    shrunk = pol.expand_state(st, 2)
+    np.testing.assert_allclose(np.asarray(shrunk[k]["h_bar"]),
+                               np.asarray(st[k]["h_bar"][:2]))
+
+
+def test_resize_comm_state_shapes():
+    assert resize_comm_state((), 5) == ()
+    mask = jnp.ones((4,), bool)
+    assert resize_comm_state(mask, 6).shape == (6,)
+    pol = parse_policy("ema|boltzmann")
+    st = pol.init_state(4)
+    out = resize_comm_state({"active": mask, "policy": st}, 6, policy=pol)
+    assert out["active"].shape == (6,)
+    with pytest.raises(ValueError):
+        resize_comm_state(object(), 3)
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum", "adamw"])
+def test_resize_opt_state(opt_name):
+    params, axes = _stacked(4)
+    opt = make_optimizer(opt_name, 0.1, 0.9, 0.01)
+    st = opt.init(params)
+    grown = resize_opt_state(st, axes, 6)
+    shrunk = resize_opt_state(st, axes, 2)
+    for s, p in ((grown, 6), (shrunk, 2)):
+        for leaf in jax.tree.leaves(s):
+            if np.ndim(leaf) >= 1 and np.shape(leaf)[-1] == 3:
+                assert np.shape(leaf)[0] == p
+
+
+def test_resize_train_state_full():
+    from repro.train.state import init_state
+    from repro.train.step import init_comm_state
+    params, axes = _stacked(4)
+    wcfg = WASGDConfig(tau=2, policy="ema|boltzmann", async_mode="on_device")
+    opt = make_optimizer("adamw", 1e-3, 0.0, 0.01)
+    cs = init_comm_state("wasgd+", params, axes, 4, wcfg=wcfg)
+    state = init_state(params, opt.init(params), 4, cs)
+    pol = parse_policy("ema|boltzmann")
+    out = resize_train_state(state, axes, 6, policy=pol)
+    assert out.params["w"].shape == (6, 3)
+    assert out.energy.shape == (6,)
+    assert out.comm_state["active"].shape == (6,)
+    np.testing.assert_array_equal(out.params["w"][:4], params["w"])
+
+
+def test_init_comm_state_prev_threads_membership():
+    from repro.train.step import init_comm_state
+    params, axes = _stacked(4)
+    wcfg = WASGDConfig(tau=2, async_mode="on_device")
+    cs = init_comm_state("wasgd", params, axes, 4, wcfg=wcfg)
+    out = init_comm_state("wasgd", params, axes, 6, wcfg=wcfg, prev=cs)
+    assert out.shape == (6,)
+    with pytest.raises(ValueError):
+        init_comm_state("easgd", params, axes, 6, prev=cs)
+
+
+# -- data-side resize --------------------------------------------------------
+
+def test_order_state_resize_keeps_survivor_seeds():
+    st = OrderState(4, 2, base_seed=1)
+    seeds = st.seeds.copy()
+    st.resize(6)
+    np.testing.assert_array_equal(st.seeds[:, :4], seeds)
+    assert st.seeds.shape == (2, 6) and st.scores.shape == (2, 6)
+    st.resize(3)
+    np.testing.assert_array_equal(st.seeds, seeds[:, :3])
+
+
+def test_ordered_dataset_resize_and_start_round():
+    X, y = make_classification(0, 256, d=4, n_classes=2)
+    ds = OrderedDataset({"x": X, "y": y}, 4, tau=2, b_local=4, n_segments=2)
+    it = ds.batches()
+    b = next(it)
+    assert b["x"].shape[0] == 2 * 4 * 4
+    ds.resize(6)
+    it2 = ds.batches(start_round=5)
+    b2 = next(it2)
+    assert b2["x"].shape[0] == 2 * 6 * 4
+    # a worker's round-5 rows are independent of the other workers' count:
+    # survivors keep their permutation seeds (the slot contract)
+    ds2 = OrderedDataset({"x": X, "y": y}, 4, tau=2, b_local=4, n_segments=2,
+                         order_state=None, seed=0)
+    for _ in range(5):
+        next(ds2.batches())
+
+
+def test_prefetcher_resize_restarts_staging():
+    X, y = make_classification(1, 256, d=4, n_classes=2)
+    ds = OrderedDataset({"x": X, "y": y}, 2, tau=2, b_local=4)
+    pf = RoundPrefetcher(ds.batches(), 2, tau=2, to_device=False)
+    b, first = next(pf)
+    assert b["x"].shape[0] == 2 * 2 * 4 and first["x"].shape[:2] == (2, 4)
+    ds.resize(3)
+    pf.resize(3, ds.batches(start_round=1))
+    b, first = next(pf)
+    assert b["x"].shape[0] == 2 * 3 * 4 and first["x"].shape[:2] == (3, 4)
+    pf.close()
+
+
+# -- Trainer integration -----------------------------------------------------
+
+def _trainer_setup(seed=0):
+    X, y = make_classification(seed, 1024, d=16, n_classes=4)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=16, d_hidden=32, n_classes=4),
+        jax.random.key(seed))
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(cnn.mlp_apply(p, b["x"]), b["y"]), {}
+
+    return X, y, params, axes, loss_fn
+
+
+def test_trainer_resize_validations():
+    X, y, params, axes, loss_fn = _trainer_setup()
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=2))
+    tr = Trainer(loss_fn, params, axes, tcfg, 2, rule="easgd")
+    with pytest.raises(ValueError):
+        tr.resize(3)
+    tr2 = Trainer(loss_fn, params, axes, tcfg, 2)
+    ds = OrderedDataset({"x": X, "y": y}, 2, 2, 8)
+    with pytest.raises(ValueError, match="OrderedDataset"):
+        tr2.run(ds.batches(), 4,
+                membership_schedule=MembershipSchedule(2, {1: 3}))
+
+
+def test_trainer_membership_straggler_exclusive():
+    X, y, params, axes, loss_fn = _trainer_setup()
+    tcfg = TrainConfig(learning_rate=0.05,
+                       wasgd=WASGDConfig(tau=2, async_mode="on_device"))
+    tr = Trainer(loss_fn, params, axes, tcfg, 2)
+    ds = OrderedDataset({"x": X, "y": y}, 2, 2, 8)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        tr.run(ds, 4, membership_schedule=MembershipSchedule(2, {1: 3}),
+               straggler_schedule=np.ones((4, 2), bool))
+
+
+def test_trainer_resize_preserves_survivors():
+    X, y, params, axes, loss_fn = _trainer_setup()
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=2))
+    tr = Trainer(loss_fn, params, axes, tcfg, 4)
+    before = jax.tree.map(np.asarray, tr.state.params)
+    ev = tr.resize(6, round=0)
+    assert ev.new_p == 6 and tr.n_workers == 6
+    for k, v in tr.state.params.items():
+        np.testing.assert_array_equal(np.asarray(v)[:4], before[k])
+    assert tr.resize(6) is None              # no-op
+
+
+@pytest.mark.parametrize("pipeline", [None, "parity"])
+def test_chaos_schedule_converges(pipeline):
+    """The acceptance chaos test: a kill/revive schedule over >= 8 rounds
+    still converges, with the final loss within tolerance of a fixed-p
+    run of the same length."""
+    X, y, params, axes, loss_fn = _trainer_setup(seed=3)
+    n_rounds = 12
+    bd = RoundPrefetcher.run_ahead() if pipeline else 0
+
+    def make(p):
+        tcfg = TrainConfig(learning_rate=0.05,
+                           wasgd=WASGDConfig(tau=2, policy="ema|boltzmann"))
+        tr = Trainer(loss_fn, params, axes, tcfg, p, rule="wasgd+",
+                     pipeline=pipeline)
+        ds = OrderedDataset({"x": X, "y": y}, p, 2, 8, n_segments=2,
+                            boundary_delay=bd)
+        return tr, ds
+
+    tr_fixed, ds_fixed = make(4)
+    tr_fixed.run(ds_fixed, n_rounds)
+
+    sched = make_chaos_schedule(4, n_rounds, seed=2)
+    assert sched.events, "chaos schedule must actually change membership"
+    tr_el, ds_el = make(4)
+    res = tr_el.run(ds_el, n_rounds, membership_schedule=sched)
+
+    ps = [h["p"] for h in tr_el.history]
+    assert len(set(ps)) > 1                   # membership really moved
+    assert tr_el.n_workers == sched.p_of(n_rounds - 1)
+    first, final = tr_el.history[0]["loss"], res["final_loss"]
+    assert final < 0.6 * float(first)         # it converges
+    # and lands within tolerance of the fixed-membership run
+    assert final < 3.0 * tr_fixed.history[-1]["loss"] + 0.15
+
+
+def test_elastic_checkpoint_resume_other_p(tmp_path):
+    """Sharded checkpoint saved mid-run restores bitwise-identically on the
+    same topology, and resumes under a DIFFERENT p via the resize
+    machinery."""
+    X, y, params, axes, loss_fn = _trainer_setup(seed=4)
+    tcfg = TrainConfig(
+        learning_rate=0.05, optimizer="adamw",
+        wasgd=WASGDConfig(tau=2, policy="ema|boltzmann",
+                          async_mode="on_device"))
+
+    def make(p):
+        tr = Trainer(loss_fn, params, axes, tcfg, p, rule="wasgd+")
+        ds = OrderedDataset({"x": X, "y": y}, p, 2, 8)
+        return tr, ds
+
+    tr, ds = make(4)
+    cpath = str(tmp_path / "ck")
+    tr.run(ds, 6, checkpoint_every=3, checkpoint_path=cpath)
+    ck = os.path.join(cpath, "round_6")
+
+    # same topology: bitwise restore of the FULL state
+    tr2, _ = make(4)
+    assert tr2.resume(ck) == 6
+    for a, b in zip(jax.tree.leaves(tr.state), jax.tree.leaves(tr2.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # different p: survivors land bitwise, newcomers from the aggregate,
+    # and the run continues
+    tr3, ds3 = make(6)
+    res = tr3.run(ds3, 10, resume_from=ck)
+    assert res["rounds"] == 4 and tr3.n_workers == 6
+    assert np.isfinite(res["final_loss"])
+
+    # shrink resume too
+    tr4, _ = make(2)
+    assert tr4.resume(ck) == 6
+    np.testing.assert_array_equal(
+        np.asarray(tr4.state.params["w_in"]),
+        np.asarray(tr.state.params["w_in"])[:2])

@@ -43,10 +43,17 @@ def test_metrics_jsonl_and_checkpoints(tmp_path):
 
     assert os.path.isdir(os.path.join(cpath, "round_3"))
     assert os.path.isdir(os.path.join(cpath, "round_6"))
-    like = jax.tree.map(jnp.zeros_like, tr.state.params)
+    # periodic checkpoints are now the FULL train state in the sharded,
+    # topology-aware format — restore the whole thing and check the params
+    from repro.checkpoint import saved_topology
+    topo = saved_topology(os.path.join(cpath, "round_6"))
+    assert topo["format"] == "wasgd-sharded-v1"
+    assert topo["topology"]["p"] == 2
+    assert topo["topology"]["round"] == 6
+    like = jax.tree.map(jnp.zeros_like, tr.state)
     restored, meta = restore(os.path.join(cpath, "round_6"), like)
     assert meta["round"] == 6
-    for a, b in zip(jax.tree.leaves(restored),
+    for a, b in zip(jax.tree.leaves(restored.params),
                     jax.tree.leaves(tr.state.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 
