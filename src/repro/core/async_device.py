@@ -30,9 +30,11 @@ synchronous update). The legacy names stay as registry aliases —
 
 — and ``async_backend_name`` now maps ANY resolvable spec to its Alg. 4
 form, so the async regime composes with the payload axis
-(``"hierarchical:int8"`` under a straggler mask is a valid round). Only
-``pallas_wagg`` has no masked path. The host simulation stays the semantic
-oracle: ``tests/test_async_device.py`` injects the same
+(``"hierarchical:int8"`` under a straggler mask is a valid round). Since
+the v2 fused kernel that includes ``pallas_wagg``: the activity mask is
+applied inside the kernel's VMEM pass, so the on-device round can select
+``pallas_wagg:<codec>`` like any other spec. The host simulation stays the
+semantic oracle: ``tests/test_async_device.py`` injects the same
 ``StragglerSchedule`` into both paths and requires leaf-for-leaf parity.
 
 Worker assessment comes from the policy axis (core/weights.py): the
@@ -75,8 +77,10 @@ def async_backend_name(name: str) -> str:
     ``schedule[:codec]`` spec is already mask-capable (the composed
     ``finalize`` applies the late-join whenever ``ctx.active`` is set), so
     it maps to its own canonical spec — e.g. ``"quantized"`` ->
-    ``"einsum:int8"``, ``"hierarchical:int8"`` -> itself. ``pallas_wagg``
-    is the one schedule with no masked path.
+    ``"einsum:int8"``, ``"hierarchical:int8"`` -> itself, ``"pallas_wagg"``
+    -> ``"pallas_wagg:f32"`` (the v2 fused kernel applies the mask in its
+    VMEM pass). Schedules registered with ``supports_mask=False`` still
+    raise — there is no Alg. 4 round without a late-join path.
     """
     if name in ASYNC_BACKENDS:
         return name

@@ -44,8 +44,11 @@ identical with or without it.
                   the codec's wire dtype, and the two phases straddle the
                   ``overlap=`` thunk. Requires ``ctx.mesh``.
 ``pallas_wagg``   Fused Pallas TPU kernel for the local FMA
-                  (``kernels/wagg``): one VMEM pass instead of three HBM
-                  round trips. f32 only; interpret mode on CPU.
+                  (``kernels/wagg``): codec decode + Alg. 4 mask + Eq. 10
+                  FMA in one VMEM pass instead of three-plus HBM round
+                  trips — the quantized specs (``pallas_wagg:int8``/
+                  ``:int4``) skip the separate decode program entirely.
+                  Composes with every codec; interpret mode on CPU.
 
 Codecs (the payload axis) live in ``core/codecs.py``: ``f32``, ``bf16``,
 ``int8`` (the old ``quantized`` backend), ``int4`` (stochastic rounding).
@@ -66,8 +69,9 @@ Alias table (old name -> spec)
     async_rs_ag      rs_ag            honors ``ctx.active`` in its finalize
                                       (stragglers late-join the aggregate),
                                       so the async family composes with any
-                                      codec (e.g. "hierarchical:int8" under
-                                      a straggler mask).
+                                      codec (e.g. "hierarchical:int8" or
+                                      "pallas_wagg:int8" under a straggler
+                                      mask).
 
 Legacy boolean knobs also compose now: ``quantize_comm=True`` +
 ``sharded_aggregate=True`` resolves to ``"rs_ag:int8"`` instead of silently
@@ -135,12 +139,17 @@ class AggregationContext:
                    ``None`` = all workers active (no mask in the program).
     ``key``        optional PRNG key for stochastic codecs (``int4``);
                    ``None`` = a fixed fold-in (deterministic).
+    ``leaf_index`` position of the current worker leaf in the flattened
+                   tree; set per-leaf by ``ComposedBackend.aggregate`` so
+                   stochastic codecs draw DISTINCT noise for identical-
+                   content leaves (zero-inits, tied embeddings).
     """
     mesh: Optional[Mesh] = None
     comm_dtype: Any = jnp.float32
     n_pods: int = 1
     active: Optional[jax.Array] = None
     key: Optional[jax.Array] = None
+    leaf_index: Optional[int] = None
 
 
 DEFAULT_CONTEXT = AggregationContext()
@@ -344,29 +353,36 @@ class _RsAgSchedule:
 
 
 class _PallasWaggSchedule:
-    """Fused Pallas TPU kernel for the local FMA (kernels/wagg): aggregation
-    and FMA in one VMEM pass. f32 only; no Alg. 4 mask path."""
+    """Fused Pallas TPU kernel for the local FMA (kernels/wagg), v2: codec
+    decode + the Alg. 4 activity mask + the Eq. 10 FMA in ONE VMEM pass.
+
+    The codec's wire tiles (int8-carried int4/int8, bf16) ride into the
+    kernel as-is — the per-leaf scalar scale (``aux``) is folded into theta
+    by ``wagg_fused_leaf`` — and are widened to f32 in VMEM, so the
+    quantized specs cost one HBM round trip instead of encode/reduce/decode
+    as three separate XLA programs. ``ctx.active`` selects the late-join
+    rows in the same pass. Meshless (local FMA); interpret mode off-TPU.
+    """
     name = "pallas_wagg"
     needs_mesh = False
     n_phases = 1
-    codecs = ("f32",)
-    supports_mask = False          # the fused kernel has no late-join path
-
-    def validate(self, theta, ctx):
-        if ctx.active is not None:
-            raise ValueError(
-                "'pallas_wagg' has no Alg. 4 (masked/late-join) path; use "
-                "the einsum/shard_map/rs_ag schedules for async rounds")
+    codecs = ("f32", "bf16", "int8", "int4")
+    supports_mask = True        # v2: the kernel applies the late-join in-pass
 
     def prepare(self, x, theta, codec, ctx):
-        return {}
+        if codec.name == "f32":
+            # the payload IS x: the kernel streams x once, not twice.
+            return {"payload": None, "aux": None}
+        payload, aux = codec.encode(x, ctx)
+        return {"payload": payload, "aux": aux}
 
     def reduce_phase(self, i, state, theta, codec, ctx):
-        return state
+        return state    # the fused kernel is the reduce; nothing rides a wire
 
     def finalize(self, state, x, theta, beta, codec, ctx):
-        from repro.kernels.wagg.ops import wagg_leaf   # lazy: kernels optional
-        return wagg_leaf(x, theta, beta)
+        from repro.kernels.wagg.ops import wagg_fused_leaf   # lazy: optional
+        return wagg_fused_leaf(x, state["payload"], state["aux"], theta,
+                               beta, active=ctx.active)
 
 
 # ---------------------------------------------------------------------------
@@ -533,18 +549,21 @@ class ComposedBackend:
         idx = [i for i, ax in enumerate(leaves_ax) if agg.is_worker_leaf(ax)]
 
         sched = self.schedule
-        states = {i: sched.prepare(leaves_x[i], theta, codec, ctx)
+        # Per-leaf context: the flatten position rides in ctx.leaf_index so
+        # stochastic codecs decorrelate identical-content leaves.
+        ctxs = {i: dataclasses.replace(ctx, leaf_index=i) for i in idx}
+        states = {i: sched.prepare(leaves_x[i], theta, codec, ctxs[i])
                   for i in idx}
         overlap_out = None
         for phase in range(sched.n_phases):
-            states = {i: sched.reduce_phase(phase, st, theta, codec, ctx)
+            states = {i: sched.reduce_phase(phase, st, theta, codec, ctxs[i])
                       for i, st in states.items()}
             if phase == 0 and overlap is not None:
                 overlap_out = overlap()
         out = list(leaves_x)
         for i in idx:
             out[i] = sched.finalize(states[i], leaves_x[i], theta, beta,
-                                    codec, ctx)
+                                    codec, ctxs[i])
         tree = jax.tree_util.tree_unflatten(treedef, out)
         if overlap is None:
             return tree

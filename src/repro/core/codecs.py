@@ -48,6 +48,14 @@ operand instead and let the partial ride in ``reduce_dtype`` — partial sums
 of integer payloads are fractional, so re-quantizing them per-hop would
 compound error silently.
 
+Codecs also feed the fused ``pallas_wagg`` kernel (``kernels/wagg``)
+directly: the ``(payload, aux)`` pair rides into the kernel as-is — wire
+tiles are decoded IN VMEM in the same pass as the Eq. 10 FMA, with the
+per-leaf scalar ``aux`` (the int8/int4 scale) folded into theta by the ops
+wrapper, so ``decode_reduced`` never runs as a separate XLA program on
+that path. Both paths are equivalent up to float reassociation:
+``sum_j (theta_j * scale) q_j == scale * sum_j theta_j q_j``.
+
 Adding a codec
 ==============
 
@@ -155,9 +163,13 @@ class _Int4StochasticCodec:
     comes from ``ctx.key`` when the caller threads one; either way the leaf
     CONTENT is mixed into the key (an xor-fold of the payload bits), so the
     noise pattern changes whenever the parameters do — fresh pseudo-noise
-    every training round without any key plumbing through the jitted round,
-    and distinct noise for same-shaped leaves. Encoding is deterministic per
-    (key, leaf value), which is what the parity tests want.
+    every training round without any key plumbing through the jitted round
+    — and ``ctx.leaf_index`` (the leaf's position in the flattened tree,
+    set per-leaf by ``ComposedBackend.aggregate``) is folded in on top, so
+    IDENTICAL-content leaves (zero-inits, tied embeddings) still draw
+    distinct noise instead of correlating their quantization error across
+    the tree. Encoding is deterministic per (key, leaf value, leaf index),
+    which is what the parity tests want.
     """
 
     name = "int4"
@@ -180,6 +192,13 @@ class _Int4StochasticCodec:
         seed = jax.lax.reduce(bits.ravel(), jnp.uint32(0),
                               jax.lax.bitwise_xor, (0,))
         key = jax.random.fold_in(jax.random.fold_in(key, x.size), seed)
+        # (size, content-xor) alone collide for equal-content leaves —
+        # zero-inits and tied embeddings would draw the SAME noise and bias
+        # the aggregate; the per-leaf tree position breaks the tie.
+        leaf_index = getattr(ctx, "leaf_index", None) if ctx is not None \
+            else None
+        if leaf_index is not None:
+            key = jax.random.fold_in(key, leaf_index)
         u = jax.random.uniform(key, x.shape, jnp.float32)
         q = jnp.clip(jnp.floor(x.astype(jnp.float32) / scale + u), -7, 7)
         return q.astype(jnp.int8), scale

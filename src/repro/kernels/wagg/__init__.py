@@ -1,5 +1,7 @@
-from repro.kernels.wagg.ops import aggregate_tree_wagg, wagg_leaf
-from repro.kernels.wagg.ref import wagg_ref
-from repro.kernels.wagg.wagg import wagg
+from repro.kernels.wagg.ops import (aggregate_tree_wagg, wagg_fused_leaf,
+                                    wagg_leaf)
+from repro.kernels.wagg.ref import wagg_fused_ref, wagg_ref
+from repro.kernels.wagg.wagg import auto_block_n, wagg, wagg_fused
 
-__all__ = ["aggregate_tree_wagg", "wagg", "wagg_leaf", "wagg_ref"]
+__all__ = ["aggregate_tree_wagg", "auto_block_n", "wagg", "wagg_fused",
+           "wagg_fused_leaf", "wagg_fused_ref", "wagg_leaf", "wagg_ref"]

@@ -1,30 +1,56 @@
-"""jit'd public entry points for the wagg kernel.
+"""jit'd public entry points for the wagg kernels.
 
-``aggregate_tree_wagg`` applies the kernel leaf-wise over a worker-stacked
-parameter tree — a drop-in ``leaf_fn`` for ``core.aggregate.weighted_aggregate``,
-and the implementation behind the ``"pallas_wagg"`` aggregation backend
-(``core/backends.py``; select it with ``WASGDConfig(backend="pallas_wagg")``).
-On non-TPU backends the kernel runs in interpret mode (CPU validation); the
-pure-jnp reference is available as a fallback.
+``wagg_leaf`` / ``wagg_fused_leaf`` apply the fused Eq. 10 kernel to one
+worker-stacked parameter leaf; ``aggregate_tree_wagg`` maps it over a whole
+tree — a drop-in ``leaf_fn`` for ``core.aggregate.weighted_aggregate`` and
+the implementation behind the ``"pallas_wagg"`` aggregation schedule
+(``core/backends.py``; select it with
+``WASGDConfig(backend="pallas_wagg:<codec>")``). ``wagg_fused_leaf`` is the
+v2 seam: it takes the codec's (payload, aux) pair and the Alg. 4 activity
+mask, folds the per-leaf scalar scale into theta, and runs decode + mask +
+FMA as ONE kernel pass. On non-TPU backends the kernels run in interpret
+mode (CPU validation); the pure-jnp references are available as fallbacks.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.wagg.wagg import wagg
-from repro.kernels.wagg.ref import wagg_ref
+from repro.kernels.wagg.wagg import auto_block_n, wagg, wagg_fused
+from repro.kernels.wagg.ref import wagg_fused_ref, wagg_ref
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def wagg_leaf(x: jax.Array, theta: jax.Array, beta) -> jax.Array:
-    """One (p, ...) parameter leaf through the fused kernel."""
+def wagg_leaf(x: jax.Array, theta: jax.Array, beta,
+              active: Optional[jax.Array] = None) -> jax.Array:
+    """One (p, ...) parameter leaf through the fused kernel (f32 payload)."""
+    return wagg_fused_leaf(x, None, None, theta, beta, active=active)
+
+
+def wagg_fused_leaf(x: jax.Array, payload: Optional[jax.Array], aux,
+                    theta: jax.Array, beta,
+                    active: Optional[jax.Array] = None) -> jax.Array:
+    """One (p, ...) leaf: fused codec decode + Alg. 4 mask + Eq. 10 FMA.
+
+    ``payload``/``aux`` are the codec's ``encode`` outputs (``payload=None``
+    = the payload is x itself, the f32 codec). ``aux`` — the per-leaf scalar
+    scale of the int8/int4 codecs — is folded into theta here
+    (``m = sum_j (theta_j * scale) q_j``), so the kernel consumes the wire
+    tiles untouched and needs no scalar plumbing of its own.
+    """
     p = x.shape[0]
-    flat = x.reshape(p, -1)
-    out = wagg(flat, theta, float(beta), interpret=_interpret())
+    theta_eff = theta.astype(jnp.float32)
+    if aux is not None:
+        theta_eff = theta_eff * jnp.asarray(aux, jnp.float32)
+    flat_q = None if payload is None else payload.reshape(p, -1)
+    act = None if active is None else active.astype(jnp.float32)
+    out = wagg_fused(x.reshape(p, -1), theta_eff, float(beta),
+                     payload=flat_q, active=act, interpret=_interpret())
     return out.reshape(x.shape)
 
 
@@ -33,4 +59,5 @@ def aggregate_tree_wagg(params, axes, theta, beta):
     return weighted_aggregate(params, axes, theta, beta, leaf_fn=wagg_leaf)
 
 
-__all__ = ["wagg", "wagg_ref", "wagg_leaf", "aggregate_tree_wagg"]
+__all__ = ["aggregate_tree_wagg", "auto_block_n", "wagg", "wagg_fused",
+           "wagg_fused_leaf", "wagg_fused_ref", "wagg_leaf", "wagg_ref"]

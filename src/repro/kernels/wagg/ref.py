@@ -1,5 +1,7 @@
-"""Pure-jnp oracle for the wagg kernel."""
+"""Pure-jnp oracles for the wagg kernels."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -10,3 +12,20 @@ def wagg_ref(x: jax.Array, theta: jax.Array, beta: float) -> jax.Array:
     xf = x.astype(jnp.float32)
     agg = jnp.tensordot(theta.astype(jnp.float32), xf, axes=1)
     return ((1.0 - beta) * xf + beta * agg[None]).astype(x.dtype)
+
+
+def wagg_fused_ref(x: jax.Array, theta: jax.Array, beta: float,
+                   payload: Optional[jax.Array] = None,
+                   active: Optional[jax.Array] = None) -> jax.Array:
+    """Oracle for the v2 fused kernel: the aggregate is taken over the codec
+    ``payload`` (decoded to f32; per-leaf scale pre-folded into ``theta``,
+    exactly the kernel's contract), the FMA against the original ``x``, and
+    ``active`` rows late-join by adopting the aggregate."""
+    xf = x.astype(jnp.float32)
+    src = xf if payload is None else payload.astype(jnp.float32)
+    m = jnp.tensordot(theta.astype(jnp.float32), src, axes=1)
+    out = (1.0 - beta) * xf + beta * m[None]
+    if active is not None:
+        out = jnp.where(active[:, None] != 0, out,
+                        jnp.broadcast_to(m[None], out.shape))
+    return out.astype(x.dtype)

@@ -1,52 +1,144 @@
-"""Pallas TPU kernel: fused WASGD weighted aggregation (Eq. 10).
+"""Pallas TPU kernel: fused WASGD weighted aggregation (Eq. 10), v2.
 
-    out[i, :] = (1 - beta) * x[i, :] + beta * sum_j theta[j] * x[j, :]
+    out[i, :] = (1 - beta) * x[i, :] + beta * sum_j theta[j] * q[j, :]
 
 over a worker-stacked parameter block x: (p, N). A naive XLA lowering does
 (reduce -> broadcast -> two muls -> add) with three HBM round trips over the
-full parameter set; this kernel streams each (p, block_n) tile through VMEM
-once. The worker dimension p (<= 32 on the production meshes) rides along in
-full per tile, so the MXU-free VPU reduction over p stays in registers.
+full parameter set — and with a quantizing codec, encode/decode are further
+separate XLA programs with their own round trips. This kernel streams each
+(p, block_n) tile through VMEM once and fuses, in the same pass:
 
-Tiling: grid over N in ``block_n`` VMEM tiles; block_n is chosen so
-p * block_n * 4B (f32 accumulation) fits comfortably in VMEM (default
-p=32 x 8192 x 4B = 1 MiB in, 1 MiB out).
+* **codec decode** — ``payload`` may be the codec's wire tiles (int8-carried
+  int4/int8, or bf16); they are widened to f32 *in VMEM* and accumulated in
+  f32. The per-leaf scalar scale (the codec ``aux``) is folded into theta by
+  the ops wrapper, so integer tiles ride in untouched. ``payload=None``
+  means the payload IS x (the f32 codec) and x is read once, not twice.
+* **the Eq. 10 FMA** — ``(1-beta) x + beta m`` against the ORIGINAL x.
+* **the Alg. 4 activity mask** — ``active`` (p,) selects the late-join rows
+  (stragglers adopt the aggregate m; their theta is already 0 so m excludes
+  them). ``active=None`` places no mask in the program at all.
+
+The worker dimension p rides along in full per tile, so the MXU-free VPU
+reduction over p stays in registers.
+
+Tiling: grid over N in ``block_n`` VMEM tiles. ``auto_block_n`` guards the
+VMEM budget: for large p the default ``block_n`` would over-allocate
+(p * block_n * bytes/col), so the block is halved until the working set
+fits instead of failing at compile time.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Per-kernel-invocation VMEM working-set budget. Real TPU cores have ~16 MiB
+# of VMEM; half of it leaves room for double buffering of the streamed tiles.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
-def _wagg_kernel(theta_ref, x_ref, o_ref, *, beta: float):
+_MIN_BLOCK_N = 128
+
+
+def _default_interpret() -> bool:
+    # Same derivation as every other kernel's ops wrapper (e.g.
+    # kernels/rmsnorm/ops.py): compiled on TPU, interpret elsewhere. The old
+    # signature default hardcoded True, silently pinning direct TPU callers
+    # to interpret mode.
+    return jax.default_backend() != "tpu"
+
+
+def auto_block_n(p: int, block_n: int, bytes_per_col: int,
+                 budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Shrink ``block_n`` until the (p, block_n) tile working set fits VMEM.
+
+    ``bytes_per_col`` is the per-element footprint across everything resident
+    per tile (x in f32 + out + the separate payload when there is one). The
+    block halves until ``p * block_n * bytes_per_col <= budget`` or the
+    128-column floor, instead of over-allocating for large p.
+    """
+    bn = block_n
+    while bn > _MIN_BLOCK_N and p * bn * bytes_per_col > budget:
+        bn //= 2
+    return bn
+
+
+def _wagg_kernel(*refs, beta: float, masked: bool, separate_payload: bool):
+    it = iter(refs)
+    theta = next(it)[...].astype(jnp.float32)     # (p,)  scale pre-folded
+    active = next(it)[...] if masked else None    # (p,)  f32 0/1
+    q_ref = next(it) if separate_payload else None
+    x_ref = next(it)
+    o_ref = next(it)
     x = x_ref[...].astype(jnp.float32)            # (p, bn)
-    theta = theta_ref[...].astype(jnp.float32)    # (p,)
-    agg = jnp.einsum("p,pn->n", theta, x)         # VPU reduction over workers
-    out = (1.0 - beta) * x + beta * agg[None, :]
+    src = q_ref[...].astype(jnp.float32) if separate_payload else x
+    m = jnp.einsum("p,pn->n", theta, src)         # VPU reduction over workers
+    out = (1.0 - beta) * x + beta * m[None, :]
+    if masked:
+        # Alg. 4 late-join: straggler rows adopt the aggregate wholesale.
+        out = jnp.where(active[:, None] != 0, out, m[None, :])
     o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("beta", "block_n", "interpret"))
+def wagg_fused(x: jax.Array, theta: jax.Array, beta: float,
+               payload: Optional[jax.Array] = None,
+               active: Optional[jax.Array] = None,
+               block_n: int = 8192,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Fused decode + Alg. 4 mask + Eq. 10 over a (p, N) block.
+
+    ``x``: (p, N) originals (any float dtype; the FMA runs in f32).
+    ``theta``: (p,) effective weights — for a quantizing codec the per-leaf
+    scale is already folded in (``theta * scale``), so ``payload`` tiles are
+    consumed as-is. ``payload``: (p, N) codec wire tiles (int8/bf16/...), or
+    ``None`` when the payload is x itself. ``active``: (p,) 0/1 mask (any
+    numeric dtype), or ``None`` for the maskless program. Returns (p, N) in
+    ``x.dtype``.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    p, n = x.shape
+    separate = payload is not None
+    masked = active is not None
+    per_col = 2 * 4 + (jnp.dtype(payload.dtype).itemsize if separate else 0)
+    bn = auto_block_n(p, min(block_n, n), per_col)
+    pad = (-n) % bn
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    np_ = n + pad
+
+    tile = pl.BlockSpec((p, bn), lambda j: (0, j))
+    vec = pl.BlockSpec((p,), lambda j: (0,))
+    in_specs, operands = [vec], [theta]
+    if masked:
+        in_specs.append(vec)
+        operands.append(active.astype(jnp.float32))
+    if separate:
+        qp = jnp.pad(payload, ((0, 0), (0, pad))) if pad else payload
+        in_specs.append(tile)
+        operands.append(qp)
+    in_specs.append(tile)
+    operands.append(xp)
+
+    out = pl.pallas_call(
+        functools.partial(_wagg_kernel, beta=float(beta), masked=masked,
+                          separate_payload=separate),
+        grid=(np_ // bn,),
+        in_specs=in_specs,
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((p, np_), x.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :n] if pad else out
 
 
 @functools.partial(jax.jit, static_argnames=("beta", "block_n", "interpret"))
 def wagg(x: jax.Array, theta: jax.Array, beta: float,
-         block_n: int = 8192, interpret: bool = True) -> jax.Array:
-    """x: (p, N); theta: (p,). Returns (p, N)."""
-    p, n = x.shape
-    bn = min(block_n, n)
-    pad = (-n) % bn
-    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
-    np_ = n + pad
-    out = pl.pallas_call(
-        functools.partial(_wagg_kernel, beta=float(beta)),
-        grid=(np_ // bn,),
-        in_specs=[
-            pl.BlockSpec((p,), lambda j: (0,)),
-            pl.BlockSpec((p, bn), lambda j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((p, bn), lambda j: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((p, np_), x.dtype),
-        interpret=interpret,
-    )(theta, xp)
-    return out[:, :n] if pad else out
+         block_n: int = 8192, interpret: Optional[bool] = None) -> jax.Array:
+    """x: (p, N); theta: (p,). Returns (p, N). The f32, maskless entry —
+    the identical program ``wagg_fused`` emits with no payload and no mask
+    (three refs: theta, x, out)."""
+    return wagg_fused(x, theta, float(beta), block_n=block_n,
+                      interpret=interpret)

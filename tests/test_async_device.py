@@ -92,9 +92,10 @@ def test_async_backend_name_mapping():
     # async regime composes with the payload axis —
     assert async_backend_name("quantized") == "einsum:int8"
     assert async_backend_name("hierarchical:int8") == "hierarchical:int8"
-    # — except the fused pallas kernel, which has no masked/late-join path.
-    with pytest.raises(ValueError, match="no async"):
-        async_backend_name("pallas_wagg")
+    # — including, since the v2 fused kernel applies the Alg. 4 late-join
+    # inside the VMEM pass, the pallas specs.
+    assert async_backend_name("pallas_wagg") == "pallas_wagg:f32"
+    assert async_backend_name("pallas_wagg:int8") == "pallas_wagg:int8"
     with pytest.raises(ValueError, match="no async"):
         async_backend_name("does_not_exist")
 
@@ -290,6 +291,17 @@ def test_on_device_matches_host_sim(strategy, backend):
     w/p > 1 local copies whenever this runs (1 device or 8)."""
     d = len(jax.devices())
     _parity_case(strategy, backend, _mesh(), n_workers=3 * d, backups=d)
+
+
+@pytest.mark.parametrize("strategy", ("boltzmann", "best"))
+def test_on_device_pallas_wagg_matches_host_sim(strategy):
+    """Satellite regression: pallas_wagg used to raise on ANY masked
+    context, so the async driver could never run it. The v2 fused kernel
+    applies the late-join in-pass — masked pallas_wagg must now match the
+    host-simulation oracle leaf-for-leaf (f32 codec, so 1e-5 parity)."""
+    d = len(jax.devices())
+    _parity_case(strategy, "pallas_wagg", _mesh(), n_workers=3 * d,
+                 backups=d)
 
 
 def test_on_device_matches_host_sim_pod_mesh():

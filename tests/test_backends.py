@@ -142,8 +142,24 @@ def test_quantized_alias_matches_composed_spec():
                                   np.asarray(spec["head"]))
 
 
-def test_pallas_wagg_rejects_non_f32_codec():
+def test_pallas_wagg_composes_with_quantizing_codecs():
+    """v2: the fused kernel consumes int8/int4 payload tiles directly, so
+    pallas_wagg composes with every codec (it used to reject non-f32)."""
+    from repro.core.codecs import get_codec
     params, axes, theta = _fixture()
+    ref = B.aggregate_with("einsum:f32", params, axes, theta, BETA)
+    for codec_name in ("bf16", "int8", "int4"):
+        out = B.aggregate_with(f"pallas_wagg:{codec_name}", params, axes,
+                               theta, BETA)
+        tol = float(get_codec(codec_name).error_bound(params["head"], theta,
+                                                      BETA))
+        assert _max_err(out["head"], ref["head"]) <= tol, codec_name
+
+
+def test_schedule_codec_restriction_still_enforced(monkeypatch):
+    """The codecs-tuple guard stays live for schedules that declare one."""
+    params, axes, theta = _fixture()
+    monkeypatch.setattr(B._SCHEDULES["pallas_wagg"], "codecs", ("f32",))
     with pytest.raises(ValueError, match="composes only with codecs"):
         B.aggregate_with("pallas_wagg:int8", params, axes, theta, BETA)
 

@@ -99,6 +99,37 @@ def test_int4_noise_decorrelates_with_leaf_content():
     assert np.abs(r1 - r2).max() > float(s1) / 4
 
 
+def test_int4_noise_decorrelates_across_identical_leaves():
+    """Regression: the RNG key folded only (leaf size, content-xor), so two
+    IDENTICAL-content leaves (zero-inits, tied embeddings) drew the SAME
+    stochastic-rounding noise and correlated their quantization error
+    across the tree. ``ctx.leaf_index`` (set per-leaf by
+    ``ComposedBackend.aggregate``) must break the tie — and stay
+    deterministic for a fixed index."""
+    from repro.core import backends as B
+    codec = C.get_codec("int4")
+    x = _leaf(8, shape=(4, 64))
+    q0, _ = codec.encode(x, B.AggregationContext(leaf_index=0))
+    q1, _ = codec.encode(x, B.AggregationContext(leaf_index=1))
+    assert not np.array_equal(np.asarray(q0), np.asarray(q1))
+    q0b, _ = codec.encode(x, B.AggregationContext(leaf_index=0))
+    np.testing.assert_array_equal(np.asarray(q0), np.asarray(q0b))
+
+
+def test_int4_identical_leaves_decorrelate_end_to_end():
+    """Two equal leaves through a real ``einsum:int4`` aggregate must come
+    out different: ComposedBackend stamps each leaf's flattened-tree index
+    into the context before encode."""
+    from repro.core import backends as B
+    w = 4
+    x = _leaf(9, shape=(w, 33))
+    params = {"a": x, "b": x}
+    axes = {"a": ("worker", None), "b": ("worker", None)}
+    theta = jax.nn.softmax(jnp.arange(w, dtype=jnp.float32))
+    out = B.aggregate_with("einsum:int4", params, axes, theta, 0.9)
+    assert not np.array_equal(np.asarray(out["a"]), np.asarray(out["b"]))
+
+
 def test_int4_stochastic_rounding_is_unbiased():
     """E[floor(x/scale + u)] = x/scale: averaging the round-trip over many
     independent keys must converge to x (the bias of deterministic int4

@@ -10,7 +10,8 @@ from repro.kernels.decode_attn import decode_attn, decode_attn_ref
 from repro.kernels.decode_attn.ops import decode_attention as decode_attn_op
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from repro.kernels.rmsnorm.rmsnorm import rmsnorm
-from repro.kernels.wagg import wagg, wagg_ref
+from repro.kernels.wagg import (auto_block_n, wagg, wagg_fused,
+                                wagg_fused_ref, wagg_ref)
 
 
 # -- wagg -------------------------------------------------------------------------
@@ -40,6 +41,110 @@ def test_hyp_wagg_arbitrary_shapes(p, n, beta, seed):
     theta = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (p,)))
     out = wagg(x, theta, beta, block_n=128)
     np.testing.assert_allclose(out, wagg_ref(x, theta, beta),
+                               rtol=1e-4, atol=1e-5)
+
+
+# -- wagg v2: fused dequant + mask + Eq. 10 -----------------------------------------
+
+def _fused_case(seed=0, p=6, n=1000):
+    """p=6 (not a power of two) and n=1000 with block_n=256 (padded tail)."""
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    theta = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1),
+                                             (p,)))
+    return x, theta
+
+
+@pytest.mark.parametrize("codec_name", ["bf16", "int8", "int4"])
+@pytest.mark.parametrize("masked", [False, True])
+def test_wagg_fused_codec_parity(codec_name, masked):
+    """The fused kernel consuming quantized payload tiles stays within the
+    codec's documented error bound of the f32 reference — the same contract
+    the composition grid holds the composed backend to, here at the kernel
+    level, with a padded tail and p not a power of two."""
+    from repro.core.codecs import get_codec
+    x, theta = _fused_case()
+    p = x.shape[0]
+    codec = get_codec(codec_name)
+    payload, aux = codec.encode(x)
+    theta_eff = theta if aux is None else theta * jnp.float32(aux)
+    active = None
+    beta_eff = 0.9
+    if masked:
+        active = jnp.asarray(np.arange(p) % 3 != 1, jnp.float32)
+        beta_eff = 1.0                  # late-join rows adopt m wholesale
+    out = wagg_fused(x, theta_eff, 0.9, payload=payload, active=active,
+                     block_n=256)
+    ref = wagg_fused_ref(x, theta, 0.9)   # f32, no payload
+    if masked:
+        ref = jnp.where(active[:, None] != 0, ref,
+                        jnp.einsum("p,pn->n", theta, x)[None, :])
+    tol = float(codec.error_bound(x, theta, beta_eff))
+    err = float(jnp.abs(out - ref).max())
+    assert err <= tol, (codec_name, masked, err, tol)
+
+
+def test_wagg_fused_matches_its_reference():
+    """wagg_fused == wagg_fused_ref exactly (same payload, same mask), on
+    the padded-tail fixture."""
+    from repro.core.codecs import get_codec
+    x, theta = _fused_case(1)
+    payload, aux = get_codec("int8").encode(x)
+    theta_eff = theta * jnp.float32(aux)
+    active = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0])
+    out = wagg_fused(x, theta_eff, 0.7, payload=payload, active=active,
+                     block_n=256)
+    ref = wagg_fused_ref(x, theta_eff, 0.7, payload=payload, active=active)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_wagg_fused_beta_endpoints():
+    """beta=0 is the identity on active rows; beta=1 makes every row the
+    aggregate m (masked or not — late-join and FMA coincide)."""
+    x, theta = _fused_case(2, p=5, n=333)
+    out0 = wagg_fused(x, theta, 0.0, block_n=128)
+    np.testing.assert_array_equal(np.asarray(out0), np.asarray(x))
+    out1 = wagg_fused(x, theta, 1.0, block_n=128)
+    m = np.einsum("p,pn->n", np.asarray(theta), np.asarray(x))
+    for i in range(x.shape[0]):
+        np.testing.assert_allclose(np.asarray(out1)[i], m, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_wagg_interpret_default_tracks_backend():
+    """Regression: ``interpret`` was hardcoded True, so the compiled kernel
+    never ran even on a real TPU. The default must be None (resolved from
+    jax.default_backend() at call time)."""
+    import inspect
+    assert inspect.signature(wagg).parameters["interpret"].default is None
+    assert inspect.signature(wagg_fused).parameters["interpret"].default \
+        is None
+
+
+def test_auto_block_n_budget_guard():
+    """The VMEM guard: small p keeps the requested block; a wide worker axis
+    auto-shrinks block_n until the tile set fits the budget, never below
+    the 128 floor."""
+    assert auto_block_n(8, 8192, 8) == 8192
+    bn = auto_block_n(4096, 8192, 8)
+    assert bn < 8192 and bn >= 128
+    assert bn * 4096 * 8 <= 8 * 1024 * 1024 or bn == 128
+    assert auto_block_n(1 << 20, 8192, 8) == 128    # floor, never 0
+
+
+def test_wagg_fused_shrink_path_correct():
+    """p=300 at block_n=4096 overflows the 8 MiB budget (300*4096*8 ≈ 9.8
+    MiB) — the guard shrinks the block and the result must still match."""
+    key = jax.random.key(5)
+    p, n = 300, 4096
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    theta = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1),
+                                             (p,)))
+    assert auto_block_n(p, 4096, 8) < 4096
+    out = wagg(x, theta, 0.9, block_n=4096)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(wagg_ref(x, theta, 0.9)),
                                rtol=1e-4, atol=1e-5)
 
 
