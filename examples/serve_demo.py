@@ -1,40 +1,84 @@
-"""Serving demo: batched prefill + token-by-token decode with KV caches.
+"""Serving demo: continuous batching on a paged KV cache.
 
-Covers three cache regimes: full-attention KV (yi), sliding-window ring
-buffers (gemma3), and O(1) SSM recurrent state (mamba2).
+Part 1 submits a ragged mix of requests (different prompt positions,
+budgets, temperatures) to `ContinuousEngine` — more requests than slots, so
+the scheduler inserts and evicts at token boundaries while the paged cache
+recycles blocks. Part 2 hot-swaps the engine's params mid-generation, the
+way `Trainer.run(serve_hook=)` pushes fresh consensus weights into a live
+engine. Part 3 keeps the legacy monolithic `ServeEngine` for the media
+archs (cross-attention / codebook heads) the paged engine does not serve.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.data import lm_batch
 from repro.models import init_params
-from repro.serve import ServeEngine
+from repro.serve import ContinuousEngine, HotSwapBridge, ServeEngine
+
+
+def _cfg(arch):
+    return dataclasses.replace(get_smoke_config(arch),
+                               compute_dtype="float32")
 
 
 def main():
+    # --- continuous batching across cache regimes -------------------------
     for arch in ["yi-6b", "gemma3-1b", "mamba2-370m"]:
-        cfg = dataclasses.replace(get_smoke_config(arch),
-                                  compute_dtype="float32")
+        cfg = _cfg(arch)
         params, _ = init_params(cfg, jax.random.key(0))
-        engine = ServeEngine(cfg, params, max_len=128,
-                             cache_dtype=jax.numpy.float32)
-
-        batch = 4
-        prompt = np.asarray(lm_batch(0, batch, 16, cfg.vocab_size)["tokens"])
-        out_greedy = engine.generate(prompt, n_new=16, temperature=0.0)
-        out_sampled = engine.generate(prompt, n_new=16, temperature=0.8,
-                                      seed=1)
+        engine = ContinuousEngine(cfg, params, n_slots=2, max_len=128,
+                                  block_size=16, cache_dtype=jnp.float32,
+                                  chunk=8)
+        prompts = np.asarray(lm_batch(0, 5, 16, cfg.vocab_size)["tokens"])
+        budgets = [4, 24, 9, 16, 2]          # ragged: finish at odd times
+        rids = [engine.submit(prompts[i], budgets[i],
+                              temperature=0.0 if i % 2 == 0 else 0.8,
+                              seed=i) for i in range(5)]
+        done = engine.run()
         kind = ("SSM state" if cfg.ssm is not None else
                 f"window={cfg.attn_window}" if cfg.attn_window else "full KV")
-        print(f"{arch:14s} [{kind:12s}] batch={batch} "
-              f"greedy={out_greedy[0, :6].tolist()} "
-              f"sampled={out_sampled[0, :6].tolist()}")
-        assert out_greedy.shape == (batch, 16)
+        lens = [len(done[r]) for r in rids]
+        print(f"{arch:14s} [{kind:12s}] 5 requests on 2 slots, "
+              f"lens={lens} head={done[rids[1]][:6].tolist()}")
+        assert lens == budgets and engine.scheduler.idle
+
+    # --- live hot-swap: params change mid-flight, request survives --------
+    cfg = _cfg("gemma3-1b")
+    params, _ = init_params(cfg, jax.random.key(1))
+    engine = ContinuousEngine(cfg, params, n_slots=2, max_len=128,
+                              block_size=16, cache_dtype=jnp.float32,
+                              chunk=8)
+    bridge = HotSwapBridge(engine)
+    prompt = np.asarray(lm_batch(1, 1, 16, cfg.vocab_size)["tokens"])[0]
+    rid = engine.submit(prompt, n_new=32)
+    engine.step()                                     # decode one chunk
+    fresh = jax.tree.map(lambda p: p * 0.999, params)  # "newly trained"
+    engine.swap_params(fresh)
+    out = engine.run()[rid]
+    print(f"hot-swap        request survived the swap: {len(out)} tokens, "
+          f"{engine.n_swaps} swap(s)")
+    assert len(out) == 32
+
+    # --- media archs stay on the legacy monolithic engine -----------------
+    for arch in ["llama-3.2-vision-11b", "musicgen-large"]:
+        cfg = _cfg(arch)
+        params, _ = init_params(cfg, jax.random.key(2))
+        legacy = ServeEngine(cfg, params, max_len=64,
+                             cache_dtype=jnp.float32)
+        batch = lm_batch(2, 2, 8, cfg.vocab_size,
+                         n_codebooks=cfg.n_codebooks,
+                         media_tokens=cfg.n_media_tokens, d_model=cfg.d_model)
+        media = (np.asarray(batch["media"], np.float32)
+                 if "media" in batch else None)
+        out = legacy.generate(np.asarray(batch["tokens"]), n_new=6,
+                              media=media)
+        print(f"{arch:20s} [legacy engine] out shape={out.shape}")
     print("serving demo OK")
 
 

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attn.decode_attn import decode_attn
+from repro.kernels.decode_attn.paged import (paged_decode_attn,
+                                             paged_decode_attn_ref)
 from repro.kernels.decode_attn.ref import decode_attn_ref
 
 
@@ -26,4 +28,30 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, 1, h, hd)
 
 
-__all__ = ["decode_attention", "decode_attn", "decode_attn_ref"]
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           block_table: jax.Array, index: jax.Array, *,
+                           ring: Optional[int] = None,
+                           window: Optional[int] = None) -> jax.Array:
+    """Model-layout entry for the paged cache: q (b, 1, h, hd), pools
+    (n_pool, block_size, kv, hd), block_table (b, n_blk), index (b,).
+
+    Off-TPU this routes to the pure-jnp reference rather than interpret-mode
+    Pallas: the serving engine traces this inside a jitted ``lax.while_loop``
+    decode body, where the interpreter's per-grid-step Python overhead would
+    dominate; the reference lowers to plain XLA gather + masked softmax."""
+    b, _, h, hd = q.shape
+    kv = k_pool.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    if _interpret():
+        out = paged_decode_attn_ref(qg, k_pool, v_pool, block_table, index,
+                                    ring=ring, window=window)
+    else:
+        out = paged_decode_attn(qg, k_pool, v_pool, block_table, index,
+                                ring=ring, window=window, interpret=False)
+    return out.reshape(b, 1, h, hd)
+
+
+__all__ = ["decode_attention", "decode_attn", "decode_attn_ref",
+           "paged_decode_attention", "paged_decode_attn",
+           "paged_decode_attn_ref"]

@@ -1,0 +1,171 @@
+"""Pallas TPU kernel: paged single-token GQA flash-decode attention.
+
+The serving engine's KV store is a pool of fixed-size blocks
+(``serve/paged_cache.py``): each layer owns ``(n_blocks + 1, block_size,
+kv, hd)`` K/V pools (the ``+1`` row is the trash block inactive slots write
+into) and each request maps its logical cache onto physical blocks through a
+``(b, n_blk)`` int32 block table. This kernel is the paged-aware variant of
+``decode_attn``: the grid stays ``(b, kv, n_blk)``, but the K/V BlockSpec
+index map reads the block table — delivered ahead of the kernel body via
+``PrefetchScalarGridSpec`` scalar prefetch — so each grid step streams one
+*physical* block straight from the pool, no gather materialization.
+
+Layouts (per layer, static):
+
+* linear (full-attention layers): logical slot ``s`` holds token position
+  ``s``; block ``j`` covers positions ``[j*bs, (j+1)*bs)``; valid iff
+  ``s <= index`` (``index`` = position of the newest token, per request).
+* ring (sliding-window layers): capacity ``R = n_blk * bs`` slots, token
+  position ``p`` lives at slot ``p % R``. The age of slot ``s`` is
+  ``(index - s) mod R`` and the slot is valid iff
+  ``age < min(window, index + 1)`` — this masks both tokens older than the
+  window and ring slots not yet written, and degenerates to the monolithic
+  ring-cache semantics when ``R == window``.
+
+Per-request cache lengths (continuous batching: every running request sits
+at a different ``index``) ride in as a second scalar-prefetch operand.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(table_ref, index_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         block_s: int, n_blocks: int, ring: Optional[int],
+                         window: Optional[int]):
+    bi = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)        # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)        # (bs, hd)
+    hd = q.shape[-1]
+
+    index = index_ref[bi]
+    slot = j * block_s + jax.lax.broadcasted_iota(jnp.int32, (block_s,), 0)
+    if ring is None:
+        valid = slot <= index
+    else:
+        age = jnp.mod(index - slot, ring)
+        lim = jnp.minimum(jnp.int32(ring if window is None else window),
+                          index + 1)
+        valid = age < lim
+
+    s = jnp.einsum("gd,td->gt", q * hd ** -0.5, k)          # (g, bs)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    m_safe = jnp.maximum(m_new, -0.5e30)
+    p = jnp.exp(s - m_safe[:, None])
+    corr = jnp.exp(m_prev - m_safe)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_new = acc_prev * corr[:, None] + jnp.einsum("gt,td->gd", p, v)
+
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ring", "window", "interpret"))
+def paged_decode_attn(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                      block_table: jax.Array, index: jax.Array, *,
+                      ring: Optional[int] = None,
+                      window: Optional[int] = None,
+                      interpret: bool = True) -> jax.Array:
+    """q: (b, kv, g, hd); pools: (n_pool, bs, kv, hd);
+    block_table: (b, n_blk) int32 physical block per logical block;
+    index: (b,) int32 position of each request's newest token."""
+    b, kv, g, hd = q.shape
+    bs = k_pool.shape[1]
+    n_blk = block_table.shape[1]
+    if ring is not None and ring != n_blk * bs:
+        raise ValueError(
+            f"ring capacity {ring} != table blocks x block_size "
+            f"({n_blk}x{bs})")
+
+    kernel = functools.partial(
+        _paged_decode_kernel, block_s=bs, n_blocks=n_blk, ring=ring,
+        window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, n_blk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda bi, ki, ji, tab, idx: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda bi, ki, ji, tab, idx: (tab[bi, ji], 0, ki, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda bi, ki, ji, tab, idx: (tab[bi, ji], 0, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, ki, ji, tab, idx: (bi, ki, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),      # running max m
+            pltpu.VMEM((g,), jnp.float32),      # running denominator l
+            pltpu.VMEM((g, hd), jnp.float32),   # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_table, jnp.int32), jnp.asarray(index, jnp.int32),
+      q, k_pool, v_pool)
+    return out
+
+
+def paged_decode_attn_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                          block_table: jax.Array, index: jax.Array, *,
+                          ring: Optional[int] = None,
+                          window: Optional[int] = None) -> jax.Array:
+    """Pure-jnp reference: gather the table, run masked softmax attention.
+
+    Same signature and masking semantics as the kernel; this is also the
+    path the serving engine's jitted while_loop uses off-TPU (mirroring the
+    monolithic decode, whose jnp reference serves on CPU)."""
+    b, kv, g, hd = q.shape
+    bs = k_pool.shape[1]
+    n_blk = block_table.shape[1]
+    S = n_blk * bs
+    k = k_pool[block_table].reshape(b, S, kv, hd)
+    v = v_pool[block_table].reshape(b, S, kv, hd)
+    qg = (q * hd ** -0.5).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32))
+    slot = jnp.arange(S, dtype=jnp.int32)
+    idx = jnp.asarray(index, jnp.int32)[:, None]
+    if ring is None:
+        valid = slot[None, :] <= idx
+    else:
+        if ring != S:
+            raise ValueError(
+                f"ring capacity {ring} != table blocks x block_size "
+                f"({n_blk}x{bs})")
+        age = jnp.mod(idx - slot[None, :], ring)
+        lim = jnp.minimum(jnp.int32(ring if window is None else window),
+                          idx + 1)
+        valid = age < lim
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

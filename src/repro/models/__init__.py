@@ -1,7 +1,10 @@
 from repro.models.transformer import (
+    PagedKV,
     abstract_params,
     cache_axes,
+    cache_layout,
     decode_step,
+    decode_step_paged,
     forward,
     init_cache,
     init_params,
@@ -10,9 +13,12 @@ from repro.models.transformer import (
 )
 
 __all__ = [
+    "PagedKV",
     "abstract_params",
     "cache_axes",
+    "cache_layout",
     "decode_step",
+    "decode_step_paged",
     "forward",
     "init_cache",
     "init_params",

@@ -441,3 +441,156 @@ def prefill(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
     else:
         logits = L.head(params["head"], x, compute_dtype, cfg.logits_softcap)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Serving: paged cache layout + decode
+# ---------------------------------------------------------------------------
+
+class PagedKV(NamedTuple):
+    """Per-layer K/V block pools, shape (n_pool, block_size, kv_heads,
+    head_dim). The last pool row is the trash block inactive slots write
+    into; every other row is addressed through a per-request block table."""
+    k: jax.Array
+    v: jax.Array
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def cache_layout(cfg: ModelConfig, max_len: int, block_size: int = 16) -> Dict:
+    """Static paged-cache geometry for ``cfg``.
+
+    Layers fall into *layout groups* that share one block table per request:
+
+    * ``"full"`` — full-attention layers; token position ``p`` is logical
+      slot ``p``, the table has ``ceil(max_len / block_size)`` entries and
+      is populated by a free-list allocator at admission.
+    * ``"ring{R}"`` — sliding-window layers with the window's ring capacity
+      padded to a block multiple ``R``; position ``p`` lives at slot
+      ``p % R``. Every slot is always live, so ring tables are static
+      (each batch slot permanently owns its ``R / block_size`` blocks).
+
+    Block ids are valid across all layers of a group: each layer has its own
+    K/V pool, indexed by the same table. Cross-attention (media) layers have
+    no paged form — serve those archs with the legacy ``ServeEngine``.
+    """
+    layers: Dict[str, Dict] = {}
+    groups: Dict[str, Dict] = {}
+    for i in range(cfg.n_layers):
+        ent: Dict[str, Any] = {}
+        if cfg.layer_is_cross_attn(i):
+            raise NotImplementedError(
+                "paged cache does not cover cross-attention (media) layers; "
+                "use the legacy ServeEngine for media archs")
+        if cfg.layer_is_attn(i):
+            w = cfg.window_for_layer(i)
+            size = min(w, max_len) if w is not None else max_len
+            if w is not None:
+                ring = _ceil_to(size, block_size)
+                group = f"ring{ring}"
+                groups.setdefault(group,
+                                  {"ring": ring,
+                                   "n_blk": ring // block_size})
+            else:
+                ring = None
+                group = "full"
+                groups.setdefault(group,
+                                  {"ring": None,
+                                   "n_blk": _ceil_to(max_len, block_size)
+                                   // block_size})
+            ent["attn"] = {"group": group, "ring": ring, "window": size}
+        if cfg.layer_is_ssm(i):
+            ent["ssm"] = True
+        layers[f"L{i}"] = ent
+    return {"layers": layers, "groups": groups, "block_size": block_size,
+            "max_len": max_len}
+
+
+def decode_step_paged(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                      pools: Dict, tables: Dict, index: jax.Array,
+                      active: Optional[jax.Array] = None, *,
+                      max_len: int, block_size: int = 16
+                      ) -> Tuple[jax.Array, Dict]:
+    """One decode step against the paged cache; batch rows are independent
+    requests at independent positions.
+
+    tokens (n, 1); ``index`` (n,) int32 is the position each row's token is
+    written at (== tokens already cached); ``tables`` maps layout-group name
+    to (n, n_blk) int32 physical block ids; ``pools`` maps ``L{i}`` to
+    ``{"attn": PagedKV}`` / ``{"ssm": SSMState}`` with leading pool / slot
+    dims. ``active`` (n,) bool, when given, redirects inactive rows' KV
+    writes to the trash block (last pool row) and freezes their SSM state,
+    so finished requests can ride in the batch without corrupting anything.
+    """
+    layout = cache_layout(cfg, max_len, block_size)
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embed"], tokens, compute_dtype)
+    n = x.shape[0]
+    index = jnp.asarray(index, jnp.int32)
+    positions = index[:, None]
+    rows = jnp.arange(n)
+    from repro.kernels.decode_attn.ops import paged_decode_attention
+    new_pools: Dict[str, Dict] = {}
+
+    for i in range(cfg.n_layers):
+        lp = params["layers"][f"L{i}"]
+        entry = pools[f"L{i}"]
+        out_entry: Dict[str, Any] = dict(entry)
+        if cfg.layer_is_attn(i):
+            al = layout["layers"][f"L{i}"]["attn"]
+            h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+            wq = lp["attn"]["wq"].astype(compute_dtype)
+            wk = lp["attn"]["wk"].astype(compute_dtype)
+            wv = lp["attn"]["wv"].astype(compute_dtype)
+            wo = lp["attn"]["wo"].astype(compute_dtype)
+            q = L.apply_rope(jnp.einsum("bsd,dhk->bshk", h, wq), positions,
+                             cfg.rope_theta)
+            k = L.apply_rope(jnp.einsum("bsd,dhk->bshk", h, wk), positions,
+                             cfg.rope_theta)
+            v = jnp.einsum("bsd,dhk->bshk", h, wv)
+            table = tables[al["group"]]
+            ring = al["ring"]
+            slot = jnp.mod(index, ring) if ring is not None else index
+            pb = table[rows, slot // block_size]
+            off = jnp.mod(slot, block_size)
+            kv = entry["attn"]
+            if active is not None:
+                pb = jnp.where(active, pb, kv.k.shape[0] - 1)
+            k_pool = kv.k.at[pb, off].set(k[:, 0].astype(kv.k.dtype))
+            v_pool = kv.v.at[pb, off].set(v[:, 0].astype(kv.v.dtype))
+            att = paged_decode_attention(q, k_pool, v_pool, table, index,
+                                         ring=ring, window=al["window"])
+            x = x + jnp.einsum("bshk,hkd->bsd", att, wo)
+            out_entry["attn"] = PagedKV(k_pool, v_pool)
+        if cfg.layer_is_ssm(i):
+            h = L.rmsnorm(lp["ssm_norm"], x, cfg.norm_eps)
+            y, st = SSM.ssm_layer(lp["ssm"], h, cfg.ssm, cfg.d_model,
+                                  compute_dtype, state=entry["ssm"])
+            x = x + y
+            if active is not None:
+                st = jax.tree.map(
+                    lambda new, old: jnp.where(
+                        active.reshape((-1,) + (1,) * (new.ndim - 1)),
+                        new, old),
+                    st, entry["ssm"])
+            out_entry["ssm"] = st
+        if cfg.layer_is_moe(i):
+            h = L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps)
+            y, _ = MOE.moe_ffn(lp["moe"], h, cfg.moe, compute_dtype)
+            if cfg.moe.dense_residual and "dense_mlp" in lp:
+                y = y + L.mlp(lp["dense_mlp"], h, compute_dtype)
+            x = x + y
+        elif "mlp" in lp:
+            h = L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps)
+            x = x + L.mlp(lp["mlp"], h, compute_dtype)
+        new_pools[f"L{i}"] = out_entry
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.tied_head(params["embed"], x, compute_dtype,
+                             cfg.logits_softcap)
+    else:
+        logits = L.head(params["head"], x, compute_dtype, cfg.logits_softcap)
+    return logits, new_pools

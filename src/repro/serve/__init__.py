@@ -1,3 +1,6 @@
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ContinuousEngine, HotSwapBridge, ServeEngine
+from repro.serve.paged_cache import PagedCache
+from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["ServeEngine"]
+__all__ = ["ContinuousEngine", "HotSwapBridge", "PagedCache", "Request",
+           "Scheduler", "ServeEngine"]

@@ -1,24 +1,55 @@
-"""Serving engine: batched prefill + token-by-token decode with per-layer
-KV caches (ring buffers for sliding-window layers) and SSM recurrent states.
+"""Serving engines.
+
+``ContinuousEngine`` is the production path: a continuous-batching engine
+over the paged block cache (serve/paged_cache.py) whose decode body is ONE
+jitted ``lax.while_loop`` program — sampling, paged cache writes and
+per-request done-flags all happen inside the loop, with no host round-trip
+per token. Requests are admitted into and evicted from the running batch at
+token boundaries (serve/scheduler.py); the loop exits early when a request
+finishes while others are queued, so freed slots/blocks are recycled
+immediately.
+
+Determinism: the key for the token at absolute position ``p`` of a request
+is ``fold_in(fold_in(engine_key, request_seed), p)`` — a pure function of
+the request, never of the batch it happened to ride in. Together with the
+row-independence of every per-token op (norms, attention, MLP, SSM step,
+argmax), a request decodes token-for-token identically whether it runs solo
+or is inserted/evicted mid-flight — the greedy-parity guarantee
+(tests/test_serve_continuous.py). MoE layers are the exception: capacity
+dispatch ranks tokens across the whole batch, so only non-MoE archs get
+exact parity.
+
+``ServeEngine`` is the legacy monolithic-cache engine, kept for the archs
+the paged path does not cover (cross-attention/media, audio codebooks).
 
 For trained WASGD checkpoints the served copy is worker 0's slice after a
 final beta=1 aggregation (all workers coincide — Sec. 4.1's tau-step fixed
-point), extracted with ``core.take_worker``.
+point): ``train.evaluate.consensus_params``. ``HotSwapBridge`` wires that
+into ``Trainer.run(serve_hook=...)``: each call swaps the fresh consensus
+into a live engine without touching in-flight decode state (params are an
+argument of the jitted loop, not a constant), and records per-swap
+staleness metrics.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, init_cache, prefill
+from repro.models import decode_step, decode_step_paged, init_cache, prefill
+from repro.serve.paged_cache import PagedCache
+from repro.serve.scheduler import Request, Scheduler
 
 
 class ServeEngine:
+    """Legacy engine: monolithic ``(b, max_len, ...)`` cache, Python
+    token loop. Covers every arch (incl. media/audio); use
+    ``ContinuousEngine`` for throughput serving of text archs."""
+
     def __init__(self, cfg: ModelConfig, params: Dict, max_len: int = 2048,
                  cache_dtype=jnp.bfloat16):
         self.cfg = cfg
@@ -30,23 +61,47 @@ class ServeEngine:
 
     def generate(self, prompt: np.ndarray, n_new: int,
                  media: Optional[np.ndarray] = None,
-                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
-        """prompt: (b, s) int32 (or (b, s, n_q) audio). Greedy if T == 0."""
+                 temperature: float = 0.0, seed: int = 0,
+                 eos_id: Optional[int] = None) -> np.ndarray:
+        """prompt: (b, s) int32 (or (b, s, n_q) audio). Greedy if T == 0.
+
+        With ``eos_id`` set, decoding stops once every row has emitted the
+        stop token, and a row's positions after its first stop token are
+        padded with it. Checking the stop condition forces a device-to-host
+        read of every token — the structural cost of a Python decode loop
+        that the ``ContinuousEngine`` while_loop folds into its compiled
+        done-flags."""
         b, s = prompt.shape[:2]
+        if s + n_new > self.max_len:
+            raise ValueError(
+                f"prompt ({s}) + n_new ({n_new}) = {s + n_new} tokens "
+                f"exceeds the cache budget max_len={self.max_len}")
         cache = init_cache(self.cfg, b, self.max_len, self.cache_dtype)
         logits, cache = self._prefill(self.params, jnp.asarray(prompt), cache,
                                       media)
         key = jax.random.key(seed)
-        out = [self._sample(logits, temperature, key)]
+        key, sub = jax.random.split(key)
+        out = [self._sample(logits, temperature, sub)]
+        done = (np.asarray(out[-1])[:, 0] == eos_id
+                if eos_id is not None else None)
         index = s
         for t in range(n_new - 1):
+            if done is not None and done.all():
+                break
             key, sub = jax.random.split(key)
             tok = out[-1]
             logits, cache = self._decode(self.params, tok, cache,
                                          jnp.int32(index), media)
             out.append(self._sample(logits, temperature, sub))
+            if done is not None:
+                done |= np.asarray(out[-1])[:, 0] == eos_id
             index += 1
-        return np.concatenate([np.asarray(t) for t in out], axis=1)
+        toks = np.concatenate([np.asarray(t) for t in out], axis=1)
+        if eos_id is not None:
+            hit = toks == eos_id
+            past_eos = np.cumsum(hit, axis=1) - hit   # strictly after first
+            toks = np.where(past_eos > 0, eos_id, toks)
+        return toks
 
     def _sample(self, logits, temperature, key):
         logits = logits[:, -1:] if logits.shape[1] > 1 else logits
@@ -55,3 +110,323 @@ class ServeEngine:
         return jax.random.categorical(
             key, logits.astype(jnp.float32) / temperature, axis=-1
         ).astype(jnp.int32)
+
+
+def _sample_rows(logits: jax.Array, temps: jax.Array,
+                 keys: jax.Array) -> jax.Array:
+    """Per-row sampling: argmax where temp <= 0, categorical otherwise.
+    logits (n, 1, V) -> (n,) int32."""
+    lg = logits[:, -1].astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temps > 0, temps, 1.0)
+    cat = jax.vmap(jax.random.categorical)(keys, lg / safe_t[:, None])
+    return jnp.where(temps > 0, cat.astype(jnp.int32), greedy)
+
+
+class ContinuousEngine:
+    """Continuous-batching engine on the paged KV cache.
+
+    ``n_slots`` concurrent requests share per-layer block pools; admission
+    reserves each request's whole token budget from the free list (decode
+    never allocates) and scatters a batch=1 prefill into its blocks. The
+    decode chunk is one jitted ``lax.while_loop``; finished rows keep
+    riding the batch (KV writes redirected to the trash block, SSM state
+    frozen) until the host recycles their slot at the next chunk boundary.
+
+    ``eos_id``, when set, is a stop token: a row that emits it finishes
+    regardless of remaining budget. The check compiles into the loop's
+    done-flags — the host never reads a token to test it.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Dict, n_slots: int = 8,
+                 max_len: int = 2048, block_size: int = 16,
+                 cache_dtype=jnp.bfloat16, chunk: int = 32,
+                 full_blocks: Optional[int] = None, seed: int = 0,
+                 eos_id: Optional[int] = None):
+        for i in range(cfg.n_layers):
+            if cfg.layer_is_cross_attn(i):
+                raise NotImplementedError(
+                    "ContinuousEngine does not serve cross-attention "
+                    "(media) archs — use the legacy ServeEngine")
+        if getattr(cfg, "n_codebooks", 0):
+            raise NotImplementedError(
+                "ContinuousEngine does not serve multi-codebook (audio) "
+                "archs — use the legacy ServeEngine")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.cache_dtype = cache_dtype
+        self.chunk = chunk
+        self.cache = PagedCache(cfg, n_slots, max_len, block_size,
+                                dtype=cache_dtype, full_blocks=full_blocks)
+        self.scheduler = Scheduler(n_slots)
+        self.tokens_generated = 0
+        self.n_swaps = 0
+        self.eos_id = eos_id
+        self._key = jax.random.key(seed)
+
+        n = n_slots
+        self._st: Dict[str, Any] = {
+            "last_tok": jnp.zeros((n, 1), jnp.int32),
+            "index": jnp.zeros((n,), jnp.int32),
+            "remaining": jnp.zeros((n,), jnp.int32),
+            "active": jnp.zeros((n,), bool),
+            # chunk steps + the admission-time first token for a fresh row
+            "out_buf": jnp.zeros((n, chunk + 1), jnp.int32),
+            "out_pos": jnp.zeros((n,), jnp.int32),
+            "keys": jax.random.split(self._key, n),
+            "temps": jnp.zeros((n,), jnp.float32),
+        }
+
+        self._prefill = jax.jit(functools.partial(prefill, cfg))
+        # prefill scratch caches keyed (batch, prompt bucket): the scratch
+        # only has to hold the prompt (write_prefill reads nothing past
+        # it), so admission never copies max_len-wide buffers
+        self._mono_scratch: Dict[tuple, Dict] = {}
+
+        def chunk_fn(params, pools, tables, st, stop_early, *,
+                     max_steps: int):
+            entry_active = st["active"]
+            keys, temps = st["keys"], st["temps"]
+            rows = jnp.arange(entry_active.shape[0])
+            out_cap = st["out_buf"].shape[1]
+            # loop-invariant: all-greedy batches skip per-step RNG entirely
+            any_sampled = jnp.any(temps > 0)
+
+            def cond(c):
+                _, _, _, _, act, _, _, t = c
+                newly_done = jnp.any(entry_active & ~act)
+                return (jnp.any(act) & (t < max_steps)
+                        & ~(stop_early & newly_done))
+
+            def body(c):
+                pools, lt, idx, rem, act, ob, op, t = c
+                logits, pools = decode_step_paged(
+                    cfg, params, lt, pools, tables, idx, act,
+                    max_len=max_len, block_size=block_size)
+
+                def sampled(lg, i):
+                    tok_keys = jax.vmap(jax.random.fold_in)(keys, i + 1)
+                    return _sample_rows(lg, temps, tok_keys)
+
+                def greedy(lg, i):
+                    return jnp.argmax(lg[:, -1].astype(jnp.float32),
+                                      axis=-1).astype(jnp.int32)
+
+                tok = jax.lax.cond(any_sampled, sampled, greedy, logits, idx)
+                lt = jnp.where(act[:, None], tok[:, None], lt)
+                opc = jnp.minimum(op, out_cap - 1)
+                ob = ob.at[rows, opc].set(
+                    jnp.where(act, tok, ob[rows, opc]))
+                inc = act.astype(jnp.int32)
+                idx = idx + inc
+                op = op + inc
+                rem = rem - inc
+                act = act & (rem > 0)
+                if eos_id is not None:       # in-loop done-flag, no host read
+                    act = act & (tok != eos_id)
+                return (pools, lt, idx, rem, act, ob, op, t + 1)
+
+            c0 = (pools, st["last_tok"], st["index"], st["remaining"],
+                  st["active"], st["out_buf"], st["out_pos"], jnp.int32(0))
+            pools, lt, idx, rem, act, ob, op, t = jax.lax.while_loop(
+                cond, body, c0)
+            return pools, {**st, "last_tok": lt, "index": idx,
+                           "remaining": rem, "active": act, "out_buf": ob,
+                           "out_pos": op}, t
+
+        self._chunk = jax.jit(chunk_fn, static_argnames=("max_steps",))
+
+        def admit_state(st, lg, key, slot, seed, n_prompt, n_new, temp):
+            """Fold a freshly prefilled request into the batch state: sample
+            its first token (keyed by absolute position ``n_prompt``, same
+            discipline as the decode loop) and set its slot's rows. One
+            jitted call instead of a dozen eager dispatches."""
+            base = jax.random.fold_in(key, seed)
+            first_key = jax.random.fold_in(base, n_prompt)
+            lg = lg.astype(jnp.float32)
+            safe_t = jnp.where(temp > 0, temp, 1.0)
+            cat = jax.random.categorical(first_key, lg / safe_t)
+            tok = jnp.where(temp > 0, cat, jnp.argmax(lg)).astype(jnp.int32)
+            st = dict(st)
+            st["last_tok"] = st["last_tok"].at[slot, 0].set(tok)
+            st["index"] = st["index"].at[slot].set(n_prompt)
+            st["remaining"] = st["remaining"].at[slot].set(n_new - 1)
+            st["active"] = st["active"].at[slot].set(n_new > 1)
+            st["out_buf"] = st["out_buf"].at[slot, 0].set(tok)
+            st["out_pos"] = st["out_pos"].at[slot].set(1)
+            st["keys"] = st["keys"].at[slot].set(base)
+            st["temps"] = st["temps"].at[slot].set(temp)
+            return st
+
+        self._admit_state = jax.jit(admit_state)
+
+    # -- request API --------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, n_new: int,
+               temperature: float = 0.0, seed: int = 0) -> int:
+        """prompt: (s,) int32. Returns a request id; drive with step()/run().
+        The whole token budget is validated here — no silent overflow."""
+        prompt = np.asarray(prompt, np.int32)
+        s = prompt.shape[-1]
+        if n_new < 1:
+            raise ValueError(f"n_new must be >= 1, got {n_new}")
+        if s + n_new > self.max_len:
+            raise ValueError(
+                f"prompt ({s}) + n_new ({n_new}) = {s + n_new} tokens "
+                f"exceeds the cache budget max_len={self.max_len}")
+        need = self.cache.blocks_needed(s + n_new)
+        total = self.cache._group_phys.get("full", 0)
+        if need > total > 0:
+            raise ValueError(
+                f"request needs {need} cache blocks but the pool only has "
+                f"{total} — raise full_blocks or max_len")
+        return self.scheduler.submit(prompt, n_new, temperature, seed)
+
+    def swap_params(self, params: Dict) -> None:
+        """Hot-swap served params. They are an *argument* of the jitted
+        decode chunk, so this neither recompiles nor perturbs in-flight
+        request state — the next chunk simply decodes under the new model."""
+        self.params = params
+        self.n_swaps += 1
+
+    @property
+    def n_running(self) -> int:
+        return len(self.scheduler.running)
+
+    # -- drive --------------------------------------------------------------
+
+    def _admit_all(self) -> None:
+        """Admit every waiting request that fits (FIFO, stop at the first
+        that doesn't). Admissions sharing a prompt length share one batched
+        prefill into a bucketed scratch cache; each request's prefill KV is
+        then scattered into its reserved blocks and its first token folded
+        into the batch state — it rides ``out_buf[slot, 0]`` and is
+        collected with the next chunk, so admission never syncs the host."""
+        admitted: List[Request] = []
+        while True:
+            req = self.scheduler.next_admit()
+            if req is None or not self.cache.can_admit(req.total_budget):
+                break
+            r = self.scheduler.admit()
+            self.cache.reserve(r.slot, r.total_budget)
+            admitted.append(r)
+        by_len: Dict[int, List[Request]] = {}
+        for r in admitted:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        for n_prompt, group in by_len.items():
+            k = len(group)
+            bucket = min(self.max_len,
+                         1 << max(3, (n_prompt - 1).bit_length()))
+            if (k, bucket) not in self._mono_scratch:
+                self._mono_scratch[(k, bucket)] = init_cache(
+                    self.cfg, k, bucket, self.cache_dtype)
+            prompts = jnp.asarray(np.stack([r.prompt for r in group]))
+            logits, mono = self._prefill(self.params, prompts,
+                                         self._mono_scratch[(k, bucket)],
+                                         None)
+            for i, r in enumerate(group):
+                self.cache.write_prefill(r.slot, mono, n_prompt, row=i)
+                self._st = self._admit_state(
+                    self._st, logits[i, -1], self._key, r.slot, r.seed,
+                    n_prompt, r.n_new, jnp.float32(r.temperature))
+
+    def _collect(self) -> List[Request]:
+        st = self._st
+        out_pos = np.asarray(st["out_pos"])
+        out_buf = np.asarray(st["out_buf"])
+        active = np.asarray(st["active"])
+        finished: List[Request] = []
+        for slot, req in list(self.scheduler.running.items()):
+            k = int(out_pos[slot])
+            if k:
+                req.tokens.extend(int(t) for t in out_buf[slot, :k])
+                self.tokens_generated += k
+            if not active[slot]:         # budget spent or stop token emitted
+                self.cache.release(slot)
+                finished.append(self.scheduler.evict(slot))
+        st["out_pos"] = jnp.zeros_like(st["out_pos"])
+        return finished
+
+    def step(self) -> List[Request]:
+        """One scheduling round: admit waiting requests into free slots,
+        run one jitted decode chunk, collect tokens and recycle finished
+        slots. Returns the requests that finished this round."""
+        self._admit_all()
+        if not self.scheduler.running:
+            return []
+        stop_early = jnp.asarray(bool(self.scheduler.queue))
+        # attend only over block-table columns actually backed by reserved
+        # blocks (bucketed to a power of two to bound retraces) — the
+        # monolithic engine must attend over the whole max_len budget
+        tables = self.cache.tables
+        full = tables.get("full")
+        w = self.cache.used_width()
+        if full is not None and w is not None and w < full.shape[1]:
+            tables = {**tables, "full": full[:, :w]}
+        pools, st, _ = self._chunk(self.params, self.cache.pools,
+                                   tables, self._st, stop_early,
+                                   max_steps=self.chunk)
+        self.cache.pools = pools
+        self._st = st
+        return self._collect()
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain queue + running batch; returns {rid: generated tokens}."""
+        while not self.scheduler.idle:
+            self.step()
+        return {rid: np.asarray(r.tokens, np.int32)
+                for rid, r in self.scheduler.finished.items()}
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """Batched convenience wrapper: submit one request per row (row i
+        seeded ``seed + i``), drain, return (b, n_new) in submission order."""
+        prompts = np.asarray(prompts, np.int32)
+        rids = [self.submit(p, n_new, temperature, seed + i)
+                for i, p in enumerate(prompts)]
+        done = self.run()
+        return np.stack([done[r] for r in rids])
+
+
+class HotSwapBridge:
+    """``Trainer.run(serve_hook=...)`` adapter: on each call, extract the
+    Sec. 4.1 fixed point (beta=1 equal aggregation, worker 0's slice) and
+    hot-swap it into a live engine; in-flight requests keep decoding. Each
+    swap appends a staleness record to ``swaps``: rounds since the engine
+    last saw fresh params, how many tokens were served under the stale
+    copy, the L2 drift the swap closed, and the in-flight request count."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.swaps: List[Dict] = []
+        self._last_round: Optional[int] = None
+        self._tokens_at_swap = engine.tokens_generated
+
+    @staticmethod
+    def _drift(old: Dict, new: Dict) -> float:
+        sq = jax.tree.map(
+            lambda a, b: jnp.sum(
+                (a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2),
+            old, new)
+        return float(jnp.sqrt(sum(jax.tree.leaves(sq))))
+
+    def __call__(self, round_idx: int, params: Dict, axes: Dict) -> Dict:
+        from repro.train.evaluate import consensus_params
+        new = consensus_params(params, axes)
+        rec = {
+            "round": int(round_idx),
+            "rounds_since_last": (int(round_idx) - self._last_round
+                                  if self._last_round is not None else None),
+            "tokens_under_prev": self.engine.tokens_generated
+            - self._tokens_at_swap,
+            "param_drift_l2": self._drift(self.engine.params, new),
+            "in_flight": self.engine.n_running,
+        }
+        self.engine.swap_params(new)
+        self._last_round = int(round_idx)
+        self._tokens_at_swap = self.engine.tokens_generated
+        self.swaps.append(rec)
+        return rec

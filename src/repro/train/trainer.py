@@ -240,7 +240,9 @@ class Trainer:
             checkpoint_path: Optional[str] = None,
             straggler_schedule=None,
             membership_schedule: Optional[MembershipSchedule] = None,
-            resume_from: Optional[str] = None) -> Dict:
+            resume_from: Optional[str] = None,
+            serve_hook: Optional[Callable[[int, Dict, Dict], Any]] = None,
+            serve_every: int = 1) -> Dict:
         """``batches`` is a round-batch iterator, or an ``OrderedDataset``
         instance — passing the dataset itself lets a pipelined run VALIDATE
         that its OrderGen decisions are deferred past the prefetcher's
@@ -270,7 +272,13 @@ class Trainer:
         rides the following rounds. ``resume_from`` restores such a
         checkpoint (``Trainer.resume``) and continues at its recorded
         round; a checkpoint from a different worker count resizes into this
-        trainer's membership on the way in."""
+        trainer's membership on the way in.
+
+        ``serve_hook(round, params, axes)`` is called every ``serve_every``
+        rounds after the step with the live worker-stacked params — the
+        train-to-serve bridge (``serve.HotSwapBridge`` extracts the beta=1
+        consensus and hot-swaps it into a running engine, recording per-swap
+        staleness)."""
         from repro.data.pipeline import OrderedDataset
         ds = None
         if isinstance(batches, OrderedDataset):
@@ -406,6 +414,9 @@ class Trainer:
                         {k: (v.tolist() if isinstance(v, np.ndarray) else v)
                          for k, v in rec.items()}) + "\n")
                     mf.flush()
+                if serve_hook is not None \
+                        and (r + 1) % max(1, serve_every) == 0:
+                    serve_hook(r, self.state.params, self.axes)
                 if checkpoint_every and checkpoint_path \
                         and (r + 1) % checkpoint_every == 0:
                     self.save_checkpoint(

@@ -196,6 +196,93 @@ def test_decode_attn_model_layout_wrapper():
                                rtol=3e-5, atol=3e-5)
 
 
+# -- paged decode_attn ---------------------------------------------------------------
+
+def _paged_setup(b, kv, g, hd, bs, nblk, seed):
+    """Random pools + a shuffled block table (+ trash row at the end)."""
+    from numpy.random import default_rng
+    rng = default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, hd)), jnp.float32)
+    n_pool = b * nblk + 1
+    kp = jnp.asarray(rng.normal(size=(n_pool, bs, kv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pool, bs, kv, hd)), jnp.float32)
+    tab = jnp.asarray(rng.permutation(b * nblk).reshape(b, nblk), jnp.int32)
+    return q, kp, vp, tab
+
+
+@pytest.mark.parametrize("b,kv,g,hd,bs,nblk", [
+    (2, 1, 4, 32, 16, 4),
+    (3, 2, 2, 16, 8, 6),
+])
+def test_paged_decode_attn_kernel_vs_ref(b, kv, g, hd, bs, nblk):
+    from repro.kernels.decode_attn import (paged_decode_attn,
+                                           paged_decode_attn_ref)
+    q, kp, vp, tab = _paged_setup(b, kv, g, hd, bs, nblk, seed=b)
+    S = bs * nblk
+    idx = jnp.asarray([(7 * i + 3) % S for i in range(b)], jnp.int32)
+    for ring, window in [(None, None), (S, None), (S, S // 3)]:
+        out = paged_decode_attn(q, kp, vp, tab, idx, ring=ring,
+                                window=window, interpret=True)
+        ref = paged_decode_attn_ref(q, kp, vp, tab, idx, ring=ring,
+                                    window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_paged_linear_matches_dense_oracle():
+    """Linear layout: gathering the table must reproduce dense attention
+    over the first cache_len positions."""
+    from repro.kernels.decode_attn import paged_decode_attn_ref
+    b, kv, g, hd, bs, nblk = 2, 2, 2, 16, 8, 4
+    q, kp, vp, tab = _paged_setup(b, kv, g, hd, bs, nblk, seed=3)
+    S = bs * nblk
+    idx = jnp.asarray([5, 25], jnp.int32)
+    out = paged_decode_attn_ref(q, kp, vp, tab, idx)
+    k_lin = kp[tab].reshape(b, S, kv, hd)
+    v_lin = vp[tab].reshape(b, S, kv, hd)
+    for i in range(b):
+        ref = decode_attn_ref(q[i:i + 1], k_lin[i:i + 1], v_lin[i:i + 1],
+                              jnp.int32(int(idx[i]) + 1))
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref[0]),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_paged_ring_wraparound_matches_dense_oracle():
+    """Ring layout past the wrap point: a logically-linear K/V stream laid
+    onto the ring (slot = p % R) must attend over exactly the last
+    ``window`` positions, matching dense attention on the compacted tail."""
+    from repro.kernels.decode_attn import (paged_decode_attn,
+                                           paged_decode_attn_ref)
+    b, kv, g, hd, bs, nblk, window = 1, 1, 2, 16, 8, 3, 20
+    R = bs * nblk                                          # 24 >= window
+    key = jax.random.key(12)
+    L = 61                                                 # wraps twice
+    q = jax.random.normal(key, (b, kv, g, hd))
+    k_seq = jax.random.normal(jax.random.fold_in(key, 1), (L, kv, hd))
+    v_seq = jax.random.normal(jax.random.fold_in(key, 2), (L, kv, hd))
+
+    kp = jnp.zeros((nblk + 1, bs, kv, hd))
+    vp = jnp.zeros((nblk + 1, bs, kv, hd))
+    tab = jnp.arange(nblk, dtype=jnp.int32)[None]
+    for p in range(L):                    # stream tokens through the ring
+        slot = p % R
+        kp = kp.at[slot // bs, slot % bs].set(k_seq[p])
+        vp = vp.at[slot // bs, slot % bs].set(v_seq[p])
+    idx = jnp.asarray([L - 1], jnp.int32)
+
+    # dense oracle over the last `window` tokens, compacted
+    tail_k = k_seq[None, L - window:]
+    tail_v = v_seq[None, L - window:]
+    ref = decode_attn_ref(q, tail_k, tail_v, jnp.int32(window))
+
+    for impl in (paged_decode_attn_ref,
+                 lambda *a, **kw: paged_decode_attn(*a, interpret=True,
+                                                    **kw)):
+        out = impl(q, kp, vp, tab, idx, ring=R, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+
+
 # -- rmsnorm -------------------------------------------------------------------------
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -8,11 +8,17 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.data import lm_batch
-from repro.models import decode_step, forward, init_cache, init_params, prefill
-from repro.serve import ServeEngine
+from repro.models import (decode_step, decode_step_paged, forward, init_cache,
+                          init_params, prefill)
+from repro.serve import PagedCache, ServeEngine
 
 ARCHS = ["yi-6b", "gemma3-1b", "mamba2-370m", "jamba-v0.1-52b",
          "llama-3.2-vision-11b", "musicgen-large"]
+
+# archs with sliding-window (ring-buffer) attention layers
+WINDOWED_ARCHS = [a for a in ARCHS
+                  if any(get_smoke_config(a).window_for_layer(i) is not None
+                         for i in range(get_smoke_config(a).n_layers))]
 
 
 def _f32(cfg):
@@ -66,6 +72,64 @@ def test_sliding_window_ring_cache_decode():
                                rtol=5e-3, atol=5e-3)
 
 
+@pytest.mark.parametrize("arch", WINDOWED_ARCHS)
+def test_ring_wraparound_monolithic(arch):
+    """Monolithic layout at cache_len > window: prefill LONGER than the
+    window (ring-roll path), then decode multiple wraps past it; the final
+    logits must match the training forward."""
+    cfg = _f32(get_smoke_config(arch))
+    w = min(cfg.window_for_layer(i) for i in range(cfg.n_layers)
+            if cfg.window_for_layer(i) is not None)
+    b, s = 1, 3 * w + 5                          # several wraps
+    n_pre = w + 4                                # prefill already wrapped
+    params, _ = init_params(cfg, jax.random.key(10))
+    tokens = jnp.asarray(lm_batch(10, b, s, cfg.vocab_size)["tokens"])
+
+    full_logits, _ = forward(cfg, params, tokens)
+
+    cache = init_cache(cfg, b, max_len=s + 8, dtype=jnp.float32)
+    logits, cache = prefill(cfg, params, tokens[:, :n_pre], cache)
+    for t in range(n_pre, s):
+        logits, cache = decode_step(cfg, params, tokens[:, t:t + 1], cache,
+                                    jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", WINDOWED_ARCHS)
+@pytest.mark.parametrize("block_size", [4, 8])
+def test_ring_wraparound_paged(arch, block_size):
+    """Paged layout at cache_len > window: decode_step_paged tracks the
+    monolithic decode step-for-step through several ring wraps (the padded
+    ring R = ceil(window / block_size) * block_size re-places slots)."""
+    cfg = _f32(get_smoke_config(arch))
+    w = min(cfg.window_for_layer(i) for i in range(cfg.n_layers)
+            if cfg.window_for_layer(i) is not None)
+    s, n_pre, max_len = 3 * w + 3, 6, 4 * w
+    params, _ = init_params(cfg, jax.random.key(11))
+    tokens = jnp.asarray(lm_batch(11, 1, s, cfg.vocab_size)["tokens"])
+
+    mono = init_cache(cfg, 1, max_len, dtype=jnp.float32)
+    logits_m, mono = prefill(cfg, params, tokens[:, :n_pre], mono)
+
+    paged = PagedCache(cfg, n_slots=1, max_len=max_len,
+                       block_size=block_size, dtype=jnp.float32)
+    paged.reserve(0, s)
+    paged.write_prefill(0, mono, n_pre)
+
+    for t in range(n_pre, s):
+        logits_m, mono = decode_step(cfg, params, tokens[:, t:t + 1], mono,
+                                     jnp.int32(t))
+        logits_p, paged.pools = decode_step_paged(
+            cfg, params, tokens[:, t:t + 1], paged.pools, paged.tables,
+            jnp.full((1,), t, jnp.int32), max_len=max_len,
+            block_size=block_size)
+        np.testing.assert_allclose(np.asarray(logits_p),
+                                   np.asarray(logits_m),
+                                   rtol=2e-4, atol=2e-4)
+
+
 def test_serve_engine_generate():
     cfg = _f32(get_smoke_config("yi-6b"))
     params, _ = init_params(cfg, jax.random.key(2))
@@ -84,3 +148,51 @@ def test_serve_engine_greedy_deterministic():
     a = eng.generate(prompt, n_new=4)
     b = eng.generate(prompt, n_new=4)
     assert (a == b).all()
+
+
+def test_serve_engine_sampled_rng_discipline():
+    """Sampled decode: reproducible per seed, and the first token's key is
+    split from the parent before use (no key is both consumed and split)."""
+    cfg = _f32(get_smoke_config("stablelm-1.6b"))
+    params, _ = init_params(cfg, jax.random.key(4))
+    eng = ServeEngine(cfg, params, max_len=32, cache_dtype=jnp.float32)
+    prompt = np.asarray(lm_batch(4, 2, 6, cfg.vocab_size)["tokens"])
+    a = eng.generate(prompt, n_new=6, temperature=1.0, seed=0)
+    b = eng.generate(prompt, n_new=6, temperature=1.0, seed=0)
+    np.testing.assert_array_equal(a, b)
+    c = eng.generate(prompt, n_new=6, temperature=1.0, seed=1)
+    assert (a != c).any()
+
+
+def test_serve_engine_eos_stops_early():
+    """Greedy decode with the stop token set to a token the model actually
+    emits: decoding halts once every row is done, and positions after a
+    row's first stop token are padded with it."""
+    cfg = _f32(get_smoke_config("yi-6b"))
+    params, _ = init_params(cfg, jax.random.key(6))
+    eng = ServeEngine(cfg, params, max_len=32, cache_dtype=jnp.float32)
+    prompt = np.asarray(lm_batch(6, 1, 6, cfg.vocab_size)["tokens"])
+    base = eng.generate(prompt, n_new=10)
+    eos = int(base[0, 3])
+    out = eng.generate(prompt, n_new=10, eos_id=eos)
+    j = list(base[0]).index(eos)                 # first natural occurrence
+    assert out.shape[1] == j + 1                 # stopped right after it
+    np.testing.assert_array_equal(out[0, :j + 1], base[0, :j + 1])
+
+    # an eos that never fires changes nothing but the per-token check
+    np.testing.assert_array_equal(eng.generate(prompt, n_new=10, eos_id=-1),
+                                  base)
+
+
+def test_serve_engine_overflow_raises():
+    """prompt + n_new past max_len must fail loudly up front, not silently
+    corrupt the tail of the cache."""
+    cfg = _f32(get_smoke_config("yi-6b"))
+    params, _ = init_params(cfg, jax.random.key(5))
+    eng = ServeEngine(cfg, params, max_len=16, cache_dtype=jnp.float32)
+    prompt = np.asarray(lm_batch(5, 1, 12, cfg.vocab_size)["tokens"])
+    with pytest.raises(ValueError, match="exceeds the cache budget"):
+        eng.generate(prompt, n_new=8)
+    # at the budget exactly is fine
+    out = eng.generate(prompt, n_new=4)
+    assert out.shape == (1, 4)
