@@ -49,7 +49,8 @@ def run(fast: bool = False):
 
     # decode_attn: gemma-style kv=1 over a 8k cache
     b, kv, g, hd, S = 2, 1, 4, 128, 4096 if fast else 8192
-    q = jax.random.normal(key, (b, kv, g, hd), jnp.float32)
+    q = jax.random.normal(jax.random.fold_in(key, 10), (b, kv, g, hd),
+                          jnp.float32)
     kc = jax.random.normal(jax.random.fold_in(key, 1), (b, S, kv, hd))
     vc = jax.random.normal(jax.random.fold_in(key, 2), (b, S, kv, hd))
     cl = jnp.int32(S)
@@ -62,7 +63,8 @@ def run(fast: bool = False):
 
     # rmsnorm over a (4096, 2048) activation
     rows = 1024 if fast else 4096
-    x = jax.random.normal(key, (rows, 2048), jnp.bfloat16)
+    x = jax.random.normal(jax.random.fold_in(key, 20), (rows, 2048),
+                          jnp.bfloat16)
     s = jnp.ones((2048,), jnp.float32)
     f_kernel = jax.jit(lambda x, s: rmsnorm(x, s))
     f_ref = jax.jit(lambda x, s: rmsnorm_ref(x, s))
@@ -203,9 +205,11 @@ def run_async(fast: bool = False, out_path: str = None):
                                        bb["y"]), {}
 
     def grad_fn(ps, batch):
-        one = lambda pp, bb: loss_fn(pp, bb)[0]
-        losses = jax.vmap(one)(ps, batch)
-        grads = jax.grad(lambda q: jax.vmap(one)(q, batch).sum())(ps)
+        # NB: not named "one" — the record-keeping closures below reuse that
+        # name, and shadowing a vmapped function confuses readers and tools.
+        per_worker = lambda pp, bb: loss_fn(pp, bb)[0]
+        losses = jax.vmap(per_worker)(ps, batch)
+        grads = jax.grad(lambda q: jax.vmap(per_worker)(q, batch).sum())(ps)
         return losses, grads
     grad_fn = jax.jit(grad_fn)
 
@@ -302,9 +306,11 @@ def run_policies(fast: bool = False, out_path: str = None):
                                        bb["y"]), {}
 
     def grad_fn(ps, batch):
-        one = lambda pp, bb: loss_fn(pp, bb)[0]
-        losses = jax.vmap(one)(ps, batch)
-        grads = jax.grad(lambda q: jax.vmap(one)(q, batch).sum())(ps)
+        # NB: not named "one" — the record-keeping closures below reuse that
+        # name, and shadowing a vmapped function confuses readers and tools.
+        per_worker = lambda pp, bb: loss_fn(pp, bb)[0]
+        losses = jax.vmap(per_worker)(ps, batch)
+        grads = jax.grad(lambda q: jax.vmap(per_worker)(q, batch).sum())(ps)
         return losses, grads
     grad_fn = jax.jit(grad_fn)
 
@@ -676,7 +682,8 @@ def run_extra(fast: bool = False):
 
     b, nc, L, nh, hd, ds = (1, 8, 64, 8, 64, 128) if fast else \
         (2, 16, 64, 16, 64, 128)
-    xs = jax.random.normal(key, (b, nc, L, nh, hd), jnp.float32)
+    xs = jax.random.normal(jax.random.fold_in(key, 6),
+                           (b, nc, L, nh, hd), jnp.float32)
     dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 2),
                                            (b, nc, L, nh)))
     a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 3), (nh,)))

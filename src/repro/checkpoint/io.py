@@ -322,6 +322,8 @@ class AsyncCheckpointer:
                 save_sharded(path, host, meta=meta, topology=topology,
                              n_shards=n_shards)
             except BaseException as e:     # surface on the trainer thread
+                # reprolint: allow=THR001 -- single-ref write is atomic under
+                # the GIL; held until _raise_pending re-raises on the caller
                 self._exc = e
             finally:
                 self._q.task_done()

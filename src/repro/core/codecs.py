@@ -189,8 +189,11 @@ class _Int4StochasticCodec:
         # leaves.
         bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32),
                                             jnp.uint32)
-        seed = jax.lax.reduce(bits.ravel(), jnp.uint32(0),
-                              jax.lax.bitwise_xor, (0,))
+        # wraparound u32 sum, not xor-reduce: modular addition is an equally
+        # cheap content hash but partitions as a tree reduction, so the
+        # encode compiles under GSPMD on every backend (XLA CPU cannot
+        # partition a bitwise_xor reduce across a sharded leaf).
+        seed = jnp.sum(bits.ravel(), dtype=jnp.uint32)
         key = jax.random.fold_in(jax.random.fold_in(key, x.size), seed)
         # (size, content-xor) alone collide for equal-content leaves —
         # zero-inits and tied embeddings would draw the SAME noise and bias

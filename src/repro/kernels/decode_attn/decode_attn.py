@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -75,8 +77,10 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                    static_argnames=("window", "block_s", "interpret"))
 def decode_attn(q: jax.Array, k: jax.Array, v: jax.Array,
                 cache_len: jax.Array, *, window: Optional[int] = None,
-                block_s: int = 512, interpret: bool = True) -> jax.Array:
+                block_s: int = 512,
+                interpret: Optional[bool] = None) -> jax.Array:
     """q: (b, kv, g, hd); k, v: (b, S, kv, hd); cache_len: () int32."""
+    interpret = default_interpret() if interpret is None else interpret
     b, kv, g, hd = q.shape
     S = k.shape[1]
     bs = min(block_s, S)

@@ -6,6 +6,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import default_interpret
 from repro.kernels.decode_attn.decode_attn import decode_attn
 from repro.kernels.decode_attn.paged import (paged_decode_attn,
                                              paged_decode_attn_ref)
@@ -13,7 +14,7 @@ from repro.kernels.decode_attn.ref import decode_attn_ref
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return default_interpret()
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -91,10 +93,11 @@ def paged_decode_attn(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                       block_table: jax.Array, index: jax.Array, *,
                       ring: Optional[int] = None,
                       window: Optional[int] = None,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: Optional[bool] = None) -> jax.Array:
     """q: (b, kv, g, hd); pools: (n_pool, bs, kv, hd);
     block_table: (b, n_blk) int32 physical block per logical block;
     index: (b,) int32 position of each request's newest token."""
+    interpret = default_interpret() if interpret is None else interpret
     b, kv, g, hd = q.shape
     bs = k_pool.shape[1]
     n_blk = block_table.shape[1]

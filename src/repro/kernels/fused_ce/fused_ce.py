@@ -16,11 +16,14 @@ VMEM: block 256 x 2048 f32 = 2 MiB/tile + 3 row vectors.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import default_interpret
 
 NEG_INF = -1e30
 
@@ -62,8 +65,10 @@ def _ce_kernel(labels_ref, logits_ref, o_ref, m_ref, l_ref, lab_ref, *,
 @functools.partial(jax.jit,
                    static_argnames=("block_rows", "block_v", "interpret"))
 def fused_ce(logits: jax.Array, labels: jax.Array, *, block_rows: int = 256,
-             block_v: int = 2048, interpret: bool = True) -> jax.Array:
+             block_v: int = 2048,
+             interpret: Optional[bool] = None) -> jax.Array:
     """logits: (T, V); labels: (T,) int32. Returns per-token nll (T,) f32."""
+    interpret = default_interpret() if interpret is None else interpret
     t, v = logits.shape
     br = min(block_rows, t)
     bv = min(block_v, v)

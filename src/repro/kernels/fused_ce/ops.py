@@ -4,11 +4,12 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.fused_ce.fused_ce import fused_ce as _fused_ce
+from repro.kernels.runtime import default_interpret
 from repro.kernels.fused_ce.ref import fused_ce_ref
 
 
 def fused_ce(logits, labels, **kw):
-    kw.setdefault("interpret", jax.default_backend() != "tpu")
+    kw.setdefault("interpret", default_interpret())
     return _fused_ce(logits, labels, **kw)
 
 

@@ -4,12 +4,12 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.runtime import default_interpret
 from repro.kernels.rmsnorm.rmsnorm import rmsnorm as _rmsnorm
 
 
 def rmsnorm(x, scale, eps: float = 1e-6):
-    return _rmsnorm(x, scale, eps,
-                    interpret=jax.default_backend() != "tpu")
+    return _rmsnorm(x, scale, eps, interpret=default_interpret())
 
 
 __all__ = ["rmsnorm", "rmsnorm_ref"]

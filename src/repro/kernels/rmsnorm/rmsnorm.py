@@ -9,10 +9,13 @@ one HBM pass instead of XLA's (square, reduce, rsqrt, mul, mul) chain.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import default_interpret
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
@@ -24,8 +27,10 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
-            block_rows: int = 256, interpret: bool = True) -> jax.Array:
+            block_rows: int = 256,
+            interpret: Optional[bool] = None) -> jax.Array:
     """x: (..., d); scale: (d,)."""
+    interpret = default_interpret() if interpret is None else interpret
     orig_shape = x.shape
     d = x.shape[-1]
     rows = 1

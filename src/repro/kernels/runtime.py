@@ -1,0 +1,15 @@
+"""Shared kernel runtime policy.
+
+Every Pallas entry point in this package takes ``interpret=None`` and
+resolves it here at call time: compiled on TPU, interpret mode everywhere
+else. Hardcoding a literal default is exactly the bug PR 7 fixed in
+``wagg`` (TPU callers silently pinned to interpret mode), and reprolint's
+PAL001 now rejects the pattern tree-wide.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"

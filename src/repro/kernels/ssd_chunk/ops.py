@@ -8,12 +8,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import default_interpret
 from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
 from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return default_interpret()
 
 
 def ssd_chunked_kernel(xs: jax.Array, dt: jax.Array, a: jax.Array,

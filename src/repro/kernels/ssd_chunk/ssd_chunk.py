@@ -20,10 +20,13 @@ f32 blocks 32 KiB — comfortably resident; both matmuls are MXU-shaped.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import default_interpret
 
 
 def _ssd_chunk_kernel(xs_ref, dt_ref, a_ref, b_ref, c_ref,
@@ -56,7 +59,7 @@ def _ssd_chunk_kernel(xs_ref, dt_ref, a_ref, b_ref, c_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ssd_chunk(xs: jax.Array, dt: jax.Array, a: jax.Array, B: jax.Array,
-              C: jax.Array, *, interpret: bool = True):
+              C: jax.Array, *, interpret: Optional[bool] = None):
     """Within-chunk SSD.
 
     xs: (b, nc, L, nh, hd); dt: (b, nc, L, nh); a: (nh,);
@@ -64,6 +67,7 @@ def ssd_chunk(xs: jax.Array, dt: jax.Array, a: jax.Array, B: jax.Array,
     Returns (y_diag (b, nc, L, nh, hd), states (b, nc, nh, ds, hd),
              totals (b, nc, nh)).
     """
+    interpret = default_interpret() if interpret is None else interpret
     b, nc, L, nh, hd = xs.shape
     ds = B.shape[-1]
     y, states, totals = pl.pallas_call(

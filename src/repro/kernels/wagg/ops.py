@@ -18,12 +18,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import default_interpret
 from repro.kernels.wagg.wagg import auto_block_n, wagg, wagg_fused
 from repro.kernels.wagg.ref import wagg_fused_ref, wagg_ref
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return default_interpret()
 
 
 def wagg_leaf(x: jax.Array, theta: jax.Array, beta,

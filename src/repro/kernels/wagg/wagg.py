@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import default_interpret
+
 # Per-kernel-invocation VMEM working-set budget. Real TPU cores have ~16 MiB
 # of VMEM; half of it leaves room for double buffering of the streamed tiles.
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
@@ -43,11 +45,10 @@ _MIN_BLOCK_N = 128
 
 
 def _default_interpret() -> bool:
-    # Same derivation as every other kernel's ops wrapper (e.g.
-    # kernels/rmsnorm/ops.py): compiled on TPU, interpret elsewhere. The old
-    # signature default hardcoded True, silently pinning direct TPU callers
-    # to interpret mode.
-    return jax.default_backend() != "tpu"
+    # Shared policy (kernels/runtime.py): compiled on TPU, interpret
+    # elsewhere. The old signature default hardcoded True, silently pinning
+    # direct TPU callers to interpret mode.
+    return default_interpret()
 
 
 def auto_block_n(p: int, block_n: int, bytes_per_col: int,

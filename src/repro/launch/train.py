@@ -65,6 +65,13 @@ def main():
                     help="run under a seeded elastic membership chaos "
                          "schedule (core/membership.make_chaos_schedule; "
                          "0 = fixed membership)")
+    ap.add_argument("--transfer-guard", default=None,
+                    choices=["log", "disallow", "log_explicit",
+                             "disallow_explicit"],
+                    help="debug: run each jitted round under "
+                         "jax.transfer_guard at this level — catches "
+                         "implicit device<->host transfers inside the "
+                         "step (batches are staged explicitly first)")
     ap.add_argument("--pipeline", default=None,
                     choices=["parity", "speculative"],
                     help="software-pipeline the round (train/step.py): "
@@ -115,7 +122,8 @@ def main():
                           checkpoint_every=args.checkpoint_every,
                           checkpoint_path=args.checkpoint_dir,
                           membership_schedule=membership,
-                          resume_from=args.resume)
+                          resume_from=args.resume,
+                          transfer_guard=args.transfer_guard)
     print(f"done: {summary}")
     if args.ckpt:
         save(args.ckpt, trainer.state.params,

@@ -7,6 +7,7 @@ scores back into the order state.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
@@ -242,7 +243,8 @@ class Trainer:
             membership_schedule: Optional[MembershipSchedule] = None,
             resume_from: Optional[str] = None,
             serve_hook: Optional[Callable[[int, Dict, Dict], Any]] = None,
-            serve_every: int = 1) -> Dict:
+            serve_every: int = 1,
+            transfer_guard: Optional[str] = None) -> Dict:
         """``batches`` is a round-batch iterator, or an ``OrderedDataset``
         instance — passing the dataset itself lets a pipelined run VALIDATE
         that its OrderGen decisions are deferred past the prefetcher's
@@ -278,7 +280,16 @@ class Trainer:
         rounds after the step with the live worker-stacked params — the
         train-to-serve bridge (``serve.HotSwapBridge`` extracts the beta=1
         consensus and hot-swaps it into a running engine, recording per-swap
-        staleness)."""
+        staleness).
+
+        ``transfer_guard`` (debug): a ``jax.transfer_guard`` level
+        (``"log"`` / ``"disallow"``, see jax docs) applied around each
+        jitted step call. Round batches are explicitly ``jax.device_put``
+        first — iterator batches are host arrays and their per-round h2d
+        staging is expected — so the guard only fires on implicit
+        transfers INSIDE the round (the ``.item()``/``np.*``-in-hot-path
+        family; ``tools/trace_audit.py`` runs the same check over the
+        backend grid). Metrics are read back after the guard exits."""
         from repro.data.pipeline import OrderedDataset
         ds = None
         if isinstance(batches, OrderedDataset):
@@ -359,6 +370,10 @@ class Trainer:
         if ds is not None:
             batches = ds.batches(start_round=start)
         t0 = time.time()
+        if transfer_guard is not None:
+            _guard = lambda: jax.transfer_guard(transfer_guard)  # noqa: E731
+        else:
+            _guard = contextlib.nullcontext
         mf = open(metrics_path, "a") if metrics_path else None
         prefetch = None
         if self.pipeline is not None and not isinstance(batches,
@@ -394,13 +409,18 @@ class Trainer:
                     cs = ({**cs, "active": mask} if isinstance(cs, dict)
                           else mask)
                     self.state = self.state._replace(comm_state=cs)
-                if self.pipeline is not None:
-                    if carry is None:
-                        carry = self._primer(self.state.params, batch)
-                    self.state, metrics, carry = self._step(
-                        self.state, batch, next_first, carry)
-                else:
-                    self.state, metrics = self._step(self.state, batch)
+                if transfer_guard is not None:
+                    batch = jax.device_put(batch)
+                    if self.pipeline is not None:
+                        next_first = jax.device_put(next_first)
+                with _guard():
+                    if self.pipeline is not None:
+                        if carry is None:
+                            carry = self._primer(self.state.params, batch)
+                        self.state, metrics, carry = self._step(
+                            self.state, batch, next_first, carry)
+                    else:
+                        self.state, metrics = self._step(self.state, batch)
                 rec = {k: np.asarray(v) for k, v in metrics.items()}
                 rec["round"] = r
                 if membership_schedule is not None:

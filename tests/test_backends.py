@@ -129,9 +129,9 @@ def test_resolve_spec_and_aliases():
     assert B.canonical_spec("quantized") == "einsum:int8"
     assert B.canonical_spec("async_rs_ag") == "rs_ag"
     with pytest.raises(KeyError, match="unknown aggregation schedule"):
-        B.resolve_spec("nope:int8")
+        B.resolve_spec("nope:int8")  # reprolint: allow=SPEC001 -- error path
     with pytest.raises(KeyError, match="unknown payload codec"):
-        B.resolve_spec("einsum:fp7")
+        B.resolve_spec("einsum:fp7")  # reprolint: allow=SPEC001 -- error path
 
 
 def test_quantized_alias_matches_composed_spec():

@@ -498,13 +498,13 @@ def test_config_validates_strategy_listing_policies():
 def test_config_validates_policy_spec_listing_policies():
     from repro.configs.base import WASGDConfig
     with pytest.raises(ValueError, match="registered policies"):
-        WASGDConfig(policy="boltzmann|nope")
+        WASGDConfig(policy="boltzmann|nope")  # reprolint: allow=SPEC001 -- error path
     with pytest.raises(ValueError, match="at most one"):
-        WASGDConfig(policy="boltzmann|equal")
+        WASGDConfig(policy="boltzmann|equal")  # reprolint: allow=SPEC001 -- error path
     with pytest.raises(ValueError, match="schedules the kernel's 'a'"):
-        WASGDConfig(policy="equal|anneal(linear)")
+        WASGDConfig(policy="equal|anneal(linear)")  # reprolint: allow=SPEC001 -- error path
     with pytest.raises(ValueError, match="takes"):
-        WASGDConfig(policy="boltzmann(nope=3)")
+        WASGDConfig(policy="boltzmann(nope=3)")  # reprolint: allow=SPEC001 -- error path
     WASGDConfig(policy="ema(0.9)|time_aware")     # valid spec constructs
 
 
@@ -581,6 +581,8 @@ def test_register_policy_duplicate_and_custom():
             return h * 2.0, state
 
     try:
+        # reprolint: allow=SPEC001 -- _test_scale is registered above, only
+        # for the duration of this test
         th, _ = parse_policy("_test_scale|boltzmann(a=2)")(
             jnp.array([1.0, 2.0]))
         # h*2 then Eq. 12 normalization: the scale cancels — same theta

@@ -1,0 +1,454 @@
+"""reprolint: each rule against paired good/bad fixtures (the bad ones
+reproduce the repo's actual bug history), pragma semantics, SPEC001
+registry drift, and the Trainer's transfer_guard debug flag."""
+import textwrap
+
+import pytest
+
+from tools.reprolint import ALL_RULES, Bridge, lint_text
+from tools.reprolint.cli import main as cli_main
+
+
+def _rules(src, path="src/repro/x.py", bridge=None):
+    return sorted({f.rule for f in
+                   lint_text(textwrap.dedent(src), path, bridge=bridge)})
+
+
+def _mini_bridge():
+    scheds = frozenset({"einsum", "rs_ag"})
+    codecs = frozenset({"f32", "int8"})
+    policies = frozenset({"boltzmann", "anneal"})
+
+    def resolve(s):
+        if ":" in s:
+            a, b = s.split(":", 1)
+            if a not in scheds:
+                raise KeyError(f"unknown aggregation schedule {a!r}")
+            if b not in codecs:
+                raise KeyError(f"unknown payload codec {b!r}")
+            return a, b
+        if s in scheds:
+            return s, None
+        raise KeyError(f"unknown aggregation backend {s!r}")
+
+    def parse(s):
+        for seg in s.split("|"):
+            if seg.split("(")[0] not in policies:
+                raise ValueError(f"unknown weight policy {seg!r}")
+        return object()
+
+    return Bridge(scheds, codecs, scheds, policies, resolve, parse)
+
+
+# ---------------------------------------------------------------------------
+# RNG001
+# ---------------------------------------------------------------------------
+
+def test_rng001_flags_double_sample():
+    assert "RNG001" in _rules("""
+        import jax
+        def f():
+            key = jax.random.key(0)
+            a = jax.random.normal(key, (4,))
+            b = jax.random.uniform(key, (4,))
+            return a, b
+    """)
+
+
+def test_rng001_flags_consume_then_split():
+    # PR 8: the legacy serve engine sampled from a key and THEN split it,
+    # correlating the first token with the rest of the stream.
+    assert "RNG001" in _rules("""
+        import jax
+        def sample(logits, key):
+            tok = jax.random.categorical(key, logits)
+            k1, k2 = jax.random.split(key)
+            return tok, k1, k2
+    """)
+
+
+def test_rng001_clean_split_before_sample_and_fold_in():
+    assert _rules("""
+        import jax
+        def f(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (4,))
+            b = jax.random.uniform(k2, (4,))
+            c = jax.random.normal(jax.random.fold_in(key, 1), (4,))
+            return a, b, c
+    """) == []
+
+
+def test_rng001_clean_rebind_in_loop():
+    assert _rules("""
+        import jax
+        def f(key, n):
+            outs = []
+            for i in range(n):
+                key, sub = jax.random.split(key)
+                outs.append(jax.random.normal(sub, (4,)))
+            return outs
+    """) == []
+
+
+def test_rng001_flags_loop_reuse_without_rebind():
+    assert "RNG001" in _rules("""
+        import jax
+        def f(key, xs):
+            outs = []
+            for x in xs:
+                outs.append(jax.random.normal(key, (4,)))
+            return outs
+    """)
+
+
+def test_rng001_ignores_stdlib_random_param():
+    # a random.Random parameter named rng is not a JAX key: reuse across
+    # helper calls is its normal stateful API
+    assert _rules("""
+        def draw(rng, elements):
+            n = rng.randint(0, 3)
+            return [e.example(rng) for e in elements[:n]]
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# JIT001
+# ---------------------------------------------------------------------------
+
+def test_jit001_flags_host_sync_in_jitted_def():
+    src = """
+        import jax
+        import numpy as np
+        @jax.jit
+        def step(x):
+            y = np.asarray(x)
+            print(y)
+            return x.sum().item()
+    """
+    findings = lint_text(textwrap.dedent(src), "src/repro/x.py")
+    assert sum(f.rule == "JIT001" for f in findings) == 3
+
+
+def test_jit001_follows_local_call_graph():
+    assert "JIT001" in _rules("""
+        import jax
+        def helper(x):
+            return float(x.mean())
+        def round_fn(x):
+            return helper(x) + 1
+        step = jax.jit(round_fn)
+    """)
+
+
+def test_jit001_clean_outside_trace_and_static_args():
+    assert _rules("""
+        import functools
+        import jax
+        import numpy as np
+        def host_metrics(x):
+            return float(np.asarray(x).mean())
+        @functools.partial(jax.jit, static_argnames=("beta",))
+        def step(x, beta):
+            return x * float(beta)
+    """) == []
+
+
+def test_jit001_marks_lax_control_flow_bodies():
+    assert "JIT001" in _rules("""
+        import jax
+        def body(c, x):
+            print(x)
+            return c, x
+        def run(xs):
+            return jax.lax.scan(body, 0, xs)
+    """)
+
+
+# ---------------------------------------------------------------------------
+# PAL001
+# ---------------------------------------------------------------------------
+
+def test_pal001_flags_hardcoded_default_and_call():
+    # PR 7: wagg's interpret=True default silently ran interpret mode on TPU
+    src = """
+        from jax.experimental import pallas as pl
+        def kern(x, interpret: bool = True):
+            return pl.pallas_call(lambda r, o: None, interpret=False)(x)
+    """
+    findings = lint_text(textwrap.dedent(src), "src/repro/x.py")
+    assert sum(f.rule == "PAL001" for f in findings) == 2
+
+
+def test_pal001_clean_backend_derived():
+    assert _rules("""
+        from typing import Optional
+        import jax
+        from jax.experimental import pallas as pl
+        def kern(x, interpret: Optional[bool] = None):
+            interpret = (jax.default_backend() != "tpu"
+                         if interpret is None else interpret)
+            return pl.pallas_call(lambda r, o: None, interpret=interpret)(x)
+    """) == []
+
+
+def test_pal001_silent_without_pallas_import():
+    assert _rules("""
+        def simulate(x, interpret: bool = True):
+            return x if interpret else -x
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# SPEC001
+# ---------------------------------------------------------------------------
+
+def test_spec001_flags_unregistered_codec():
+    assert "SPEC001" in _rules('SPEC = "rs_ag:int9"\n',
+                               bridge=_mini_bridge())
+
+
+def test_spec001_flags_unknown_policy_stage():
+    assert "SPEC001" in _rules('POLICY = "boltzmann|nope"\n',
+                               bridge=_mini_bridge())
+
+
+def test_spec001_clean_valid_and_unanchored():
+    assert _rules("""
+        SPEC = "einsum:f32"
+        POLICY = "boltzmann(a=8)|anneal(cosine)"
+        NOT_A_SPEC = "file:line"
+        PROSE = "einsum:f32 beats rs_ag:int8 at small sizes in most runs"
+    """, bridge=_mini_bridge()) == []
+
+
+def test_spec001_skipped_without_bridge():
+    assert _rules('SPEC = "rs_ag:int9"\n', bridge=None) == []
+
+
+def test_spec001_registry_drift_live():
+    """A spec string is valid exactly while its schedule is registered."""
+    from tools.reprolint.registry import load_bridge
+    from repro.core import backends as B
+
+    class _DriftSched:
+        name = "_lintdrift"
+        needs_mesh = False
+
+    src = 'SPEC = "_lintdrift:f32"\n'
+    B.register_schedule(_DriftSched())
+    try:
+        assert _rules(src, bridge=load_bridge()) == []
+    finally:
+        B._SCHEDULES.pop("_lintdrift", None)
+        B._COMPOSED.clear()
+    assert _rules(src, bridge=load_bridge()) == ["SPEC001"]
+
+
+# ---------------------------------------------------------------------------
+# DT001
+# ---------------------------------------------------------------------------
+
+def test_dt001_flags_narrowing_cast():
+    # PR 6: restore() silently cast every leaf through a narrow dtype
+    assert "DT001" in _rules("""
+        import jax.numpy as jnp
+        def pack(x):
+            return x.astype(jnp.bfloat16)
+    """)
+
+
+def test_dt001_exempts_codec_and_checkpoint_layers():
+    src = """
+        import jax.numpy as jnp
+        def pack(x):
+            return x.astype(jnp.int8)
+    """
+    assert _rules(src, path="src/repro/core/codecs.py") == []
+    assert _rules(src, path="src/repro/checkpoint/io.py") == []
+    assert "DT001" in _rules(src, path="src/repro/train/step.py")
+
+
+def test_dt001_widening_clean():
+    assert _rules("""
+        import jax.numpy as jnp
+        def up(x):
+            return x.astype(jnp.float32)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# THR001
+# ---------------------------------------------------------------------------
+
+_THR_BAD = """
+    import threading
+    class Prefetcher:
+        def start(self):
+            self._t = threading.Thread(target=self._worker, daemon=True)
+            self._t.start()
+        def _worker(self):
+            self._result = 42
+        def get(self):
+            return self._result
+"""
+
+
+def test_thr001_flags_unsynchronized_cross_thread_attr():
+    assert "THR001" in _rules(_THR_BAD)
+
+
+def test_thr001_lock_in_class_suppresses():
+    assert _rules("""
+        import threading
+        class Prefetcher:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def start(self):
+                self._t = threading.Thread(target=self._worker, daemon=True)
+                self._t.start()
+            def _worker(self):
+                with self._lock:
+                    self._result = 42
+            def get(self):
+                with self._lock:
+                    return self._result
+    """) == []
+
+
+def test_thr001_worker_private_attrs_clean():
+    assert _rules("""
+        import threading
+        class Prefetcher:
+            def start(self):
+                self._t = threading.Thread(target=self._worker, daemon=True)
+                self._t.start()
+            def _worker(self):
+                self._scratch = 42
+                return self._scratch
+            def get(self):
+                return 7
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+
+def test_pragma_with_reason_suppresses():
+    assert _rules("""
+        import jax.numpy as jnp
+        def pack(x):
+            return x.astype(jnp.bfloat16)  # reprolint: allow=DT001 -- wire fmt
+    """) == []
+
+
+def test_pragma_without_reason_is_its_own_finding():
+    rules = _rules("""
+        import jax.numpy as jnp
+        def pack(x):
+            return x.astype(jnp.bfloat16)  # reprolint: allow=DT001
+    """)
+    assert rules == ["DT001", "PRAGMA001"]   # no reason: nothing suppressed
+
+
+def test_pragma_standalone_comment_covers_next_line():
+    assert _rules("""
+        import jax.numpy as jnp
+        def pack(x):
+            # reprolint: allow=DT001 -- the justification rides above the
+            # statement so long lines stay readable
+            return x.astype(jnp.bfloat16)
+    """) == []
+
+
+def test_pragma_inside_string_literal_is_inert():
+    assert "DT001" in _rules("""
+        import jax.numpy as jnp
+        FIXTURE = "x.astype(jnp.bfloat16)  # reprolint: allow=DT001 -- hi"
+        def pack(x):
+            return x.astype(jnp.bfloat16)
+    """)
+
+
+def test_pragma001_not_suppressible():
+    assert "PRAGMA001" in _rules("""
+        X = 1  # reprolint: allow=PRAGMA001
+    """)
+
+
+def test_pragma_wrong_rule_does_not_suppress():
+    assert "DT001" in _rules("""
+        import jax.numpy as jnp
+        def pack(x):
+            return x.astype(jnp.bfloat16)  # reprolint: allow=RNG001 -- nope
+    """)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_exit_codes_and_rule_filter(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent("""
+        import jax
+        def f():
+            key = jax.random.key(0)
+            return jax.random.normal(key, (2,)), jax.random.normal(key, (2,))
+    """))
+    good = tmp_path / "good.py"
+    good.write_text("X = 1\n")
+
+    assert cli_main([str(bad), "--no-registry"]) == 1
+    assert "RNG001" in capsys.readouterr().out
+    assert cli_main([str(good), "--no-registry"]) == 0
+    # filtered to an unrelated rule, the bad file passes
+    assert cli_main([str(bad), "--no-registry", "--rules", "DT001"]) == 0
+    assert cli_main([str(bad), "--no-registry", "--rules", "NOPE1"]) == 2
+
+
+def test_repo_tree_is_clean():
+    """The gate CI enforces: src/tests/benchmarks lint clean against the
+    live registries."""
+    from tools.reprolint import lint_paths, load_bridge
+    from tools.reprolint.registry import REPO_ROOT
+    import os
+    paths = [os.path.join(REPO_ROOT, p)
+             for p in ("src", "tests", "benchmarks")]
+    findings = lint_paths(paths, bridge=load_bridge())
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_all_rules_listed():
+    assert set(ALL_RULES) == {"RNG001", "JIT001", "PAL001", "SPEC001",
+                              "DT001", "THR001", "PRAGMA001"}
+
+
+# ---------------------------------------------------------------------------
+# Trainer transfer_guard
+# ---------------------------------------------------------------------------
+
+def test_trainer_run_under_transfer_guard():
+    import functools
+    import jax
+    from repro.configs import TrainConfig, WASGDConfig
+    from repro.data import OrderedDataset, make_classification
+    from repro.models import cnn
+    from repro.models.param import build
+    from repro.train import Trainer
+
+    X, y = make_classification(0, 256, d=16, n_classes=4)
+    params, axes = build(functools.partial(
+        cnn.mlp_init, d_in=16, d_hidden=32, n_classes=4), jax.random.key(0))
+
+    def loss_fn(p, b):
+        return cnn.classification_loss(cnn.mlp_apply(p, b["x"]), b["y"]), {}
+
+    tcfg = TrainConfig(learning_rate=0.05, wasgd=WASGDConfig(tau=4))
+    ds = OrderedDataset({"x": X, "y": y}, 2, 4, 8, n_segments=1)
+    tr = Trainer(loss_fn, params, axes, tcfg, 2)
+    # "disallow" raises on any implicit transfer inside the jitted round —
+    # completing 4 rounds IS the assertion
+    tr.run(ds.batches(), 4, transfer_guard="disallow")
+    assert len(tr.history) == 4

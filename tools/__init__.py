@@ -1,0 +1,6 @@
+"""Repo tooling (static analysis, trace audits). Not shipped with the
+``repro`` package — run from the repo root:
+
+    python -m tools.reprolint src tests benchmarks
+    python tools/trace_audit.py --fast
+"""

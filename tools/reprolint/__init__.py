@@ -1,0 +1,47 @@
+"""reprolint — a JAX-aware static-analysis pass for this repo.
+
+Mechanizes the bug classes PRs 1-8 kept fixing by hand; see ``rules.py``
+for the rule table and ``README.md`` ("Static analysis") for usage.
+
+    python -m tools.reprolint src tests benchmarks
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Set
+
+from tools.reprolint.registry import Bridge, load_bridge
+from tools.reprolint.report import Finding, render
+from tools.reprolint.rules import ALL_RULES, lint_source
+from tools.reprolint.walker import (SourceFile, iter_python_files,
+                                    load_source)
+
+__all__ = ["Bridge", "Finding", "ALL_RULES", "lint_text", "lint_paths",
+           "load_bridge", "render"]
+
+
+def lint_text(text: str, path: str = "<memory>",
+              bridge: Optional[Bridge] = None,
+              rules: Optional[Set[str]] = None) -> List[Finding]:
+    """Lint a source string. ``bridge=None`` skips SPEC001 (tests inject a
+    hand-built Bridge; the CLI always loads the live one)."""
+    sf = load_source(path, text=text)
+    assert sf is not None
+    return lint_source(sf, bridge, rules)
+
+
+def lint_paths(paths: List[str], bridge: Optional[Bridge] = None,
+               rules: Optional[Set[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_python_files(paths):
+        try:
+            sf = load_source(path)
+        except SyntaxError as e:
+            findings.append(Finding("PARSE", path, e.lineno or 0,
+                                    f"syntax error: {e.msg}"))
+            continue
+        if sf is None:
+            findings.append(Finding("PARSE", path, 0, "unreadable file"))
+            continue
+        findings.extend(lint_source(sf, bridge, rules))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

@@ -1,0 +1,201 @@
+"""Per-module call graph rooted at jit/shard_map/pallas trace sites.
+
+JIT001 needs to know which functions' bodies end up inside a traced
+program. XLA cannot check this statically and the failure is silent (a
+``print`` traces to nothing, an ``np.*`` call bakes trace-time host work
+into a hot path, ``.item()`` forces a device sync per call) — so we build,
+per module, the set of locally-defined functions reachable from any
+trace-inducing call site:
+
+* decorators: ``@jax.jit``, ``@functools.partial(jax.jit, ...)``, ``@pjit``
+* call sites: ``jax.jit(f)``, ``shard_map(f, ...)``, ``pl.pallas_call(k)``,
+  ``jax.lax.{scan,while_loop,fori_loop,cond,switch}``, ``jax.grad`` /
+  ``value_and_grad`` / ``vmap`` / ``checkpoint`` / ``remat`` — anything
+  that traces its function argument.
+* edges: bare-name calls to module-local functions, and ``self.m()`` calls
+  to same-class methods.
+
+Cross-module reachability is deliberately out of scope (the issue scopes
+the graph per module); a function jitted by ANOTHER module is that
+module's entry and gets scanned when the jit site's module is linted only
+if locally resolvable.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.reprolint.walker import _dotted
+
+# Call-site wrappers that trace their function-valued arguments. Keyed by
+# the LAST dotted component, so ``jax.jit``, ``jax.lax.scan``,
+# ``pl.pallas_call`` and bare ``shard_map`` all match. Values: which
+# positional args are (or contain) traced functions; None = all args.
+TRACING_WRAPPERS: Dict[str, Optional[Tuple[int, ...]]] = {
+    "jit": (0,),
+    "pjit": (0,),
+    "pmap": (0,),
+    "vmap": (0,),
+    "grad": (0,),
+    "value_and_grad": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+    "shard_map": (0,),
+    "pallas_call": (0,),
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": None,          # every function-valued operand traces
+    "switch": None,
+}
+
+# decorator heads that mean "this def is traced"
+_JIT_DECORATOR_HEADS = {"jit", "pjit", "pmap"}
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    node: ast.AST                       # FunctionDef | AsyncFunctionDef
+    name: str
+    qualname: str
+    class_name: Optional[str]
+
+
+class ModuleGraph:
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        self.functions: List[FuncInfo] = []
+        self.by_name: Dict[str, List[FuncInfo]] = {}
+        self.by_class: Dict[Tuple[str, str], FuncInfo] = {}
+        self._collect(tree, qual="", class_name=None)
+        self._entries: Optional[Set[int]] = None
+
+    # -- collection --------------------------------------------------------
+
+    def _collect(self, node: ast.AST, qual: str, class_name: Optional[str]):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{qual}.{child.name}" if qual else child.name
+                info = FuncInfo(child, child.name, q, class_name)
+                self.functions.append(info)
+                self.by_name.setdefault(child.name, []).append(info)
+                if class_name is not None:
+                    self.by_class.setdefault((class_name, child.name), info)
+                self._collect(child, q, class_name)
+            elif isinstance(child, ast.ClassDef):
+                q = f"{qual}.{child.name}" if qual else child.name
+                self._collect(child, q, class_name=child.name)
+            else:
+                self._collect(child, qual, class_name)
+
+    # -- entry detection ---------------------------------------------------
+
+    @staticmethod
+    def _wrapper_key(func_expr: ast.AST) -> Optional[str]:
+        dotted = _dotted(func_expr)
+        if dotted is None:
+            return None
+        last = dotted.rsplit(".", 1)[-1]
+        if last not in TRACING_WRAPPERS:
+            return None
+        # ``tree.map``-style false friends: only trust bare names or roots
+        # that look like jax/lax/pl/pallas/functools-free chains.
+        if last in ("scan", "while_loop", "fori_loop", "cond", "switch"):
+            if "." in dotted and not (
+                    ".lax." in f".{dotted}" or dotted.startswith("lax.")):
+                return None
+        return last
+
+    def _funcs_named(self, name: str) -> List[FuncInfo]:
+        return self.by_name.get(name, [])
+
+    def _mark_traced_arg(self, arg: ast.AST, entries: Set[int]):
+        """A function-valued operand of a tracing wrapper: bare name,
+        ``functools.partial(f, ...)``, or a list/tuple of either
+        (``lax.switch`` branch lists)."""
+        if isinstance(arg, ast.Name):
+            for info in self._funcs_named(arg.id):
+                entries.add(id(info.node))
+        elif isinstance(arg, ast.Call):
+            d = _dotted(arg.func)
+            if d is not None and d.rsplit(".", 1)[-1] == "partial" \
+                    and arg.args:
+                self._mark_traced_arg(arg.args[0], entries)
+        elif isinstance(arg, (ast.List, ast.Tuple)):
+            for el in arg.elts:
+                self._mark_traced_arg(el, entries)
+
+    def _decorator_is_jit(self, dec: ast.AST) -> bool:
+        d = _dotted(dec)
+        if d is not None:
+            return d.rsplit(".", 1)[-1] in _JIT_DECORATOR_HEADS
+        if isinstance(dec, ast.Call):
+            head = _dotted(dec.func)
+            if head is None:
+                return False
+            last = head.rsplit(".", 1)[-1]
+            if last in _JIT_DECORATOR_HEADS:
+                return True
+            if last == "partial" and dec.args:
+                inner = _dotted(dec.args[0])
+                return inner is not None and \
+                    inner.rsplit(".", 1)[-1] in _JIT_DECORATOR_HEADS
+        return False
+
+    def entry_nodes(self) -> Set[int]:
+        """id()s of function nodes handed directly to a tracing wrapper."""
+        entries: Set[int] = set()
+        for info in self.functions:
+            if any(self._decorator_is_jit(d)
+                   for d in info.node.decorator_list):
+                entries.add(id(info.node))
+        for call in (n for n in ast.walk(self.tree)
+                     if isinstance(n, ast.Call)):
+            key = self._wrapper_key(call.func)
+            if key is None:
+                continue
+            argpos = TRACING_WRAPPERS[key]
+            args = (call.args if argpos is None
+                    else [call.args[i] for i in argpos
+                          if i < len(call.args)])
+            for a in args:
+                self._mark_traced_arg(a, entries)
+        return entries
+
+    # -- reachability ------------------------------------------------------
+
+    def _callees(self, info: FuncInfo) -> Set[int]:
+        out: Set[int] = set()
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name):
+                for cand in self._funcs_named(f.id):
+                    out.add(id(cand.node))
+            elif isinstance(f, ast.Attribute) \
+                    and isinstance(f.value, ast.Name) \
+                    and f.value.id == "self" and info.class_name:
+                cand = self.by_class.get((info.class_name, f.attr))
+                if cand is not None:
+                    out.add(id(cand.node))
+        return out
+
+    def traced_functions(self) -> List[FuncInfo]:
+        """Every locally-defined function reachable from a trace site."""
+        if self._entries is None:
+            self._entries = self.entry_nodes()
+        by_id = {id(f.node): f for f in self.functions}
+        reach: Set[int] = set()
+        frontier = [i for i in self._entries if i in by_id]
+        while frontier:
+            cur = frontier.pop()
+            if cur in reach:
+                continue
+            reach.add(cur)
+            for nxt in self._callees(by_id[cur]):
+                if nxt not in reach:
+                    frontier.append(nxt)
+        return [by_id[i] for i in sorted(reach, key=lambda i:
+                                         by_id[i].node.lineno)]

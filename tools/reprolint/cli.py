@@ -1,0 +1,62 @@
+"""CLI: ``python -m tools.reprolint [paths...]``.
+
+Exit 0 on a clean tree, 1 on findings, 2 on environment failure (the live
+registries would not import — SPEC001 cannot run, which is itself a
+failure: silently skipping the registry check is how spec strings rot).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from tools.reprolint import ALL_RULES, lint_paths, load_bridge, render
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="JAX-aware static analysis for this repo "
+                    "(rule table: tools/reprolint/rules.py)")
+    ap.add_argument("paths", nargs="*",
+                    default=["src", "tests", "benchmarks"],
+                    help="files or directories to lint "
+                         "(default: src tests benchmarks)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run "
+                         f"(default: all of {','.join(ALL_RULES)})")
+    ap.add_argument("--no-registry", action="store_true",
+                    help="skip importing the live registries "
+                         "(disables SPEC001; for unit tests/offline runs)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="findings only, no fix hints")
+    args = ap.parse_args(argv)
+
+    rules = None
+    if args.rules:
+        rules = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = rules - set(ALL_RULES)
+        if unknown:
+            print(f"unknown rule id(s): {sorted(unknown)}", file=sys.stderr)
+            return 2
+
+    bridge = None
+    if not args.no_registry and (rules is None or "SPEC001" in rules):
+        try:
+            bridge = load_bridge()
+        except Exception as e:  # noqa: BLE001 - report any import failure
+            print(f"reprolint: cannot import live registries for SPEC001: "
+                  f"{type(e).__name__}: {e}", file=sys.stderr)
+            print("(run with --no-registry to lint without SPEC001)",
+                  file=sys.stderr)
+            return 2
+
+    findings = lint_paths(list(args.paths), bridge=bridge, rules=rules)
+    out = render(findings, verbose_hints=not args.quiet)
+    if out:
+        print(out)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

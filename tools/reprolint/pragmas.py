@@ -1,0 +1,93 @@
+"""Per-line suppression pragmas.
+
+The ONLY suppression mechanism is a pragma on the offending line itself —
+there is no baseline file, so the tree must actually be clean:
+
+    self._exc = e   # reprolint: allow=THR001 -- single-ref write is atomic
+                    #   under the GIL; held and re-raised on the caller
+
+Format: ``# reprolint: allow=RULE[,RULE...] -- <justification>``. The
+justification is mandatory — a pragma without one is itself a finding
+(PRAGMA001), so every suppression in the tree documents WHY the hazard is
+intentional, not just that someone silenced it.
+
+Placement: a trailing pragma suppresses its own physical line; a pragma on
+a standalone comment line suppresses the next code line (so long
+statements keep their justification readable above them).
+"""
+from __future__ import annotations
+
+import re
+import tokenize
+import io
+from typing import Dict, List, Set, Tuple
+
+from tools.reprolint.report import Finding
+
+_PRAGMA_RE = re.compile(
+    r"#\s*reprolint:\s*allow\s*=\s*"
+    r"(?P<rules>[A-Z0-9]+(?:\s*,\s*[A-Z0-9]+)*)"
+    r"(?P<reason>\s*--\s*\S.*)?")
+
+_ANY_PRAGMA_RE = re.compile(r"#\s*reprolint\b")
+
+
+def collect(text: str, path: str) -> Tuple[Dict[int, Set[str]],
+                                           List[Finding]]:
+    """Scan ``text`` for suppression pragmas.
+
+    Returns ``(allowed, findings)``: ``allowed[line]`` is the set of rule
+    ids suppressed on that physical line; malformed or justification-free
+    pragmas come back as PRAGMA001 findings. Pragmas are read from real
+    comment tokens (not string literals), so a fixture string CONTAINING a
+    pragma does not suppress anything in the file that holds it.
+    """
+    allowed: Dict[int, Set[str]] = {}
+    findings: List[Finding] = []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return allowed, findings
+    _trivial = {tokenize.COMMENT, tokenize.NL, tokenize.NEWLINE,
+                tokenize.INDENT, tokenize.DEDENT, tokenize.ENDMARKER}
+    code_lines = sorted({t.start[0] for t in tokens
+                         if t.type not in _trivial})
+    for i, tok in enumerate(tokens):
+        if tok.type != tokenize.COMMENT \
+                or not _ANY_PRAGMA_RE.search(tok.string):
+            continue
+        line = tok.start[0]
+        m = _PRAGMA_RE.search(tok.string)
+        if m is None:
+            findings.append(Finding(
+                "PRAGMA001", path, line,
+                f"unparsable reprolint pragma {tok.string.strip()!r}"))
+            continue
+        rules = {r.strip() for r in m.group("rules").split(",")}
+        if not m.group("reason"):
+            findings.append(Finding(
+                "PRAGMA001", path, line,
+                f"pragma suppressing {sorted(rules)} carries no "
+                f"justification (append ' -- <why>')"))
+            continue
+        standalone = not any(t.start[0] == line and t.type not in _trivial
+                             for t in tokens[:i])
+        target = line
+        if standalone:
+            nxt = [ln for ln in code_lines if ln > line]
+            if nxt:
+                target = nxt[0]
+        allowed.setdefault(target, set()).update(rules)
+    return allowed, findings
+
+
+def apply(findings: List[Finding], allowed: Dict[int, Set[str]]
+          ) -> List[Finding]:
+    """Drop findings whose (line, rule) is suppressed. PRAGMA001 itself is
+    not suppressible — fixing the pragma is the only way out."""
+    out = []
+    for f in findings:
+        if f.rule != "PRAGMA001" and f.rule in allowed.get(f.line, ()):
+            continue
+        out.append(f)
+    return out

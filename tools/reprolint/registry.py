@@ -1,0 +1,69 @@
+"""Bridge from the linter to the LIVE repro registries.
+
+SPEC001 validates every ``"schedule:codec"`` / policy-grammar string
+literal in the tree against the registries as they exist *right now*
+(``core.backends``/``core.codecs``/``core.weights``) — so a registry
+rename cannot orphan a spec string in a test, a benchmark or a config
+without the lint run going red. That requires importing the package at
+lint time; ``load_bridge`` puts ``src/`` on ``sys.path`` relative to the
+repo root so ``python -m tools.reprolint`` works from a bare checkout.
+
+The tests construct a ``Bridge`` by hand (or around a temp registry entry)
+to prove drift detection without touching the real registries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+from typing import Callable, FrozenSet
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                         os.pardir, os.pardir))
+
+
+@dataclasses.dataclass(frozen=True)
+class Bridge:
+    schedules: FrozenSet[str]
+    codecs: FrozenSet[str]
+    backends: FrozenSet[str]            # aliases + monolithic registrations
+    policies: FrozenSet[str]
+    resolve_spec: Callable[[str], object]    # raises KeyError on unknown
+    parse_policy: Callable[[str], object]    # raises ValueError on unknown
+
+    def validate_backend_spec(self, s: str) -> str:
+        """'' when ``s`` resolves, else the failure message."""
+        try:
+            self.resolve_spec(s)
+            return ""
+        except KeyError as e:
+            return str(e).strip("'\"")
+
+    def validate_policy_spec(self, s: str) -> str:
+        try:
+            self.parse_policy(s)
+            return ""
+        except (ValueError, TypeError) as e:
+            return str(e)
+
+
+def ensure_src_on_path():
+    src = os.path.join(REPO_ROOT, "src")
+    if os.path.isdir(src) and src not in sys.path:
+        sys.path.insert(0, src)
+
+
+def load_bridge() -> Bridge:
+    """Import the live registries. Raises ImportError where repro (or jax)
+    is genuinely unavailable — SPEC001 silently skipping would defeat the
+    rule, so the CLI surfaces that as a hard error."""
+    ensure_src_on_path()
+    from repro.core import backends, codecs, weights
+    return Bridge(
+        schedules=frozenset(backends.available_schedules()),
+        codecs=frozenset(codecs.available_codecs()),
+        backends=frozenset(backends.available_backends()),
+        policies=frozenset(weights.available_policies()),
+        resolve_spec=backends.resolve_spec,
+        parse_policy=weights.parse_policy,
+    )

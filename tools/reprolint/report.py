@@ -1,0 +1,72 @@
+"""Finding record + per-rule fix hints.
+
+Every rule in ``tools/reprolint/rules.py`` was distilled from a bug this
+repo actually shipped and later fixed (the PR that fixed it is named in the
+hint); a finding is therefore never style — it is "this shape has broken
+this codebase before".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+# One-line fix hints, keyed by rule id. Kept here (not in the rule bodies)
+# so the CLI, the README table and the tests share a single source.
+HINTS = {
+    "RNG001": "derive a fresh key per consumer: key, sub = "
+              "jax.random.split(key) BEFORE the first sample, or "
+              "jax.random.fold_in(key, step) per use (PR 8's legacy-engine "
+              "consume-then-split bug)",
+    "JIT001": "host-sync construct in a jit/shard_map/pallas-reachable "
+              "function: move it outside the traced region, or use jnp/"
+              "lax equivalents (.item()/np.*/print force a device sync or "
+              "bake host work into the trace)",
+    "PAL001": "derive interpret from the backend at call time "
+              "(interpret=None + jax.default_backend() != 'tpu'), never a "
+              "hardcoded literal (PR 7: wagg silently pinned TPU callers "
+              "to interpret mode)",
+    "SPEC001": "spec string does not resolve against the live registries "
+               "(core.backends/core.codecs/core.weights) — a registry "
+               "rename orphaned it, or it carries a typo",
+    "DT001": "narrowing cast (f32 -> bf16/f16/int8) outside the codec/"
+             "checkpoint layers: route through a PayloadCodec, or mark it "
+             "intentional with '# reprolint: allow=DT001 -- <why>' (PR 6: "
+             "restore() silently cast every leaf)",
+    "THR001": "attribute written by a background-thread method and read "
+              "from foreign-thread methods with no Lock/Event in the "
+              "class: guard it, or justify the lock-free design with a "
+              "pragma",
+    "PRAGMA001": "suppression pragmas must carry a justification: "
+                 "'# reprolint: allow=<RULE> -- <why this is intentional>'",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    @property
+    def hint(self) -> str:
+        return HINTS.get(self.rule, "")
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def render(findings: List[Finding], verbose_hints: bool = True) -> str:
+    out = []
+    seen_rules = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        out.append(f.format())
+        if f.rule not in seen_rules:
+            seen_rules.append(f.rule)
+    if verbose_hints and findings:
+        out.append("")
+        for r in seen_rules:
+            if HINTS.get(r):
+                out.append(f"  {r}: {HINTS[r]}")
+    return "\n".join(out)

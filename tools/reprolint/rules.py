@@ -1,0 +1,553 @@
+"""The rule set — each rule is a bug class this repo actually shipped.
+
+RNG001   key consume-before-split / multi-consume (PR 8: the legacy serve
+         engine sampled from a key and THEN split it, correlating the
+         first sampled token with the rest of the stream).
+JIT001   host-sync constructs (``.item()``, ``.tolist()``, ``np.*``,
+         ``print``, ``float()``/``int()`` on non-static values) inside
+         functions reachable from a jit/shard_map/pallas/lax-control-flow
+         trace site (per-module call graph).
+PAL001   ``interpret=`` pinned to a literal in a Pallas entry point instead
+         of derived from the backend (PR 7: ``wagg`` hardcoded
+         ``interpret=True`` and silently ran interpret mode on TPUs).
+SPEC001  ``"schedule:codec"`` / policy-grammar string literals that no
+         longer resolve against the live registries (PR 1's class of
+         silently-dropped config knobs, generalized to renames).
+DT001    narrowing casts (f32 -> bf16/f16/int8/...) outside the codec and
+         checkpoint layers (PR 6: ``restore`` silently cast every leaf).
+THR001   attributes written from a ``threading.Thread`` target and read
+         from foreign-thread methods with no lock/event in the class
+         (the ``RoundPrefetcher``/``AsyncCheckpointer`` hazard family).
+
+Suppression is per-line pragma only (``tools/reprolint/pragmas.py``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from tools.reprolint.callgraph import ModuleGraph
+from tools.reprolint.registry import Bridge
+from tools.reprolint.report import Finding
+from tools.reprolint.walker import SourceFile, _dotted
+
+ALL_RULES = ("RNG001", "JIT001", "PAL001", "SPEC001", "DT001", "THR001",
+             "PRAGMA001")
+
+
+# ---------------------------------------------------------------------------
+# RNG001 — key multi-consumption
+# ---------------------------------------------------------------------------
+
+# jax.random functions that DERIVE rather than consume: passing a key to
+# these any number of times is the intended discipline.
+_RNG_NON_CONSUMING = {"fold_in", "key_data", "wrap_key_data", "clone",
+                      "key_impl"}
+# value-producing jax.random calls whose result binds a fresh key
+_RNG_CREATORS = {"key", "PRNGKey", "split", "fold_in", "clone",
+                 "wrap_key_data"}
+# parameter names treated as incoming keys (a helper that consumes its key
+# parameter twice is the same bug one frame down)
+_KEY_PARAM_RE = re.compile(r"^(key|rng|prng_key|[a-z0-9_]*_key)$")
+
+
+def _jax_random_fn(call: ast.Call) -> Optional[str]:
+    d = _dotted(call.func)
+    if d is None:
+        return None
+    parts = d.split(".")
+    if len(parts) >= 2 and parts[-2] in ("random", "jr"):
+        return parts[-1]
+    return None
+
+
+class _RngScope:
+    """Env maps name -> (consume_count, is_local). ``is_local`` keys were
+    bound from a jax.random creation in this scope, so ANY call receiving
+    them consumes; parameter-originated keys (``is_local=False``) only
+    count jax.random consumptions — a stdlib ``random.Random`` parameter
+    named ``rng`` reused across helper calls is not a JAX key hazard."""
+
+    def __init__(self, sf: SourceFile, findings: List[Finding]):
+        self.sf = sf
+        self.findings = findings
+        self._reported: Set[Tuple[int, str]] = set()
+
+    # -- env helpers -------------------------------------------------------
+
+    @staticmethod
+    def _merge_max(into: Dict[str, Tuple[int, bool]],
+                   *branches: Dict[str, Tuple[int, bool]]):
+        names = set(into)
+        for b in branches:
+            names |= set(b)
+        for n in names:
+            vals = [b[n] for b in branches if n in b]
+            if n in into:
+                vals.append(into[n])
+            if vals:
+                into[n] = (max(v[0] for v in vals),
+                           any(v[1] for v in vals))
+        return into
+
+    def _report(self, name: str, node: ast.AST):
+        key = (node.lineno, name)
+        if key in self._reported:
+            return
+        self._reported.add(key)
+        self.findings.append(Finding(
+            "RNG001", self.sf.path, node.lineno,
+            f"PRNG key {name!r} consumed more than once (sampled/split "
+            f"again without re-splitting or fold_in)"))
+
+    # -- expression scan ---------------------------------------------------
+
+    def _scan_expr(self, node: Optional[ast.AST],
+                   env: Dict[str, Tuple[int, bool]]):
+        if node is None:
+            return
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn = _jax_random_fn(sub)
+            if fn in _RNG_NON_CONSUMING:
+                continue
+            args = list(sub.args) + [kw.value for kw in sub.keywords]
+            for a in args:
+                if isinstance(a, ast.Name) and a.id in env:
+                    count, is_local = env[a.id]
+                    if not is_local and fn is None:
+                        continue
+                    env[a.id] = (count + 1, is_local)
+                    if count + 1 >= 2:
+                        self._report(a.id, sub)
+
+    # -- binding -----------------------------------------------------------
+
+    @staticmethod
+    def _is_rng_creation(value: ast.AST) -> bool:
+        if isinstance(value, ast.Call):
+            fn = _jax_random_fn(value)
+            return fn in _RNG_CREATORS
+        if isinstance(value, ast.Subscript):
+            return _RngScope._is_rng_creation(value.value)
+        return False
+
+    def _bind_target(self, target: ast.AST, creates: bool,
+                     env: Dict[str, Tuple[int, bool]]):
+        if isinstance(target, ast.Name):
+            if creates:
+                env[target.id] = (0, True)
+            else:
+                env.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind_target(el, creates, env)
+
+    # -- statements --------------------------------------------------------
+
+    def scan_stmts(self, stmts: List[ast.stmt], env: Dict[str, int]):
+        for s in stmts:
+            self.scan_stmt(s, env)
+
+    def scan_stmt(self, s: ast.stmt, env: Dict[str, int]):
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            return                       # nested scopes analyzed separately
+        if isinstance(s, ast.Assign):
+            self._scan_expr(s.value, env)
+            creates = self._is_rng_creation(s.value)
+            for t in s.targets:
+                self._bind_target(t, creates, env)
+        elif isinstance(s, (ast.AugAssign, ast.AnnAssign)):
+            self._scan_expr(getattr(s, "value", None), env)
+            if isinstance(s, ast.AnnAssign) and s.value is not None:
+                self._bind_target(s.target,
+                                  self._is_rng_creation(s.value), env)
+        elif isinstance(s, ast.If):
+            self._scan_expr(s.test, env)
+            b1, b2 = dict(env), dict(env)
+            self.scan_stmts(s.body, b1)
+            self.scan_stmts(s.orelse, b2)
+            env.clear()
+            self._merge_max(env, b1, b2)
+        elif isinstance(s, (ast.For, ast.AsyncFor)):
+            self._scan_expr(s.iter, env)
+            self._bind_target(s.target, False, env)
+            # two symbolic iterations: a key bound OUTSIDE the loop and
+            # consumed once per iteration without rebinding crosses 2.
+            self.scan_stmts(s.body, env)
+            self.scan_stmts(s.body, env)
+            self.scan_stmts(s.orelse, env)
+        elif isinstance(s, ast.While):
+            self._scan_expr(s.test, env)
+            self.scan_stmts(s.body, env)
+            self.scan_stmts(s.body, env)
+            self.scan_stmts(s.orelse, env)
+        elif isinstance(s, (ast.Try, getattr(ast, "TryStar", ast.Try))):
+            body_env = dict(env)
+            self.scan_stmts(s.body, body_env)
+            self.scan_stmts(s.orelse, body_env)
+            handler_envs = []
+            for h in s.handlers:
+                he = dict(env)
+                self.scan_stmts(h.body, he)
+                handler_envs.append(he)
+            env.clear()
+            self._merge_max(env, body_env, *handler_envs)
+            self.scan_stmts(s.finalbody, env)
+        elif isinstance(s, (ast.With, ast.AsyncWith)):
+            for item in s.items:
+                self._scan_expr(item.context_expr, env)
+            self.scan_stmts(s.body, env)
+        elif isinstance(s, ast.Delete):
+            for t in s.targets:
+                self._bind_target(t, False, env)
+        else:
+            for child in ast.iter_child_nodes(s):
+                if isinstance(child, ast.expr):
+                    self._scan_expr(child, env)
+
+
+def rng001(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    scopes: List[Tuple[List[ast.stmt], Dict[str, Tuple[int, bool]]]] = []
+    scopes.append((sf.tree.body, {}))
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            env: Dict[str, Tuple[int, bool]] = {}
+            a = node.args
+            for p in (a.posonlyargs + a.args + a.kwonlyargs):
+                if _KEY_PARAM_RE.match(p.arg):
+                    env[p.arg] = (0, False)
+            scopes.append((node.body, env))
+    for body, env in scopes:
+        _RngScope(sf, findings).scan_stmts(body, env)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# JIT001 — host-sync constructs in traced functions
+# ---------------------------------------------------------------------------
+
+def _walk_own_body(fn_node: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body, excluding nested function/class defs (they are
+    their own call-graph nodes)."""
+    stack = list(ast.iter_child_nodes(fn_node))
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _static_argnames(fn_node: ast.AST) -> Set[str]:
+    """Names declared static in a jit decorator on this def — ``float(x)``
+    on a static arg is host work on a Python scalar, not a traced sync."""
+    out: Set[str] = set()
+    for dec in getattr(fn_node, "decorator_list", []):
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                if isinstance(kw.value, (ast.Tuple, ast.List)):
+                    for el in kw.value.elts:
+                        if isinstance(el, ast.Constant) \
+                                and isinstance(el.value, str):
+                            out.add(el.value)
+                elif isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, str):
+                    out.add(kw.value.value)
+    return out
+
+
+_HOST_SYNC_METHODS = {"item", "tolist"}
+_HOST_CAST_BUILTINS = {"float", "int", "bool"}
+
+
+def jit001(sf: SourceFile, graph: ModuleGraph) -> List[Finding]:
+    findings: List[Finding] = []
+    for info in graph.traced_functions():
+        statics = _static_argnames(info.node)
+        for node in _walk_own_body(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in _HOST_SYNC_METHODS:
+                findings.append(Finding(
+                    "JIT001", sf.path, node.lineno,
+                    f".{f.attr}() in {info.qualname!r}, which is reachable "
+                    f"from a jit/trace site — device->host sync"))
+                continue
+            d = _dotted(f)
+            if d is not None and d.split(".")[0] in sf.numpy_aliases:
+                findings.append(Finding(
+                    "JIT001", sf.path, node.lineno,
+                    f"{d}(...) in traced function {info.qualname!r} — "
+                    f"numpy runs on the host (trace-time work or a forced "
+                    f"transfer)"))
+                continue
+            if isinstance(f, ast.Name) and f.id == "print":
+                findings.append(Finding(
+                    "JIT001", sf.path, node.lineno,
+                    f"print() in traced function {info.qualname!r} — "
+                    f"executes at trace time only (use jax.debug.print)"))
+                continue
+            if isinstance(f, ast.Name) and f.id in _HOST_CAST_BUILTINS \
+                    and node.args:
+                a = node.args[0]
+                if isinstance(a, ast.Constant):
+                    continue
+                if isinstance(a, ast.Name) and a.id in statics:
+                    continue
+                findings.append(Finding(
+                    "JIT001", sf.path, node.lineno,
+                    f"{f.id}(...) on a non-static value in traced function "
+                    f"{info.qualname!r} — forces concretization "
+                    f"(device->host sync under jit)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# PAL001 — hardcoded interpret= in Pallas entry points
+# ---------------------------------------------------------------------------
+
+def pal001(sf: SourceFile) -> List[Finding]:
+    if not sf.imports_pallas:
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = node.args
+            pos = a.posonlyargs + a.args
+            defaults = [None] * (len(pos) - len(a.defaults)) \
+                + list(a.defaults)
+            pairs = list(zip(pos, defaults)) \
+                + list(zip(a.kwonlyargs, a.kw_defaults))
+            for arg, default in pairs:
+                if arg.arg == "interpret" \
+                        and isinstance(default, ast.Constant) \
+                        and isinstance(default.value, bool):
+                    findings.append(Finding(
+                        "PAL001", sf.path, node.lineno,
+                        f"{node.name!r} defaults interpret="
+                        f"{default.value} — hardcoded literal instead of "
+                        f"backend-derived (default None, resolve via "
+                        f"jax.default_backend())"))
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d is None or d.rsplit(".", 1)[-1] != "pallas_call":
+                continue
+            for kw in node.keywords:
+                if kw.arg == "interpret" \
+                        and isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, bool):
+                    findings.append(Finding(
+                        "PAL001", sf.path, node.lineno,
+                        f"pallas_call(interpret={kw.value.value}) — "
+                        f"hardcoded literal instead of backend-derived"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SPEC001 — registry-validated spec strings
+# ---------------------------------------------------------------------------
+
+_SPEC_RE = re.compile(r"^[A-Za-z_]\w*:[A-Za-z_]\w*$")
+_POLICY_SEG_RE = re.compile(r"^[A-Za-z_]\w*(\(.*\))?$")
+_POLICY_NAME_RE = re.compile(r"^[A-Za-z_]\w*")
+
+
+def spec001(sf: SourceFile, bridge: Bridge) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Constant) \
+                or not isinstance(node.value, str) \
+                or id(node) in sf.docstrings:
+            continue
+        s = node.value
+        if not s or len(s) > 80:
+            continue
+        if _SPEC_RE.match(s):
+            sched, codec = s.split(":", 1)
+            # Only strings ANCHORED to a registry are spec candidates: a
+            # registered schedule on the left, or a registered codec on the
+            # right ("file:line"-shaped strings never anchor). Anchored but
+            # unresolvable = a rename/typo orphaned it.
+            if sched in bridge.schedules or sched in bridge.backends \
+                    or codec in bridge.codecs:
+                msg = bridge.validate_backend_spec(s)
+                if msg:
+                    findings.append(Finding(
+                        "SPEC001", sf.path, node.lineno,
+                        f"spec string {s!r} does not resolve: {msg}"))
+        else:
+            parts = [p.strip() for p in s.split("|")]
+            looks_grammar = ("|" in s and all(
+                p and _POLICY_SEG_RE.match(p) for p in parts)) \
+                or (len(parts) == 1 and "(" in s
+                    and _POLICY_SEG_RE.match(parts[0]) is not None)
+            if not looks_grammar:
+                continue
+            names = {m.group(0) for m in
+                     (_POLICY_NAME_RE.match(p) for p in parts if p) if m}
+            if not (names & bridge.policies):
+                continue
+            msg = bridge.validate_policy_spec(s)
+            if msg:
+                findings.append(Finding(
+                    "SPEC001", sf.path, node.lineno,
+                    f"policy spec {s!r} does not parse against the live "
+                    f"registry: {msg}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# DT001 — narrowing casts outside codec/checkpoint modules
+# ---------------------------------------------------------------------------
+
+_NARROW_DTYPES = {"bfloat16", "float16", "int8", "int4", "uint8",
+                  "float8_e4m3fn", "float8_e5m2"}
+
+
+def _dt001_exempt(path: str) -> bool:
+    norm = path.replace(os.sep, "/")
+    return norm.endswith("/codecs.py") or "/checkpoint/" in norm
+
+
+def dt001(sf: SourceFile) -> List[Finding]:
+    if _dt001_exempt(sf.path):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call) \
+                or not isinstance(node.func, ast.Attribute) \
+                or node.func.attr != "astype":
+            continue
+        targets = list(node.args[:1]) + [kw.value for kw in node.keywords
+                                         if kw.arg == "dtype"]
+        for t in targets:
+            name = None
+            if isinstance(t, ast.Attribute):
+                name = t.attr
+            elif isinstance(t, ast.Constant) and isinstance(t.value, str):
+                name = t.value
+            if name in _NARROW_DTYPES:
+                findings.append(Finding(
+                    "DT001", sf.path, node.lineno,
+                    f".astype({name}) — narrowing cast outside the codec/"
+                    f"checkpoint layers loses precision silently"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# THR001 — unsynchronized cross-thread attribute traffic
+# ---------------------------------------------------------------------------
+
+_SYNC_PRIMITIVES = {"Lock", "RLock", "Condition", "Event", "Semaphore",
+                    "BoundedSemaphore", "Barrier"}
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def thr001(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    for cls in (n for n in ast.walk(sf.tree) if isinstance(n, ast.ClassDef)):
+        methods: Dict[str, ast.AST] = {
+            m.name: m for m in cls.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        thread_targets: Set[str] = set()
+        has_sync = False
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            last = d.rsplit(".", 1)[-1] if d else ""
+            if last == "Thread":
+                for kw in node.keywords:
+                    if kw.arg == "target":
+                        attr = _self_attr(kw.value)
+                        if attr and attr in methods:
+                            thread_targets.add(attr)
+            elif last in _SYNC_PRIMITIVES:
+                has_sync = True
+        if not thread_targets or has_sync:
+            continue
+        # transitive closure of worker-side methods via self.m() calls
+        worker = set(thread_targets)
+        frontier = list(thread_targets)
+        while frontier:
+            m = frontier.pop()
+            for node in ast.walk(methods[m]):
+                if isinstance(node, ast.Call):
+                    attr = _self_attr(node.func)
+                    if attr in methods and attr not in worker:
+                        worker.add(attr)
+                        frontier.append(attr)
+        writes: Dict[str, int] = {}
+        for m in worker:
+            for node in ast.walk(methods[m]):
+                tgts = []
+                if isinstance(node, ast.Assign):
+                    tgts = node.targets
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    tgts = [node.target]
+                for t in tgts:
+                    elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                        else [t]
+                    for el in elts:
+                        attr = _self_attr(el)
+                        if attr:
+                            writes.setdefault(attr, node.lineno)
+        if not writes:
+            continue
+        readers: Dict[str, Set[str]] = {}
+        for name, m in methods.items():
+            if name in worker:
+                continue
+            for node in ast.walk(m):
+                attr = _self_attr(node)
+                if attr in writes and isinstance(node.ctx, ast.Load):
+                    readers.setdefault(attr, set()).add(name)
+        for attr, who in sorted(readers.items()):
+            findings.append(Finding(
+                "THR001", sf.path, writes[attr],
+                f"self.{attr} is written from thread target(s) "
+                f"{sorted(thread_targets)} and read from "
+                f"{sorted(who)} with no Lock/Event in class "
+                f"{cls.name!r}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def lint_source(sf: SourceFile, bridge: Optional[Bridge],
+                rules: Optional[Set[str]] = None) -> List[Finding]:
+    from tools.reprolint import pragmas
+    graph = ModuleGraph(sf.tree)
+    findings: List[Finding] = []
+    table = {
+        "RNG001": lambda: rng001(sf),
+        "JIT001": lambda: jit001(sf, graph),
+        "PAL001": lambda: pal001(sf),
+        "SPEC001": (lambda: spec001(sf, bridge)) if bridge else lambda: [],
+        "DT001": lambda: dt001(sf),
+        "THR001": lambda: thr001(sf),
+    }
+    for rule, fn in table.items():
+        if rules is None or rule in rules:
+            findings.extend(fn())
+    if rules is None or "PRAGMA001" in rules:
+        findings.extend(sf.pragma_findings)
+    return pragmas.apply(findings, sf.allowed)

@@ -1,0 +1,102 @@
+"""File discovery + parsed-source container.
+
+A ``SourceFile`` bundles everything a rule needs: path, text, AST, the
+per-line pragma table, and small shared lookups (import aliases, docstring
+node ids) so each rule does not re-derive them.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterator, List, Optional, Set
+
+from tools.reprolint import pragmas
+from tools.reprolint.report import Finding
+
+SKIP_DIRS = {".git", "__pycache__", ".github", "results", "node_modules",
+             ".claude"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> "a.b.c" for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str
+    text: str
+    tree: ast.Module
+    allowed: Dict[int, Set[str]]            # line -> suppressed rule ids
+    pragma_findings: List[Finding]
+
+    def __post_init__(self):
+        self.numpy_aliases: Set[str] = set()
+        self.imports_pallas = False
+        self._collect_imports()
+        self.docstrings: Set[int] = set()   # id()s of docstring Constant nodes
+        self._collect_docstrings()
+
+    def _collect_imports(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "numpy":
+                        self.numpy_aliases.add(a.asname or "numpy")
+                    if a.name.startswith("jax.experimental.pallas"):
+                        self.imports_pallas = True
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod == "jax.experimental" and any(
+                        a.name == "pallas" for a in node.names):
+                    self.imports_pallas = True
+                if mod.startswith("jax.experimental.pallas"):
+                    self.imports_pallas = True
+
+    def _collect_docstrings(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                body = node.body
+                if body and isinstance(body[0], ast.Expr) \
+                        and isinstance(body[0].value, ast.Constant) \
+                        and isinstance(body[0].value.value, str):
+                    self.docstrings.add(id(body[0].value))
+
+
+def load_source(path: str, text: Optional[str] = None
+                ) -> Optional[SourceFile]:
+    """Parse one file into a ``SourceFile``; None on read failure (a parse
+    failure still returns, carrying the syntax error as a finding via
+    ``tree=None`` is NOT done — unparsable files are reported by lint())."""
+    if text is None:
+        try:
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+        except OSError:
+            return None
+    tree = ast.parse(text, filename=path)
+    allowed, pfinds = pragmas.collect(text, path)
+    return SourceFile(path=path, text=text, tree=tree, allowed=allowed,
+                      pragma_findings=pfinds)
+
+
+def iter_python_files(paths: List[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d not in SKIP_DIRS)
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)

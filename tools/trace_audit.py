@@ -1,0 +1,191 @@
+"""Jit trace/transfer audit over the live backend registry.
+
+For every registered ``schedule:codec`` spec (``core.backends.
+available_specs()``), masked and unmasked, this tool jits one aggregation
+round and runs it twice under ``jax.transfer_guard("disallow")``:
+
+* any implicit device<->host transfer raises (explicit ``jax.device_put``
+  staging is still allowed) — catching the ``np.*``-in-hot-path family of
+  bugs that JIT001 finds statically, but end to end;
+* the second call must hit the jit cache — a retrace means some argument
+  or closure leaks a trace-unstable Python value (shape-dependent branch,
+  fresh lambda, unhashable static) and the "steady-state" round is paying
+  compile time every call.
+
+Results persist to ``results/AUDIT_trace.json``. Specs that cannot run in
+this process's device context (mesh schedules without enough devices,
+``hierarchical`` without pods) are recorded as skipped with the reason —
+never silently dropped. Exit is non-zero on any failure.
+
+    PYTHONPATH=src python tools/trace_audit.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+if os.path.dirname(_HERE) not in sys.path:   # direct `python tools/...` run
+    sys.path.insert(0, os.path.dirname(_HERE))
+
+from tools.reprolint.registry import REPO_ROOT, ensure_src_on_path
+
+ensure_src_on_path()
+
+import jax                                     # noqa: E402
+import jax.numpy as jnp                        # noqa: E402
+import numpy as np                             # noqa: E402
+from jax.sharding import Mesh, NamedSharding   # noqa: E402
+from jax.sharding import PartitionSpec as P    # noqa: E402
+
+from repro.core import aggregate as agg        # noqa: E402
+from repro.core import backends as B           # noqa: E402
+
+W = 4          # worker dimension: divisible by n_pods=2 and by 1/2/4 shards
+BETA = 0.7
+
+
+def _build_fixture(d: int):
+    key = jax.random.key(0)
+    params = {
+        "blk": {"w": jax.random.normal(key, (W, d), jnp.float32)},
+        "head": jax.random.normal(jax.random.fold_in(key, 1), (W, 33)),
+        "shared": jnp.ones((3, 2), jnp.float32),
+    }
+    axes = {"blk": {"w": ("worker", None)},
+            "head": ("worker", None),
+            "shared": ("shared", None)}
+    theta = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(key, 2), (W,)))
+    active = jnp.array([1, 1, 0, 1], jnp.bool_)
+    return params, axes, theta, active
+
+
+def _build_mesh():
+    devs = jax.devices()
+    n = max(k for k in (1, 2, 4) if k <= len(devs))
+    return Mesh(np.array(devs[:n]), ("data",))
+
+
+def _audit_one(spec: str, masked: bool, params, axes, theta, active, mesh):
+    sched_name, _ = B.resolve_spec(spec)
+    sched = B._SCHEDULES[sched_name]
+    n_pods = 2 if sched_name == "hierarchical" else 1
+    if masked and not getattr(sched, "supports_mask", True):
+        return {"spec": spec, "masked": masked, "status": "skipped",
+                "reason": f"schedule {sched_name!r} has no masked path"}
+    if not B._spec_runnable(sched_name, mesh, n_pods, W,
+                            require_mask=masked):
+        return {"spec": spec, "masked": masked, "status": "skipped",
+                "reason": f"not runnable here (devices={mesh.size}, "
+                          f"n_pods={n_pods}, w={W})"}
+
+    backend = B.get_backend(spec)
+    ctx0 = B.AggregationContext(
+        mesh=mesh if sched.needs_mesh else None, n_pods=n_pods)
+    traces = {"n": 0}
+
+    if masked:
+        def call(p, t, a):
+            traces["n"] += 1       # python body runs per TRACE, not per call
+            c = dataclasses.replace(ctx0, active=a)
+            return backend.aggregate(p, axes, t, BETA, ctx=c)
+        args = (params, theta, active)
+    else:
+        def call(p, t):
+            traces["n"] += 1
+            return backend.aggregate(p, axes, t, BETA, ctx=ctx0)
+        args = (params, theta)
+
+    fn = jax.jit(call)
+    # Explicit staging (the guard allows jax.device_put). Mesh schedules
+    # get worker leaves pre-sharded along the mesh axis — the trainer's
+    # steady state — so the jitted round contains no implicit reshard.
+    if sched.needs_mesh:
+        shard = NamedSharding(mesh, P("data"))
+        rep = NamedSharding(mesh, P())
+        leaves_ax, treedef = jax.tree_util.tree_flatten(
+            axes, is_leaf=agg._axes_is_leaf)
+        placed = [
+            jax.device_put(x, shard if agg.is_worker_leaf(ax) else rep)
+            for ax, x in zip(leaves_ax, treedef.flatten_up_to(params))]
+        args = (jax.tree_util.tree_unflatten(treedef, placed),) \
+            + tuple(jax.device_put(a, rep) for a in args[1:])
+    else:
+        args = jax.device_put(args)
+    entry = {"spec": spec, "masked": masked}
+    try:
+        with jax.transfer_guard("disallow"):
+            out1 = jax.block_until_ready(fn(*args))
+            after_first = traces["n"]
+            out2 = jax.block_until_ready(fn(*args))
+            retraces = traces["n"] - after_first
+    except Exception as e:  # noqa: BLE001 - any guard/trace failure is a find
+        entry.update(status="failed",
+                     error=f"{type(e).__name__}: {e}")
+        return entry
+    drift = max(float(jnp.abs(a - b).max()) for a, b in
+                zip(jax.tree.leaves(out1), jax.tree.leaves(out2)))
+    entry.update(status="ok" if retraces == 0 else "failed",
+                 traces_first_call=after_first, retraces=retraces,
+                 call_drift=drift)
+    if retraces:
+        entry["error"] = (f"{retraces} retrace(s) on an identical second "
+                          f"call — the round recompiles every step")
+    return entry
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="small leaves (CI); same spec coverage")
+    ap.add_argument("--out", default=os.path.join(
+        REPO_ROOT, "results", "AUDIT_trace.json"))
+    args = ap.parse_args(argv)
+
+    d = 1024 if args.fast else 16384
+    params, axes, theta, active = _build_fixture(d)
+    mesh = _build_mesh()
+
+    results = []
+    for spec in B.available_specs():
+        for masked in (False, True):
+            entry = _audit_one(spec, masked, params, axes, theta, active,
+                               mesh)
+            results.append(entry)
+            tag = entry["status"].upper()
+            extra = entry.get("error") or entry.get("reason") or \
+                f"retraces={entry.get('retraces')}"
+            print(f"[{tag:7s}] {spec:22s} masked={int(masked)}  {extra}")
+
+    failed = [r for r in results if r["status"] == "failed"]
+    skipped = [r for r in results if r["status"] == "skipped"]
+    report = {
+        "generated_by": "tools/trace_audit.py",
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "fast": args.fast,
+        "devices": len(jax.devices()),
+        "mesh_devices": mesh.size,
+        "backend": jax.default_backend(),
+        "w": W,
+        "leaf_d": d,
+        "n_specs": len(B.available_specs()),
+        "n_ok": sum(r["status"] == "ok" for r in results),
+        "n_skipped": len(skipped),
+        "n_failed": len(failed),
+        "results": results,
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\n{report['n_ok']} ok, {len(skipped)} skipped, "
+          f"{len(failed)} failed -> {args.out}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
