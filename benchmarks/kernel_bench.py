@@ -24,8 +24,9 @@ RESULTS_DIR = os.path.join(
 
 
 def _time(fn, *args, n=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # warmup: one call, fenced over the WHOLE output pytree (the old
+    # tuple-special-case evaluated fn twice and fenced only element 0)
+    jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(n):
         out = fn(*args)
@@ -235,6 +236,9 @@ def run_async(fast: bool = False, out_path: str = None):
             fn()
         t0 = time.time()
         out = fn()
+        # fence the final worker-stacked params before stopping the clock —
+        # the drivers return with device work still in flight
+        jax.block_until_ready(out.params)
         us = (time.time() - t0) / rounds * 1e6
         records.append({"mode": mode, "us_per_round": round(us, 1),
                         "includes_compile": includes_compile,
@@ -335,6 +339,9 @@ def run_policies(fast: bool = False, out_path: str = None):
     def one(policy, mode, fn, includes_compile):
         t0 = time.time()
         out = fn()
+        # fence the final worker-stacked params before stopping the clock —
+        # the drivers return with device work still in flight
+        jax.block_until_ready(out.params)
         us = (time.time() - t0) / rounds * 1e6
         records.append({"policy": policy, "async_strategy": mode,
                         "us_per_round": round(us, 1),
@@ -459,12 +466,14 @@ def run_pipeline(fast: bool = False, out_path: str = None):
                                                       next_first, carry)
                     return state, metrics
 
-            out_state, metrics = drive(state)          # warmup + compile
-            jax.block_until_ready(out_state.params)
+            # fence the WHOLE step output (state incl. opt/comm leaves and
+            # metrics), not just params — the per-round metrics of the last
+            # round are still in flight when params resolve
+            jax.block_until_ready(drive(state))        # warmup + compile
             t0 = time.time()
-            out_state, metrics = drive(state)
-            jax.block_until_ready(out_state.params)
+            out = jax.block_until_ready(drive(state))
             us = (time.time() - t0) / rounds * 1e6
+            out_state, metrics = out
             label = mode or "off"
             records.append({
                 "spec": spec, "pipeline": label,
@@ -535,8 +544,11 @@ def run_elastic(fast: bool = False, out_path: str = None):
             def shrink(s=state, a=axes, p=p):
                 return resize_train_state(s, a, max(1, p - 2))
 
-            us_grow = _time(lambda: grow().params["w_in"], n=5)
-            us_shrink = _time(lambda: shrink().params["w_in"], n=5)
+            # time the FULL resized TrainState (params + opt + comm leaves)
+            # — fencing a single leaf stopped the clock with most of the
+            # resize still in flight
+            us_grow = _time(grow, n=5)
+            us_shrink = _time(shrink, n=5)
 
             ck = os.path.join(tmp, f"p{p}")
             host = jax.tree.map(np.asarray, state)
@@ -545,7 +557,7 @@ def run_elastic(fast: bool = False, out_path: str = None):
             us_save = (time.time() - t0) * 1e6
             t0 = time.time()
             restored, _ = restore_sharded(ck, state)
-            jax.block_until_ready(restored.params)
+            jax.block_until_ready(restored)
             us_restore = (time.time() - t0) * 1e6
 
             ac = AsyncCheckpointer()

@@ -34,6 +34,7 @@ import json
 import os
 import queue
 import threading
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -304,9 +305,15 @@ class AsyncCheckpointer:
     at restore time.
     """
 
-    def __init__(self, depth: int = 2):
+    def __init__(self, depth: int = 2, telemetry=None):
+        """``telemetry`` (a ``repro.obs`` sink, optional) receives one
+        ``CheckpointSave`` event per completed save — duration measured on
+        the writer thread (gather + shard writes), i.e. the work that
+        rides the next rounds' device time. The attribute is only ever
+        written from caller threads; the worker reads it."""
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
         self._exc: Optional[BaseException] = None
+        self.telemetry = telemetry
         self._thread = threading.Thread(target=self._worker, daemon=True,
                                         name="ckpt-writer")
         self._thread.start()
@@ -318,9 +325,18 @@ class AsyncCheckpointer:
                 if job is None:
                     return
                 path, snap, meta, topology, n_shards = job
+                t0 = time.perf_counter()
                 host = jax.tree.map(np.asarray, snap)
                 save_sharded(path, host, meta=meta, topology=topology,
                              n_shards=n_shards)
+                tele = self.telemetry
+                if tele is not None and getattr(tele, "enabled", False):
+                    from repro.obs.events import CheckpointSave
+                    tele.emit(CheckpointSave(
+                        path=path, round=int((meta or {}).get("round", -1)),
+                        duration_s=time.perf_counter() - t0,
+                        nbytes=sum(np.asarray(x).nbytes
+                                   for x in jax.tree.leaves(host))))
             except BaseException as e:     # surface on the trainer thread
                 # reprolint: allow=THR001 -- single-ref write is atomic under
                 # the GIL; held until _raise_pending re-raises on the caller

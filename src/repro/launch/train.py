@@ -72,6 +72,12 @@ def main():
                          "jax.transfer_guard at this level — catches "
                          "implicit device<->host transfers inside the "
                          "step (batches are staged explicitly first)")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="record structured telemetry to this JSONL file "
+                         "(repro.obs.JsonlSink): per-round RoundTrace "
+                         "phase breakdowns + WorkerAssessment, plus "
+                         "membership/checkpoint events; summarize with "
+                         "tools/obs_report.py")
     ap.add_argument("--pipeline", default=None,
                     choices=["parity", "speculative"],
                     help="software-pipeline the round (train/step.py): "
@@ -117,13 +123,23 @@ def main():
         print(f"chaos membership: {membership}")
     if args.checkpoint_every and not args.checkpoint_dir:
         raise SystemExit("--checkpoint-every requires --checkpoint-dir")
-    summary = trainer.run(ds, args.rounds,
-                          log_every=max(1, args.rounds // 5),
-                          checkpoint_every=args.checkpoint_every,
-                          checkpoint_path=args.checkpoint_dir,
-                          membership_schedule=membership,
-                          resume_from=args.resume,
-                          transfer_guard=args.transfer_guard)
+    sink = None
+    if args.telemetry:
+        from repro.obs import JsonlSink
+        sink = JsonlSink(args.telemetry)
+    try:
+        summary = trainer.run(ds, args.rounds,
+                              log_every=max(1, args.rounds // 5),
+                              checkpoint_every=args.checkpoint_every,
+                              checkpoint_path=args.checkpoint_dir,
+                              membership_schedule=membership,
+                              resume_from=args.resume,
+                              transfer_guard=args.transfer_guard,
+                              telemetry=sink)
+    finally:
+        if sink is not None:
+            sink.close()
+            print(f"telemetry: {sink.n_emitted} events -> {args.telemetry}")
     print(f"done: {summary}")
     if args.ckpt:
         save(args.ckpt, trainer.state.params,

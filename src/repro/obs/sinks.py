@@ -1,0 +1,136 @@
+"""Telemetry sinks.
+
+The contract is three members — ``enabled``, ``emit(event)``,
+``close()`` — and the load-bearing one is ``enabled``: every
+instrumentation site in the repo gates ALL telemetry work (fences,
+host readbacks, timestamps) on it, so with the default ``NullSink``
+the hot path is byte-for-byte the uninstrumented program (asserted in
+``tests/test_obs.py`` under ``jax.transfer_guard("disallow")``).
+
+``emit`` must be thread-safe: the Trainer's round loop, the async
+checkpoint writer, and a serving engine may all emit into one sink.
+``RingSink`` leans on the GIL-atomic ``deque.append``; ``JsonlSink``
+serializes on the caller's thread and hands the finished line to a
+single-worker ``concurrent.futures`` executor, so file writes are
+ordered and the emitting thread never blocks on disk. Writer-thread
+failures are latched under a lock and re-raised on the next ``emit``
+or ``close`` — a run whose telemetry silently vanished is worse than
+one that failed loud.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Iterator, List, Protocol, runtime_checkable
+
+from repro.obs.events import event_from_record, to_record
+
+
+@runtime_checkable
+class Telemetry(Protocol):
+    """Structural protocol every sink satisfies (duck-typed; the Trainer
+    only ever touches these three members)."""
+    enabled: bool
+
+    def emit(self, event) -> None: ...
+
+    def close(self) -> None: ...
+
+
+class NullSink:
+    """The default: telemetry off. ``enabled = False`` short-circuits
+    every instrumentation site, so no fences, no host readbacks, no
+    event construction — the hot path is identical to a telemetry-absent
+    build."""
+    enabled = False
+
+    def emit(self, event) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+NULL = NullSink()
+
+
+class RingSink:
+    """In-memory ring of the last ``maxlen`` events — the test/debug
+    sink. ``events()`` snapshots, ``by_kind`` filters."""
+    enabled = True
+
+    def __init__(self, maxlen: int = 4096):
+        self._ring: "collections.deque" = collections.deque(maxlen=maxlen)
+
+    def emit(self, event) -> None:
+        self._ring.append(event)       # deque.append is atomic under the GIL
+
+    def events(self) -> List:
+        return list(self._ring)
+
+    def by_kind(self, kind: str) -> List:
+        return [e for e in self._ring if e.kind == kind]
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """Background-writer JSONL sink: one event per line (``to_record``
+    payloads). Serialization happens on the emitting thread (events may
+    hold references the caller mutates later — e.g. the engine's
+    request lists); only the finished line crosses to the writer."""
+    enabled = True
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "a")
+        self._lock = threading.Lock()
+        self._exc = None
+        self._n_emitted = 0
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="obs-jsonl")
+
+    def emit(self, event) -> None:
+        line = json.dumps(to_record(event))
+        self._raise_pending()
+        with self._lock:
+            self._n_emitted += 1
+        self._pool.submit(self._write, line)
+
+    def _write(self, line: str) -> None:
+        try:
+            self._f.write(line + "\n")
+            self._f.flush()
+        except BaseException as e:     # latch; surface on the emitter
+            with self._lock:
+                self._exc = e
+
+    def _raise_pending(self) -> None:
+        with self._lock:
+            exc, self._exc = self._exc, None
+        if exc is not None:
+            raise RuntimeError(
+                f"telemetry writer failed for {self.path}") from exc
+
+    @property
+    def n_emitted(self) -> int:
+        with self._lock:
+            return self._n_emitted
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+        self._f.close()
+        self._raise_pending()
+
+
+def read_events(path: str) -> Iterator:
+    """Iterate the typed events of a JSONL run (inverse of
+    ``JsonlSink``; blank lines tolerated)."""
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                yield event_from_record(json.loads(line))

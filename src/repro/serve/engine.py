@@ -33,6 +33,7 @@ staleness metrics.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -41,6 +42,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, decode_step_paged, init_cache, prefill
+from repro.obs import NULL, HotSwap, ServeSample
 from repro.serve.paged_cache import PagedCache
 from repro.serve.scheduler import Request, Scheduler
 
@@ -142,7 +144,12 @@ class ContinuousEngine:
                  max_len: int = 2048, block_size: int = 16,
                  cache_dtype=jnp.bfloat16, chunk: int = 32,
                  full_blocks: Optional[int] = None, seed: int = 0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, telemetry=None):
+        """``telemetry`` (a ``repro.obs`` sink; default ``NullSink`` = off)
+        receives one ``ServeSample`` per ``step()``: fenced chunk wall
+        time, inter-token latency, TTFT for requests admitted that step,
+        block-pool occupancy, queue depth, admission/eviction counts.
+        With the default sink the engine adds no fences or host reads."""
         for i in range(cfg.n_layers):
             if cfg.layer_is_cross_attn(i):
                 raise NotImplementedError(
@@ -165,6 +172,7 @@ class ContinuousEngine:
         self.tokens_generated = 0
         self.n_swaps = 0
         self.eos_id = eos_id
+        self.telemetry = telemetry if telemetry is not None else NULL
         self._key = jax.random.key(seed)
 
         n = n_slots
@@ -298,13 +306,15 @@ class ContinuousEngine:
 
     # -- drive --------------------------------------------------------------
 
-    def _admit_all(self) -> None:
+    def _admit_all(self) -> List[Request]:
         """Admit every waiting request that fits (FIFO, stop at the first
         that doesn't). Admissions sharing a prompt length share one batched
         prefill into a bucketed scratch cache; each request's prefill KV is
         then scattered into its reserved blocks and its first token folded
         into the batch state — it rides ``out_buf[slot, 0]`` and is
-        collected with the next chunk, so admission never syncs the host."""
+        collected with the next chunk, so admission never syncs the host
+        (a telemetry sink adds one fence per prefill group, to stamp
+        first-token readiness for TTFT). Returns the admitted requests."""
         admitted: List[Request] = []
         while True:
             req = self.scheduler.next_admit()
@@ -332,6 +342,14 @@ class ContinuousEngine:
                 self._st = self._admit_state(
                     self._st, logits[i, -1], self._key, r.slot, r.seed,
                     n_prompt, r.n_new, jnp.float32(r.temperature))
+            if self.telemetry.enabled:
+                # first token sampled for every request of this group —
+                # fence once, stamp TTFT readiness for the whole group.
+                jax.block_until_ready(self._st["out_buf"])
+                now = time.perf_counter()
+                for r in group:
+                    r.t_first = now
+        return admitted
 
     def _collect(self) -> List[Request]:
         st = self._st
@@ -354,7 +372,9 @@ class ContinuousEngine:
         """One scheduling round: admit waiting requests into free slots,
         run one jitted decode chunk, collect tokens and recycle finished
         slots. Returns the requests that finished this round."""
-        self._admit_all()
+        tele = self.telemetry
+        obs_on = tele.enabled
+        admitted = self._admit_all()
         if not self.scheduler.running:
             return []
         stop_early = jnp.asarray(bool(self.scheduler.queue))
@@ -366,12 +386,35 @@ class ContinuousEngine:
         w = self.cache.used_width()
         if full is not None and w is not None and w < full.shape[1]:
             tables = {**tables, "full": full[:, :w]}
-        pools, st, _ = self._chunk(self.params, self.cache.pools,
+        t0 = time.perf_counter() if obs_on else 0.0
+        pools, st, t = self._chunk(self.params, self.cache.pools,
                                    tables, self._st, stop_early,
                                    max_steps=self.chunk)
         self.cache.pools = pools
         self._st = st
-        return self._collect()
+        if obs_on:
+            jax.block_until_ready(st["out_pos"])
+            chunk_s = time.perf_counter() - t0
+            steps = int(t)               # host read: telemetry only
+        tokens_before = self.tokens_generated
+        finished = self._collect()
+        if obs_on:
+            now = time.perf_counter()
+            tokens = self.tokens_generated - tokens_before
+            free = self.cache.free_blocks()
+            total = self.cache._group_phys.get("full", 0)
+            tele.emit(ServeSample(
+                chunk_s=chunk_s, steps=steps, tokens=tokens,
+                itl_s=chunk_s / max(steps, 1),
+                n_running=self.n_running,
+                queue_depth=len(self.scheduler.queue),
+                admitted=len(admitted), finished=len(finished),
+                blocks_free=free, blocks_total=total,
+                occupancy=(1.0 - free / total) if total else 0.0,
+                ttft_s=[r.t_first - r.t_submit for r in admitted
+                        if r.t_first is not None],
+                e2e_s=[now - r.t_submit for r in finished]))
+        return finished
 
     def run(self) -> Dict[int, np.ndarray]:
         """Drain queue + running batch; returns {rid: generated tokens}."""
@@ -399,8 +442,14 @@ class HotSwapBridge:
     last saw fresh params, how many tokens were served under the stale
     copy, the L2 drift the swap closed, and the in-flight request count."""
 
-    def __init__(self, engine):
+    def __init__(self, engine, telemetry=None):
+        """``telemetry`` defaults to the engine's own sink, so a bridge
+        over an instrumented engine emits ``HotSwap`` events without
+        extra wiring; pass an explicit sink (or ``repro.obs.NULL``) to
+        override."""
         self.engine = engine
+        self.telemetry = (telemetry if telemetry is not None
+                          else getattr(engine, "telemetry", NULL))
         self.swaps: List[Dict] = []
         self._last_round: Optional[int] = None
         self._tokens_at_swap = engine.tokens_generated
@@ -429,4 +478,6 @@ class HotSwapBridge:
         self._last_round = int(round_idx)
         self._tokens_at_swap = self.engine.tokens_generated
         self.swaps.append(rec)
+        if self.telemetry.enabled:
+            self.telemetry.emit(HotSwap(**rec))
         return rec

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
+from time import perf_counter
 from typing import Deque, Dict, List, Optional
 
 import numpy as np
@@ -25,6 +26,11 @@ class Request:
     seed: int = 0
     tokens: List[int] = field(default_factory=list)   # generated so far
     slot: Optional[int] = None
+    # host wall-clock marks (perf_counter domain) for latency telemetry:
+    # submission, and first-token readiness (set by the engine at the end
+    # of the request's prefill when a telemetry sink is attached).
+    t_submit: float = field(default_factory=perf_counter)
+    t_first: Optional[float] = None
 
     @property
     def total_budget(self) -> int:

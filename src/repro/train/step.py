@@ -13,7 +13,8 @@ scanned over tau.
 """
 from __future__ import annotations
 
-import functools
+import time
+import types
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -202,6 +203,104 @@ def no_comm_rule():
 PIPELINE_MODES = ("parity", "speculative")
 
 
+def _round_parts(loss_fn: LossFn, optimizer: Optimizer, axes: Dict,
+                 wcfg: WASGDConfig, n_workers: int) -> types.SimpleNamespace:
+    """The round's shared building blocks — batch reshape, the tau-step
+    local scan, per-worker losses/L2, and the state/metrics assembly —
+    used by ``build_train_step``'s fused round, its pipelined variant,
+    AND the phase-fenced instrumented round
+    (``build_phased_train_step``). Parity between all three is
+    structural: they run the same closures, not maintained-by-hand
+    copies."""
+    in_axes_params = agg.worker_in_axes(axes)
+    tau = wcfg.tau
+    mask = record_mask(tau, wcfg.m_estimate, wcfg.record_chunks)
+
+    def per_worker_losses(params, mb):
+        def one(p, b):
+            loss, _ = loss_fn(p, b)
+            return loss
+        return jax.vmap(one, in_axes=(in_axes_params, 0))(params, mb)
+
+    def scan_loss(params, mb):
+        losses = per_worker_losses(params, mb)
+        return losses.mean(), losses
+
+    grad_fn = jax.value_and_grad(scan_loss, has_aux=True)
+
+    def rescale(grads):
+        # mean over workers -> per-worker gradient for worker leaves;
+        # expert (shared) leaves keep the mean = synchronous DP average.
+        return agg.map_worker_leaves(lambda g: g * n_workers, grads, axes)
+
+    def reshape_batch(batch):
+        def r(x):
+            b = x.shape[0]
+            assert b % (tau * n_workers) == 0, (
+                f"batch {b} not divisible by tau*p = {tau}*{n_workers}")
+            bl_ = b // (tau * n_workers)
+            x = x.reshape(n_workers, tau, bl_, *x.shape[1:])
+            return jnp.swapaxes(x, 0, 1)        # (tau, p, b_local, ...)
+        return jax.tree.map(r, batch)
+
+    def worker_l2(tree_a, tree_b=None):
+        """Per-worker L2 norm over the worker-stacked leaves: (w,)."""
+        total = jnp.zeros((n_workers,), jnp.float32)
+        leaves_ax, treedef = jax.tree_util.tree_flatten(
+            axes, is_leaf=agg._axes_is_leaf)
+        la = treedef.flatten_up_to(tree_a)
+        lb = treedef.flatten_up_to(tree_b) if tree_b is not None else la
+        for xa, xb, ax in zip(la, lb, leaves_ax):
+            if not agg.is_worker_leaf(ax):
+                continue
+            d = xa.astype(jnp.float32)
+            if tree_b is not None:
+                d = d - xb.astype(jnp.float32)
+            total = total + jnp.square(d).reshape(n_workers, -1).sum(axis=1)
+        return jnp.sqrt(total)
+
+    def run_scan(state, mb, collect_gnorm=False):
+        def inner(carry, inp):
+            params, opt_state, energy = carry
+            mb_t, mask_t = inp
+            (loss, losses), grads = grad_fn(params, mb_t)
+            grads = rescale(grads)
+            gnorm = worker_l2(grads) if collect_gnorm else jnp.zeros(())
+            params, opt_state = optimizer.update(grads, opt_state, params)
+            energy = energy + jnp.where(mask_t, losses, 0.0)
+            return (params, opt_state, energy), (loss, losses, gnorm)
+
+        return jax.lax.scan(inner, (state.params, state.opt_state,
+                                    state.energy), (mb, mask))
+
+    def assemble(state, params, opt_state, comm_state, round_losses, energy,
+                 theta, rule_metrics, extra=None):
+        new_state = TrainState(
+            step=state.step + 1,
+            params=params,
+            opt_state=opt_state,
+            energy=jnp.zeros_like(state.energy),
+            comm_state=comm_state,
+        )
+        metrics = {
+            "loss": round_losses.mean(),
+            "loss_last": round_losses[-1],
+            "h": energy,
+            "theta": theta,
+            "scores": judge_scores(energy),
+            "theta_entropy": theta_entropy(theta),
+            "omega": omega(theta),
+            **rule_metrics,
+            **(extra or {}),
+        }
+        return new_state, metrics
+
+    return types.SimpleNamespace(
+        mask=mask, per_worker_losses=per_worker_losses,
+        reshape_batch=reshape_batch, worker_l2=worker_l2, run_scan=run_scan,
+        assemble=assemble)
+
+
 def build_train_step(loss_fn: LossFn, optimizer: Optimizer, axes: Dict,
                      wcfg: WASGDConfig, n_workers: int,
                      rule: Optional[Callable] = None,
@@ -289,93 +388,18 @@ def build_train_step(loss_fn: LossFn, optimizer: Optimizer, axes: Dict,
         rule = (async_wasgd_rule(wcfg, mesh=mesh, overlap=overlap)
                 if wcfg.async_mode == "on_device"
                 else wasgd_rule(wcfg, mesh=mesh, overlap=overlap))
-    in_axes_params = agg.worker_in_axes(axes)
-    tau = wcfg.tau
-    mask = record_mask(tau, wcfg.m_estimate, wcfg.record_chunks)
     speculative = pipeline == "speculative"
 
-    def per_worker_losses(params, mb):
-        def one(p, b):
-            loss, _ = loss_fn(p, b)
-            return loss
-        return jax.vmap(one, in_axes=(in_axes_params, 0))(params, mb)
-
-    def scan_loss(params, mb):
-        losses = per_worker_losses(params, mb)
-        return losses.mean(), losses
-
-    grad_fn = jax.value_and_grad(scan_loss, has_aux=True)
-
-    def rescale(grads):
-        # mean over workers -> per-worker gradient for worker leaves;
-        # expert (shared) leaves keep the mean = synchronous DP average.
-        return agg.map_worker_leaves(lambda g: g * n_workers, grads, axes)
-
-    def reshape_batch(batch):
-        def r(x):
-            b = x.shape[0]
-            assert b % (tau * n_workers) == 0, (
-                f"batch {b} not divisible by tau*p = {tau}*{n_workers}")
-            bl_ = b // (tau * n_workers)
-            x = x.reshape(n_workers, tau, bl_, *x.shape[1:])
-            return jnp.swapaxes(x, 0, 1)        # (tau, p, b_local, ...)
-        return jax.tree.map(r, batch)
-
-    def worker_l2(tree_a, tree_b=None):
-        """Per-worker L2 norm over the worker-stacked leaves: (w,)."""
-        total = jnp.zeros((n_workers,), jnp.float32)
-        leaves_ax, treedef = jax.tree_util.tree_flatten(
-            axes, is_leaf=agg._axes_is_leaf)
-        la = treedef.flatten_up_to(tree_a)
-        lb = treedef.flatten_up_to(tree_b) if tree_b is not None else la
-        for xa, xb, ax in zip(la, lb, leaves_ax):
-            if not agg.is_worker_leaf(ax):
-                continue
-            d = xa.astype(jnp.float32)
-            if tree_b is not None:
-                d = d - xb.astype(jnp.float32)
-            total = total + jnp.square(d).reshape(n_workers, -1).sum(axis=1)
-        return jnp.sqrt(total)
-
-    # One scan body and one state/metrics assembly shared by the unpipelined
-    # and pipelined rounds — the parity guarantee is structural, not a
-    # maintained-by-hand mirror of two copies.
-
-    def run_scan(state, mb, collect_gnorm=False):
-        def inner(carry, inp):
-            params, opt_state, energy = carry
-            mb_t, mask_t = inp
-            (loss, losses), grads = grad_fn(params, mb_t)
-            grads = rescale(grads)
-            gnorm = worker_l2(grads) if collect_gnorm else jnp.zeros(())
-            params, opt_state = optimizer.update(grads, opt_state, params)
-            energy = energy + jnp.where(mask_t, losses, 0.0)
-            return (params, opt_state, energy), (loss, losses, gnorm)
-
-        return jax.lax.scan(inner, (state.params, state.opt_state,
-                                    state.energy), (mb, mask))
-
-    def assemble(state, params, opt_state, comm_state, round_losses, energy,
-                 theta, rule_metrics, extra=None):
-        new_state = TrainState(
-            step=state.step + 1,
-            params=params,
-            opt_state=opt_state,
-            energy=jnp.zeros_like(state.energy),
-            comm_state=comm_state,
-        )
-        metrics = {
-            "loss": round_losses.mean(),
-            "loss_last": round_losses[-1],
-            "h": energy,
-            "theta": theta,
-            "scores": judge_scores(energy),
-            "theta_entropy": theta_entropy(theta),
-            "omega": omega(theta),
-            **rule_metrics,
-            **(extra or {}),
-        }
-        return new_state, metrics
+    # One scan body and one state/metrics assembly shared by the unpipelined,
+    # pipelined, AND phase-fenced instrumented rounds — the parity guarantee
+    # is structural, not a maintained-by-hand mirror of copies.
+    parts = _round_parts(loss_fn, optimizer, axes, wcfg, n_workers)
+    mask = parts.mask
+    per_worker_losses = parts.per_worker_losses
+    reshape_batch = parts.reshape_batch
+    worker_l2 = parts.worker_l2
+    run_scan = parts.run_scan
+    assemble = parts.assemble
 
     def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
         mb = reshape_batch(batch)
@@ -453,6 +477,202 @@ def build_train_step(loss_fn: LossFn, optimizer: Optimizer, axes: Dict,
     pipelined_step.primer = primer
     pipelined_step.pipeline = pipeline
     return pipelined_step
+
+
+# ---------------------------------------------------------------------------
+# Phase-fenced instrumented round (obs RoundTrace)
+# ---------------------------------------------------------------------------
+
+def build_phased_train_step(loss_fn: LossFn, optimizer: Optimizer, axes: Dict,
+                            wcfg: WASGDConfig, n_workers: int, mesh=None,
+                            overlap: Optional[Callable] = None) -> Callable:
+    """The same WASGD round as ``build_train_step`` with the default
+    wasgd/async-wasgd rule, split into separately-jitted programs so the
+    Trainer can attribute round wall time to phases:
+
+        local_steps  the tau-step lax.scan (grads + optimizer + energy)
+        judge        the Judge/energy -> theta worker-assessment policy
+        reduce[_scatter] / all_gather
+                     the aggregation schedule's reduce phase(s)
+                     (prepare is fused into the first; 2-phase schedules
+                     split as reduce_scatter / all_gather)
+        overlap      the build-time ``overlap=`` seam thunk, if any
+        finalize     the schedule's Eq. 10 finalize + state assembly
+
+    Returns ``phased_step(state, batch) -> (state, metrics, phases)``
+    where ``phases`` is ``{name: seconds}``; every program is fenced with
+    ``jax.block_until_ready`` before its timer stops, so the numbers are
+    device-accurate, not dispatch time. This builder exists for the
+    telemetry path ONLY (``Trainer.run(telemetry=)`` with a real sink):
+    it fences every phase and does not donate its inputs — the fence-free
+    fused ``build_train_step`` remains the production default. Phase
+    programs are jitted once per resolved spec and memoized, so a run
+    retraces exactly as the fused step would.
+    """
+    parts = _round_parts(loss_fn, optimizer, axes, wcfg, n_workers)
+    pol = policy_from_config(wcfg)
+    async_mode = wcfg.async_mode == "on_device"
+    stateful = pol.stateful
+    beta = wcfg.beta
+    ctx_base = backends.context_from_config(wcfg, mesh)
+    name = backends.backend_name_from_config(wcfg)
+    if name != "auto":
+        if async_mode:
+            name = async_device.async_backend_name(name)
+        backend = backends.get_backend(name)
+        if getattr(backend, "needs_mesh", False) and mesh is None:
+            raise ValueError(
+                f"aggregation backend {backend.name!r} needs a mesh; pass "
+                f"mesh= through build_phased_train_step")
+
+    @jax.jit
+    def scan_fn(state, batch):
+        mb = parts.reshape_batch(batch)
+        (params, opt_state, energy), (round_losses, _, _) = parts.run_scan(
+            state, mb)
+        return params, opt_state, energy, round_losses
+
+    if async_mode:
+        @jax.jit
+        def judge_fn(energy, active, pstate):
+            return pol(energy, active, pstate)
+    else:
+        @jax.jit
+        def judge_fn(energy, pstate):
+            return pol(energy, None, pstate)
+
+    @jax.jit
+    def assemble_fn(state, params, opt_state, comm_in, round_losses, energy,
+                    theta, active, pstate):
+        if async_mode:
+            out_comm = ({"active": active, "policy": pstate} if stateful
+                        else comm_in)
+            rule_metrics = {"active": active.astype(jnp.float32)}
+        else:
+            out_comm = pstate
+            rule_metrics = {}
+        return parts.assemble(state, params, opt_state, out_comm,
+                              round_losses, energy, theta, rule_metrics)
+
+    overlap_fn = jax.jit(lambda: overlap()) if overlap is not None else None
+    programs: Dict[str, Any] = {}        # resolved spec -> phase programs
+
+    def _programs_for(spec):
+        cached = programs.get(spec)
+        if cached is not None:
+            return cached
+        backend = backends.get_backend(spec)
+        if not isinstance(backend, backends.ComposedBackend):
+            # monolithic registration: one opaque aggregate call.
+            def communicate(params, theta, active):
+                ctx = dataclasses.replace(
+                    ctx_base, active=active if async_mode else None)
+                return backend.aggregate(params, axes, theta, beta, ctx=ctx)
+            progs = ([("reduce", jax.jit(communicate))], None)
+            programs[spec] = progs
+            return progs
+        sched = backend.schedule
+        codec = backend._codec(ctx_base)
+        validate = getattr(sched, "validate", None)
+        if validate is not None:
+            validate(jnp.zeros((n_workers,), jnp.float32), ctx_base)
+        leaves_ax, treedef = jax.tree_util.tree_flatten(
+            axes, is_leaf=agg._axes_is_leaf)
+        idx = [i for i, ax in enumerate(leaves_ax)
+               if agg.is_worker_leaf(ax)]
+
+        def _ctxs(active):
+            a = active if async_mode else None
+            return {i: dataclasses.replace(ctx_base, active=a, leaf_index=i)
+                    for i in idx}
+
+        def phase0(params, theta, active):
+            theta = theta.astype(jnp.float32)
+            lx = treedef.flatten_up_to(params)
+            c = _ctxs(active)
+            states = {i: sched.prepare(lx[i], theta, codec, c[i])
+                      for i in idx}
+            return {i: sched.reduce_phase(0, st, theta, codec, c[i])
+                    for i, st in states.items()}
+
+        def later_phase(k):
+            def f(states, theta, active):
+                th = theta.astype(jnp.float32)
+                c = _ctxs(active)
+                return {i: sched.reduce_phase(k, st, th, codec, c[i])
+                        for i, st in states.items()}
+            return f
+
+        def finalize_fn(states, params, theta, active):
+            theta = theta.astype(jnp.float32)
+            lx = treedef.flatten_up_to(params)
+            c = _ctxs(active)
+            out = list(lx)
+            for i in idx:
+                out[i] = sched.finalize(states[i], lx[i], theta, beta,
+                                        codec, c[i])
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        if sched.n_phases == 2:
+            phase_list = [("reduce_scatter", jax.jit(phase0)),
+                          ("all_gather", jax.jit(later_phase(1)))]
+        else:
+            phase_list = [("reduce", jax.jit(phase0))]
+        progs = (phase_list, jax.jit(finalize_fn))
+        programs[spec] = progs
+        return progs
+
+    dummy_active = jnp.ones((n_workers,), bool)
+
+    def phased_step(state: TrainState, batch: Dict):
+        phases: Dict[str, float] = {}
+
+        def timed(nm, thunk):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(thunk())
+            phases[nm] = phases.get(nm, 0.0) + (time.perf_counter() - t0)
+            return out
+
+        params, opt_state, energy, round_losses = timed(
+            "local_steps", lambda: scan_fn(state, batch))
+        cs = state.comm_state
+        if async_mode:
+            active, pstate = ((cs["active"], cs["policy"]) if stateful
+                              else (cs, ()))
+            theta, pstate = timed(
+                "judge", lambda: judge_fn(energy, active, pstate))
+        else:
+            active, pstate = dummy_active, cs
+            theta, pstate = timed("judge", lambda: judge_fn(energy, pstate))
+        spec = name
+        if spec == "auto":                   # static per shapes, like the
+            spec = backends.select_auto_spec(  # fused rule's trace-time pick
+                params, axes, mesh, n_pods=wcfg.n_pods,
+                require_mask=async_mode)
+            if async_mode:
+                spec = async_device.async_backend_name(spec)
+        phase_list, finalize_fn = _programs_for(spec)
+        pname0, pfn0 = phase_list[0]
+        states = timed(pname0, lambda: pfn0(params, theta, active))
+        overlap_out = None
+        if overlap_fn is not None:
+            overlap_out = timed("overlap", overlap_fn)
+        for pname, pfn in phase_list[1:]:
+            states = timed(pname,
+                           lambda pfn=pfn: pfn(states, theta, active))
+
+        def fin():
+            new_params = (states if finalize_fn is None
+                          else finalize_fn(states, params, theta, active))
+            return assemble_fn(state, new_params, opt_state, cs,
+                               round_losses, energy, theta, active, pstate)
+
+        new_state, metrics = timed("finalize", fin)
+        if overlap_out is not None:
+            metrics = {**metrics, "overlap": overlap_out}
+        return new_state, metrics, phases
+
+    return phased_step
 
 
 def init_comm_state(rule_name: str, params: Dict, axes: Dict, n_workers: int,

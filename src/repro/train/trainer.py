@@ -24,6 +24,8 @@ from repro.core.membership import (MembershipSchedule, WorkerSet,
 from repro.core.order import OrderState
 from repro.core.weights import policy_from_config
 from repro.data.pipeline import RoundPrefetcher
+from repro.obs import (NULL, MembershipChange, RoundTrace, WorkerAssessment,
+                       summarize_policy_state)
 from repro.optim import make_optimizer
 from repro.train.state import TrainState, init_state
 from repro.train.step import build_train_step, init_comm_state, wasgd_rule
@@ -108,6 +110,8 @@ class Trainer:
         self._jit = jit
         self._easgd_alpha = easgd_alpha
         self._ckpt = None                      # lazy AsyncCheckpointer
+        self._telemetry = NULL                 # set per run(telemetry=)
+        self._phased_cache: Dict[int, Any] = {}
         self._build_step()
         self.history: list = []
 
@@ -171,8 +175,14 @@ class Trainer:
         self.state = resize_train_state(self.state, self.axes, new_p,
                                         policy=self._policy_for_resize(),
                                         comm_state=comm)
+        old_p = self.n_workers
         event = self.workers.resize(new_p, round=round)
         self._build_step()
+        if event is not None and self._telemetry.enabled:
+            self._telemetry.emit(MembershipChange(
+                round=round if round is not None else -1,
+                old_p=old_p, new_p=new_p,
+                generation=getattr(self.workers, "generation", 0)))
         return event
 
     # -- sharded, resumable checkpoints -----------------------------------
@@ -198,7 +208,7 @@ class Trainer:
         next rounds' device time (checkpoint/io.AsyncCheckpointer)."""
         from repro.checkpoint import AsyncCheckpointer
         if self._ckpt is None:
-            self._ckpt = AsyncCheckpointer()
+            self._ckpt = AsyncCheckpointer(telemetry=self._telemetry)
         self._ckpt.save(path, self.state, meta={"round": int(round)},
                         topology=self._topology(round))
 
@@ -233,6 +243,58 @@ class Trainer:
         self.state = restored
         return int(topo.get("round", meta.get("round", 0)))
 
+    # -- telemetry ---------------------------------------------------------
+
+    def _phased_step(self):
+        """The phase-fenced instrumented round for the current membership
+        (memoized per worker count, like ``_build_step``), or None when
+        this run cannot decompose into phases — pipelined rounds and the
+        baseline rules fall back to a coarse fenced RoundTrace. Only
+        consulted when a real telemetry sink is attached; the default
+        path never builds (or pays for) it."""
+        if self.rule_name not in ("wasgd", "wasgd+") \
+                or self.pipeline is not None or not self._jit:
+            return None
+        fn = self._phased_cache.get(self.n_workers)
+        if fn is None:
+            fn = step_mod.build_phased_train_step(
+                self._loss_fn, self.optimizer, self.axes, self.tcfg.wasgd,
+                self.n_workers, mesh=self._mesh, overlap=self._overlap)
+            self._phased_cache[self.n_workers] = fn
+        return fn
+
+    def _emit_round(self, tele, r: int, rec: Dict, total_s: float,
+                    host_staging_s: float, phase_times) -> None:
+        """Emit the round's RoundTrace + WorkerAssessment. Called after
+        the metrics readback (outside any transfer guard), so the host
+        conversions here add no transfers the fused path would not do."""
+        tele.emit(RoundTrace(
+            round=r, total_s=total_s, host_staging_s=host_staging_s,
+            phases=dict(phase_times) if phase_times is not None else {},
+            detail="phased" if phase_times is not None else "fused",
+            p=self.n_workers))
+        theta = rec.get("theta")
+        h = rec.get("h")
+        active = rec.get("active")
+        pstate = None
+        if self.rule_name in ("wasgd", "wasgd+"):
+            cs = self.state.comm_state
+            if isinstance(cs, dict):
+                pstate = cs.get("policy")
+            elif self.tcfg.wasgd.async_mode != "on_device":
+                pstate = cs
+        tele.emit(WorkerAssessment(
+            round=r,
+            theta=(np.ravel(theta).astype(float).tolist()
+                   if theta is not None else []),
+            energies=(np.ravel(h).astype(float).tolist()
+                      if h is not None else []),
+            theta_entropy=float(rec.get("theta_entropy", 0.0)),
+            active=([bool(x) for x in np.ravel(active)]
+                    if active is not None else None),
+            policy=self.tcfg.wasgd.policy or self.tcfg.wasgd.strategy,
+            policy_state=summarize_policy_state(pstate)))
+
     def run(self, batches: Iterator[Dict], n_rounds: int,
             order_state: Optional[OrderState] = None,
             segment_fn: Optional[Callable[[int], int]] = None,
@@ -244,7 +306,8 @@ class Trainer:
             resume_from: Optional[str] = None,
             serve_hook: Optional[Callable[[int, Dict, Dict], Any]] = None,
             serve_every: int = 1,
-            transfer_guard: Optional[str] = None) -> Dict:
+            transfer_guard: Optional[str] = None,
+            telemetry=None) -> Dict:
         """``batches`` is a round-batch iterator, or an ``OrderedDataset``
         instance — passing the dataset itself lets a pipelined run VALIDATE
         that its OrderGen decisions are deferred past the prefetcher's
@@ -289,7 +352,18 @@ class Trainer:
         staging is expected — so the guard only fires on implicit
         transfers INSIDE the round (the ``.item()``/``np.*``-in-hot-path
         family; ``tools/trace_audit.py`` runs the same check over the
-        backend grid). Metrics are read back after the guard exits."""
+        backend grid). Metrics are read back after the guard exits.
+
+        ``telemetry`` is a ``repro.obs`` sink (``RingSink``/``JsonlSink``;
+        default ``NullSink`` = off). With a real sink attached the run
+        emits per-round ``RoundTrace`` (wasgd/wasgd+ unpipelined rounds run
+        the phase-fenced instrumented step — per-phase device-accurate
+        breakdown; pipelined rounds and baseline rules report a fenced
+        total only) and ``WorkerAssessment`` events, plus
+        ``MembershipChange`` on elastic resizes and ``CheckpointSave`` from
+        the async checkpoint writer. With the default ``NullSink`` every
+        instrumentation site short-circuits: no fences, no host readbacks,
+        bitwise-identical params (tests/test_obs.py)."""
         from repro.data.pipeline import OrderedDataset
         ds = None
         if isinstance(batches, OrderedDataset):
@@ -367,6 +441,11 @@ class Trainer:
                     f"past n_rounds={n_rounds} — nothing left to run")
             if ds is not None and ds.p != self.n_workers:
                 ds.resize(self.n_workers)
+        tele = telemetry if telemetry is not None else NULL
+        self._telemetry = tele
+        obs_on = bool(getattr(tele, "enabled", False))
+        if self._ckpt is not None:
+            self._ckpt.telemetry = tele
         if ds is not None:
             batches = ds.batches(start_round=start)
         t0 = time.time()
@@ -395,6 +474,7 @@ class Trainer:
                         else:
                             batches = gen
                         carry = None      # re-prime the pipelined seam
+                t_host = time.perf_counter() if obs_on else 0.0
                 if self.pipeline is not None:
                     batch, next_first = next(batches)
                 else:
@@ -413,6 +493,11 @@ class Trainer:
                     batch = jax.device_put(batch)
                     if self.pipeline is not None:
                         next_first = jax.device_put(next_first)
+                host_staging_s = (time.perf_counter() - t_host
+                                  if obs_on else 0.0)
+                phased = self._phased_step() if obs_on else None
+                phase_times = None
+                t_step = time.perf_counter() if obs_on else 0.0
                 with _guard():
                     if self.pipeline is not None:
                         if carry is None:
@@ -420,12 +505,24 @@ class Trainer:
                         self.state, metrics, carry = self._step(
                             self.state, batch, next_first, carry)
                     else:
-                        self.state, metrics = self._step(self.state, batch)
+                        if phased is not None:
+                            self.state, metrics, phase_times = phased(
+                                self.state, batch)
+                        else:
+                            self.state, metrics = self._step(self.state,
+                                                             batch)
+                if obs_on:
+                    if phase_times is None:      # fused program: fence once
+                        jax.block_until_ready(self.state)
+                    total_s = time.perf_counter() - t_step
                 rec = {k: np.asarray(v) for k, v in metrics.items()}
                 rec["round"] = r
                 if membership_schedule is not None:
                     rec["p"] = self.n_workers
                 self.history.append(rec)
+                if obs_on:
+                    self._emit_round(tele, r, rec, total_s, host_staging_s,
+                                     phase_times)
                 if order_state is not None:
                     seg = segment_fn(r) if segment_fn else 0
                     order_state.record_scores(seg, rec["scores"])

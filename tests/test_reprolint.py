@@ -331,6 +331,42 @@ def test_thr001_worker_private_attrs_clean():
     """) == []
 
 
+def test_thr001_flags_executor_submit_target():
+    # pool.submit(self.m, ...) runs self.m on a pool thread — same hazard
+    # class as Thread(target=self.m)
+    assert "THR001" in _rules("""
+        from concurrent.futures import ThreadPoolExecutor
+        class Writer:
+            def __init__(self):
+                self._pool = ThreadPoolExecutor(max_workers=1)
+            def emit(self, line):
+                self._pool.submit(self._write, line)
+            def _write(self, line):
+                self._err = line
+            def status(self):
+                return self._err
+    """)
+
+
+def test_thr001_executor_with_lock_clean():
+    assert _rules("""
+        import threading
+        from concurrent.futures import ThreadPoolExecutor
+        class Writer:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._pool = ThreadPoolExecutor(max_workers=1)
+            def emit(self, line):
+                self._pool.submit(self._write, line)
+            def _write(self, line):
+                with self._lock:
+                    self._err = line
+            def status(self):
+                with self._lock:
+                    return self._err
+    """) == []
+
+
 # ---------------------------------------------------------------------------
 # pragmas
 # ---------------------------------------------------------------------------

@@ -1,0 +1,224 @@
+"""Summarize a telemetry JSONL run (repro.obs JsonlSink output).
+
+Renders, from the typed events of one run:
+
+* per-phase round breakdown (RoundTrace): mean / p50 / p95 per phase,
+  host staging and fenced total;
+* theta-entropy-over-rounds and worker-assessment stats
+  (WorkerAssessment): the paper's Property 1 equal -> best annealing is
+  the entropy trajectory printed here;
+* serving latency percentiles (ServeSample): TTFT p50/p90/p99,
+  inter-token latency, tokens/s, block-pool occupancy, queue depth;
+* membership changes, checkpoint durations, hot-swap staleness.
+
+    PYTHONPATH=src python tools/obs_report.py results/run.jsonl [--json]
+
+``--json`` emits the summary as one JSON object (machine-readable; the
+golden-output test pins this shape).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+if os.path.dirname(_HERE) not in sys.path:   # direct `python tools/...` run
+    sys.path.insert(0, os.path.dirname(_HERE))
+
+from tools.reprolint.registry import ensure_src_on_path
+
+ensure_src_on_path()
+
+import numpy as np                             # noqa: E402
+
+from repro.obs import read_events              # noqa: E402
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _dist(xs: List[float]) -> Dict[str, float]:
+    return {"mean": float(np.mean(xs)), "p50": _pct(xs, 50),
+            "p95": _pct(xs, 95)}
+
+
+def summarize(events: List) -> Dict:
+    """The whole report as one plain dict (seconds everywhere)."""
+    by = {}
+    for e in events:
+        by.setdefault(e.kind, []).append(e)
+    out: Dict = {"n_events": len(events)}
+
+    rounds = by.get("round_trace", [])
+    if rounds:
+        phase_names: List[str] = []
+        for e in rounds:
+            for nm in e.phases:
+                if nm not in phase_names:
+                    phase_names.append(nm)
+        out["rounds"] = {
+            "n": len(rounds),
+            "detail": sorted({e.detail for e in rounds}),
+            "total_s": _dist([e.total_s for e in rounds]),
+            "host_staging_s": _dist([e.host_staging_s for e in rounds]),
+            "phases": {nm: _dist([e.phases[nm] for e in rounds
+                                  if nm in e.phases])
+                       for nm in phase_names},
+        }
+
+    assess = by.get("worker_assessment", [])
+    if assess:
+        ent = [e.theta_entropy for e in assess]
+        theta_max = [max(e.theta) for e in assess if e.theta]
+        act = [sum(e.active) / len(e.active) for e in assess
+               if e.active is not None]
+        out["assessment"] = {
+            "n": len(assess),
+            "policy": sorted({e.policy for e in assess}),
+            "theta_entropy": {"first": float(ent[0]), "last": float(ent[-1]),
+                              "min": float(min(ent)),
+                              "max": float(max(ent))},
+            "top_worker_share": (_dist(theta_max) if theta_max else None),
+            "active_fraction": (_dist(act) if act else None),
+        }
+
+    serve = by.get("serve_sample", [])
+    if serve:
+        ttft = [t for e in serve for t in e.ttft_s]
+        e2e = [t for e in serve for t in e.e2e_s]
+        tokens = sum(e.tokens for e in serve)
+        chunk_s = sum(e.chunk_s for e in serve)
+        out["serve"] = {
+            "n_samples": len(serve),
+            "tokens": tokens,
+            "tokens_per_s": (tokens / chunk_s) if chunk_s else 0.0,
+            "itl_s": _dist([e.itl_s for e in serve]),
+            "ttft_s": ({"p50": _pct(ttft, 50), "p90": _pct(ttft, 90),
+                        "p99": _pct(ttft, 99)} if ttft else None),
+            "e2e_s": ({"p50": _pct(e2e, 50), "p90": _pct(e2e, 90)}
+                      if e2e else None),
+            "occupancy": _dist([e.occupancy for e in serve]),
+            "queue_depth_max": max(e.queue_depth for e in serve),
+            "admitted": sum(e.admitted for e in serve),
+            "finished": sum(e.finished for e in serve),
+        }
+
+    member = by.get("membership_change", [])
+    if member:
+        out["membership"] = [
+            {"round": e.round, "old_p": e.old_p, "new_p": e.new_p}
+            for e in member]
+
+    ckpt = by.get("checkpoint_save", [])
+    if ckpt:
+        out["checkpoints"] = {
+            "n": len(ckpt),
+            "duration_s": _dist([e.duration_s for e in ckpt]),
+            "total_bytes": int(sum(e.nbytes for e in ckpt)),
+        }
+
+    swaps = by.get("hot_swap", [])
+    if swaps:
+        since = [e.rounds_since_last for e in swaps
+                 if e.rounds_since_last is not None]
+        out["hot_swaps"] = {
+            "n": len(swaps),
+            "mean_drift_l2": float(np.mean([e.param_drift_l2
+                                            for e in swaps])),
+            "mean_rounds_since_last": (float(np.mean(since)) if since
+                                       else None),
+            "tokens_under_prev": int(sum(e.tokens_under_prev
+                                         for e in swaps)),
+        }
+    return out
+
+
+def _ms(s: float) -> str:
+    return f"{s * 1e3:9.3f} ms"
+
+
+def render(summary: Dict) -> str:
+    lines = [f"telemetry summary: {summary['n_events']} events"]
+    r = summary.get("rounds")
+    if r:
+        lines.append(f"\nrounds: {r['n']}  (detail: "
+                     f"{', '.join(r['detail'])})")
+        lines.append(f"  {'phase':<14s} {'mean':>12s} {'p50':>12s} "
+                     f"{'p95':>12s}")
+        rows = [("host_staging", r["host_staging_s"])]
+        rows += list(r["phases"].items())
+        rows.append(("total", r["total_s"]))
+        for nm, d in rows:
+            lines.append(f"  {nm:<14s} {_ms(d['mean'])} {_ms(d['p50'])} "
+                         f"{_ms(d['p95'])}")
+    a = summary.get("assessment")
+    if a:
+        ent = a["theta_entropy"]
+        lines.append(f"\nworker assessment: {a['n']} rounds  policy="
+                     f"{', '.join(a['policy'])}")
+        lines.append(f"  theta entropy: first={ent['first']:.4f} "
+                     f"last={ent['last']:.4f} min={ent['min']:.4f} "
+                     f"max={ent['max']:.4f}")
+        if a.get("top_worker_share"):
+            lines.append(f"  top worker share: "
+                         f"mean={a['top_worker_share']['mean']:.4f}")
+        if a.get("active_fraction"):
+            lines.append(f"  active fraction (Alg. 4): "
+                         f"mean={a['active_fraction']['mean']:.4f}")
+    s = summary.get("serve")
+    if s:
+        lines.append(f"\nserve: {s['n_samples']} samples  "
+                     f"{s['tokens']} tokens  "
+                     f"{s['tokens_per_s']:.1f} tok/s  "
+                     f"admitted={s['admitted']} finished={s['finished']}")
+        if s.get("ttft_s"):
+            t = s["ttft_s"]
+            lines.append(f"  TTFT: p50={_ms(t['p50'])} p90={_ms(t['p90'])} "
+                         f"p99={_ms(t['p99'])}")
+        lines.append(f"  ITL: mean={_ms(s['itl_s']['mean'])} "
+                     f"p95={_ms(s['itl_s']['p95'])}")
+        lines.append(f"  occupancy: mean={s['occupancy']['mean']:.3f} "
+                     f"queue depth max={s['queue_depth_max']}")
+    m = summary.get("membership")
+    if m:
+        chg = ", ".join(f"r{e['round']}: {e['old_p']}->{e['new_p']}"
+                        for e in m)
+        lines.append(f"\nmembership changes: {len(m)}  ({chg})")
+    c = summary.get("checkpoints")
+    if c:
+        lines.append(f"\ncheckpoints: {c['n']}  "
+                     f"mean={c['duration_s']['mean']:.3f}s  "
+                     f"{c['total_bytes'] / 1e6:.1f} MB total")
+    h = summary.get("hot_swaps")
+    if h:
+        lines.append(f"\nhot swaps: {h['n']}  "
+                     f"mean drift L2={h['mean_drift_l2']:.4f}  "
+                     f"tokens under stale params="
+                     f"{h['tokens_under_prev']}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="telemetry JSONL file (JsonlSink output)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as one JSON object")
+    args = ap.parse_args(argv)
+    events = list(read_events(args.path))
+    if not events:
+        print(f"no events in {args.path}", file=sys.stderr)
+        return 1
+    summary = summarize(events)
+    if args.json:
+        print(json.dumps(summary, indent=1))
+    else:
+        print(render(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

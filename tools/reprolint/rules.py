@@ -15,9 +15,12 @@ SPEC001  ``"schedule:codec"`` / policy-grammar string literals that no
          silently-dropped config knobs, generalized to renames).
 DT001    narrowing casts (f32 -> bf16/f16/int8/...) outside the codec and
          checkpoint layers (PR 6: ``restore`` silently cast every leaf).
-THR001   attributes written from a ``threading.Thread`` target and read
-         from foreign-thread methods with no lock/event in the class
-         (the ``RoundPrefetcher``/``AsyncCheckpointer`` hazard family).
+THR001   attributes written from a worker-thread entry point — a
+         ``threading.Thread`` target or a method handed to a
+         ``concurrent.futures`` executor via ``.submit(self.m, ...)`` —
+         and read from foreign-thread methods with no lock/event in the
+         class (the ``RoundPrefetcher``/``AsyncCheckpointer``/
+         ``JsonlSink`` hazard family).
 
 Suppression is per-line pragma only (``tools/reprolint/pragmas.py``).
 """
@@ -478,6 +481,13 @@ def thr001(sf: SourceFile) -> List[Finding]:
                         attr = _self_attr(kw.value)
                         if attr and attr in methods:
                             thread_targets.add(attr)
+            elif last == "submit" and node.args:
+                # concurrent.futures executors run the submitted callable
+                # on a pool thread: pool.submit(self.m, ...) makes self.m a
+                # worker-side entry point exactly like Thread(target=...)
+                attr = _self_attr(node.args[0])
+                if attr and attr in methods:
+                    thread_targets.add(attr)
             elif last in _SYNC_PRIMITIVES:
                 has_sync = True
         if not thread_targets or has_sync:

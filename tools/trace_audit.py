@@ -12,6 +12,16 @@ round and runs it twice under ``jax.transfer_guard("disallow")``:
   fresh lambda, unhashable static) and the "steady-state" round is paying
   compile time every call.
 
+Beyond the aggregation grid, two composite hot paths get the same
+two-call treatment end to end:
+
+* the serve decode chunk — ``ContinuousEngine._chunk``, the jitted
+  ``lax.while_loop`` every token rides through, exercised on a warm
+  engine with requests still in flight;
+* the pipelined-round seam — ``build_train_step(..., pipeline="parity")``
+  with its primed carry, the steady-state round of a prefetch-overlapped
+  run.
+
 Results persist to ``results/AUDIT_trace.json``. Specs that cannot run in
 this process's device context (mesh schedules without enough devices,
 ``hierarchical`` without pods) are recorded as skipped with the reason —
@@ -139,6 +149,123 @@ def _audit_one(spec: str, masked: bool, params, axes, theta, active, mesh):
     return entry
 
 
+def _audit_serve_chunk():
+    """Two identical calls of a warm ``ContinuousEngine._chunk`` under the
+    transfer guard: the decode while_loop must neither touch the host nor
+    recompile between chunks of the same batch shape."""
+    from repro.configs import get_smoke_config
+    from repro.data import lm_batch
+    from repro.models import init_params
+    from repro.serve import ContinuousEngine
+
+    entry = {"spec": "serve:decode_chunk", "masked": False}
+    try:
+        cfg = dataclasses.replace(get_smoke_config("gemma3-1b"),
+                                  compute_dtype="float32")
+        params, _ = init_params(cfg, jax.random.key(0))
+        eng = ContinuousEngine(cfg, params, n_slots=2, max_len=64,
+                               block_size=8, cache_dtype=jnp.float32,
+                               chunk=4)
+        prompts = np.asarray(lm_batch(0, 2, 8, cfg.vocab_size)["tokens"])
+        for i in range(2):
+            # budgets far beyond one chunk: rows stay active across the
+            # audited calls, so the loop body really runs both times
+            eng.submit(prompts[i], n_new=40, seed=i)
+        eng.step()                    # warm: prefill + admit + first chunk
+        assert eng.n_running == 2, "fixture finished during warmup"
+
+        # replicate step()'s exact argument staging for the chunk call
+        tables = eng.cache.tables
+        full = tables.get("full")
+        w = eng.cache.used_width()
+        if full is not None and w is not None and w < full.shape[1]:
+            tables = {**tables, "full": full[:, :w]}
+        stop_early = jax.device_put(jnp.asarray(False))
+        before = eng._chunk._cache_size()
+        with jax.transfer_guard("disallow"):
+            out1 = jax.block_until_ready(
+                eng._chunk(eng.params, eng.cache.pools, tables, eng._st,
+                           stop_early, max_steps=eng.chunk))
+            out2 = jax.block_until_ready(
+                eng._chunk(eng.params, eng.cache.pools, tables, eng._st,
+                           stop_early, max_steps=eng.chunk))
+        misses = eng._chunk._cache_size() - before
+        steps1, steps2 = int(out1[2]), int(out2[2])
+    except Exception as e:  # noqa: BLE001 - any guard/trace failure is a find
+        entry.update(status="failed", error=f"{type(e).__name__}: {e}")
+        return entry
+    entry.update(status="ok" if misses == 0 and steps1 == steps2 == 4
+                 else "failed",
+                 cache_misses=misses, steps_per_chunk=steps1)
+    if entry["status"] == "failed":
+        entry["error"] = (f"{misses} cache miss(es) / steps "
+                          f"{steps1}/{steps2} on identical warm chunks")
+    return entry
+
+
+def _audit_pipelined_seam():
+    """Two identical calls of a primed ``pipeline='parity'`` round under the
+    transfer guard: the seam (staged next-first-microbatch carried through
+    the aggregation phase gap) must not leak host values into the trace."""
+    import functools as ft
+
+    from repro.configs import WASGDConfig
+    from repro.data import OrderedDataset, first_microbatch, \
+        make_classification
+    from repro.models import cnn
+    from repro.models.param import build
+    from repro.optim import make_optimizer
+    from repro.train.state import init_state
+    from repro.train.step import build_train_step, init_comm_state
+
+    entry = {"spec": "pipeline:parity_seam", "masked": False}
+    try:
+        w, tau, bl = W, 2, 4
+        X, y = make_classification(0, 256, d=16, n_classes=4)
+        params0, axes0 = build(ft.partial(cnn.mlp_init, d_in=16, d_hidden=32,
+                                          n_classes=4), jax.random.key(0))
+        from repro.core import replicate_workers
+        params, axes = replicate_workers(params0, axes0, w)
+
+        def loss_fn(p, b):
+            return cnn.classification_loss(cnn.mlp_apply(p, b["x"]),
+                                           b["y"]), {}
+
+        wcfg = WASGDConfig(tau=tau, backend="einsum:f32")
+        opt = make_optimizer("sgd", 0.05, 0.0, 0.0)
+        step = build_train_step(loss_fn, opt, axes, wcfg, w,
+                                pipeline="parity")
+        traces = {"n": 0}
+
+        def call(state, batch, nf, carry):
+            traces["n"] += 1       # python body runs per TRACE, not per call
+            return step(state, batch, nf, carry)
+
+        fn = jax.jit(call)
+        ds = OrderedDataset({"x": X, "y": y}, w, tau, bl, seed=3)
+        gen = ds.batches()
+        b0, b1 = next(gen), next(gen)
+        comm = init_comm_state("wasgd", params, axes, w, wcfg=wcfg)
+        state = init_state(params, opt.init(params), w, comm)
+        carry = jax.block_until_ready(jax.jit(step.primer)(state.params, b0))
+        batch = jax.device_put(b0)
+        nf = jax.device_put(first_microbatch(b1, w, tau))
+        with jax.transfer_guard("disallow"):
+            jax.block_until_ready(fn(state, batch, nf, carry))
+            after_first = traces["n"]
+            jax.block_until_ready(fn(state, batch, nf, carry))
+            retraces = traces["n"] - after_first
+    except Exception as e:  # noqa: BLE001 - any guard/trace failure is a find
+        entry.update(status="failed", error=f"{type(e).__name__}: {e}")
+        return entry
+    entry.update(status="ok" if retraces == 0 else "failed",
+                 traces_first_call=after_first, retraces=retraces)
+    if retraces:
+        entry["error"] = (f"{retraces} retrace(s) on an identical second "
+                          f"pipelined round")
+    return entry
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fast", action="store_true",
@@ -161,6 +288,13 @@ def main(argv=None) -> int:
             extra = entry.get("error") or entry.get("reason") or \
                 f"retraces={entry.get('retraces')}"
             print(f"[{tag:7s}] {spec:22s} masked={int(masked)}  {extra}")
+
+    for entry in (_audit_serve_chunk(), _audit_pipelined_seam()):
+        results.append(entry)
+        tag = entry["status"].upper()
+        extra = entry.get("error") or \
+            f"misses={entry.get('cache_misses', entry.get('retraces'))}"
+        print(f"[{tag:7s}] {entry['spec']:22s} masked=0  {extra}")
 
     failed = [r for r in results if r["status"] == "failed"]
     skipped = [r for r in results if r["status"] == "skipped"]
